@@ -1,0 +1,94 @@
+"""Shared benchmark harness pieces: tiny policy + task + engines.
+
+All benchmarks run on CPU with a small model; metrics that matter are
+hardware-independent (forward-pass counts, acceptance, token counts) or
+relative (speedup fractions), plus measured CPU wall-clock where the
+paper reports wall-clock shapes.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.budget import LatencyModel
+from repro.core.drafter import DrafterConfig, SuffixDrafter
+from repro.core.length_policy import LengthPolicy
+from repro.core.spec_engine import EngineConfig, SpecEngine
+from repro.data.tasks import PatternTask
+from repro.data.tokenizer import TOKENIZER
+from repro.models import model as M
+from repro.models.layers import split_tree
+from repro.rl.rollout import RolloutWorker
+from repro.rl.trainer import Trainer, TrainerConfig
+
+TINY = ModelConfig(
+    name="bench-tiny", family="dense", num_layers=2, d_model=96,
+    num_heads=4, num_kv_heads=2, d_ff=192, vocab_size=TOKENIZER.vocab_size,
+    vocab_pad_multiple=8, dtype="float32",
+)
+
+
+def make_params(cfg: ModelConfig = TINY, seed: int = 0):
+    params, _ = split_tree(M.init_params(cfg, jax.random.key(seed)))
+    return params
+
+
+def make_task(n_problems=8, mean_len=16.0, sigma=0.8, max_len=48, seed=0):
+    return PatternTask(
+        n_problems=n_problems, mean_len=mean_len, sigma=sigma,
+        max_len=max_len, seed=seed,
+    )
+
+
+def make_engine(
+    params,
+    cfg: ModelConfig = TINY,
+    *,
+    spec: bool = True,
+    scope: str = "problem+request",
+    window: int = 16,
+    max_new: int = 48,
+    max_draft: int = 8,
+    unlimited: bool = False,
+    use_solver: bool = False,
+    temperature: float = 0.0,
+    epoch_decay: float = 0.9,
+) -> SpecEngine:
+    return SpecEngine(
+        params, cfg,
+        EngineConfig(
+            spec_enabled=spec, max_new_tokens=max_new, eos_token=1,
+            max_draft=max_draft, block_buckets=(0, 4, max_draft),
+            unlimited_budget=unlimited, use_budget_solver=use_solver,
+            temperature=temperature,
+        ),
+        drafter=SuffixDrafter(
+            DrafterConfig(
+                scope=scope, window_size=window, min_match=2,
+                epoch_decay=epoch_decay,
+            )
+        ),
+        length_policy=LengthPolicy(),
+    )
+
+
+def warm_epochs(
+    engine: SpecEngine, worker: RolloutWorker, problems, n_epochs: int,
+    seed: int = 0,
+) -> List:
+    """Run n_epochs of rollouts to build drafter history; returns stats."""
+    stats = []
+    for e in range(n_epochs):
+        engine.begin_iteration(e)
+        b = worker.rollout(problems, key=jax.random.key(seed + e))
+        stats.append(b)
+    return stats
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,41 @@
+"""Fig. 6 — drafter scope ablation: global vs problem vs
+problem+request trees. Problem-scoped histories beat global in
+acceptance; a single large global index is slower to query."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import make_engine, make_params, make_task, row
+from repro.rl.rollout import RolloutWorker
+
+
+def run(quick: bool = True):
+    params = make_params()
+    task = make_task(n_problems=6, mean_len=14.0, sigma=0.5, max_len=36)
+    probs = task.problems()
+    out = []
+    for scope in ("global", "problem", "problem+request"):
+        eng = make_engine(params, spec=True, scope=scope, max_new=36)
+        w = RolloutWorker(eng, task, group_size=1)
+        for e in range(2):
+            eng.begin_iteration(e)
+            b = w.rollout(probs, key=jax.random.key(11 + e))
+        # time drafting on a warmed tree
+        sess = eng.drafter.new_session(probs[0].pid, list(probs[0].prompt))
+        sess.feed([int(t) for t in b.responses[0][:10]])
+        t0 = time.perf_counter()
+        for _ in range(200):
+            sess.propose(8)
+        spec_us = (time.perf_counter() - t0) / 200 * 1e6
+        out.append(
+            row(
+                f"fig06/scope_{scope.replace('+','_')}", spec_us,
+                f"accept_per_fwd={b.stats.mean_accepted_per_fwd:.2f};"
+                f"n_fwd={b.stats.n_fwd};spec_us={spec_us:.1f}",
+            )
+        )
+    return out

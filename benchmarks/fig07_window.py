@@ -1,0 +1,47 @@
+"""Fig. 7 — history-window ablation: acceptance vs drafting latency for
+window sizes {4, 16, 32, all}. Moderate windows balance acceptance and
+latency; window_all pays query cost and staleness."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import make_engine, make_params, make_task, row
+from repro.rl.rollout import RolloutWorker
+
+
+def run(quick: bool = True):
+    p0 = make_params(seed=0)
+    p1 = make_params(seed=1)
+    task = make_task(n_problems=4, mean_len=14.0, sigma=0.4, max_len=32)
+    probs = task.problems()
+    n_epochs = 6 if quick else 10
+    out = []
+    for window in (1, 2, 4, 10_000):  # 10k ≈ "all"; G=2 → 2 rollouts/epoch
+        eng = make_engine(p0, spec=True, window=window, max_new=32)
+        w = RolloutWorker(eng, task, group_size=2)
+        acc = 0.0
+        for e in range(n_epochs):
+            t = e / max(n_epochs - 1, 1) * 0.35  # policy drift
+            eng.set_params(jax.tree.map(lambda a, b: (1 - t) * a + t * b, p0, p1))
+            eng.begin_iteration(e)
+            b = w.rollout(probs, key=jax.random.key(3 + e))
+            acc = b.stats.mean_accepted_per_fwd
+        sess = eng.drafter.new_session(probs[0].pid, list(probs[0].prompt))
+        sess.feed([int(t) for t in b.responses[0][:10]])
+        t0 = time.perf_counter()
+        for _ in range(200):
+            sess.propose(8)
+        us = (time.perf_counter() - t0) / 200 * 1e6
+        name = "all" if window >= 10_000 else str(window)
+        out.append(
+            row(
+                f"fig07/window_{name}", us,
+                f"accept_per_fwd={acc:.2f};tree_tokens="
+                f"{eng.drafter.tree_tokens(probs[0].pid)}",
+            )
+        )
+    return out

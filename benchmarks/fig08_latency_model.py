@@ -1,0 +1,58 @@
+"""Fig. 8 / Eq. 1 — decode latency vs token count is linear.
+
+Measured on this host with the benchmark policy: jitted verify steps at
+several block sizes; least-squares fit recovers (c_base, c_tok) with the
+paper's ~12% mean relative error bound."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import TINY, make_params, row
+from repro.core.budget import LatencyModel
+from repro.models import model as M
+
+
+def run(quick: bool = True):
+    params = make_params()
+    cfg = TINY
+    B = 8
+    prompt = jax.random.randint(jax.random.key(0), (B, 16), 4, cfg.vocab_size)
+    _, cache = M.prefill(
+        params, cfg, prompt, jnp.ones((B, 16), bool), max_len=256
+    )
+
+    sizes = [1, 2, 4, 8, 16] if quick else [1, 2, 3, 4, 6, 8, 12, 16, 24, 32]
+    ns, ts = [], []
+    for T in sizes:
+        block = jax.random.randint(jax.random.key(T), (B, T), 4, cfg.vocab_size)
+
+        @jax.jit
+        def step(p, c, blk):
+            logits, c1, _ = M.forward(
+                p, cfg, blk, cache=c, valid=jnp.ones_like(blk, bool),
+                commit_upto=jnp.zeros((B,), jnp.int32),
+            )
+            return logits[:, -1].sum()
+
+        step(params, cache, block).block_until_ready()  # compile
+        n_iter = 20 if quick else 50
+        t0 = time.perf_counter()
+        for _ in range(n_iter):
+            step(params, cache, block).block_until_ready()
+        dt = (time.perf_counter() - t0) / n_iter
+        ns.append(B * T)
+        ts.append(dt * 1e3)  # ms
+    lm = LatencyModel.fit(ns, ts)
+    mre = lm.mean_relative_error(ns, ts)
+    return [
+        row(
+            "fig08/latency_linear_fit", ts[0] * 1e3,
+            f"c_base_ms={lm.c_base:.3f};c_tok_ms={lm.c_tok:.5f};"
+            f"mre={mre:.3f};linear={'yes' if mre < 0.25 else 'NO'}",
+        )
+    ]

@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--full`` runs the larger
+settings; default is the quick profile (CI-sized). ``--only fig05``
+restricts to one figure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig01_batch_collapse",
+    "fig02_similarity",
+    "fig04_acceptance",
+    "fig05_tree_vs_array",
+    "fig06_tree_scope",
+    "fig07_window",
+    "fig08_latency_model",
+    "fig09_budget_optimality",
+    "fig10_e2e_rl",
+    "fig12_budget_ablation",
+    "fig13_robustness",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    mods = [m for m in MODULES if args.only in m] if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run(quick=not args.full)
+            for r in rows:
+                print(r)
+            print(
+                f"# {name} done in {time.perf_counter() - t0:.1f}s",
+                file=sys.stderr,
+            )
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},NaN,ERROR")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Quickstart: speculative decoding with a per-problem suffix-tree
+drafter in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a tiny policy, runs one plain rollout to seed the drafter's
+history, then generates again with DAS — outputs are token-identical
+(lossless) while forward passes drop.
+"""
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.drafter import DrafterConfig, SuffixDrafter
+from repro.core.spec_engine import EngineConfig, SpecEngine
+from repro.data.tokenizer import TOKENIZER
+from repro.models import model as M
+from repro.models.layers import split_tree
+
+
+def main() -> None:
+    cfg = ModelConfig(
+        name="quickstart", family="dense", num_layers=2, d_model=96,
+        num_heads=4, num_kv_heads=2, d_ff=192,
+        vocab_size=TOKENIZER.vocab_size, vocab_pad_multiple=8,
+        dtype="float32",
+    )
+    params, _ = split_tree(M.init_params(cfg, jax.random.key(0)))
+    prompts = [TOKENIZER.encode("ababab", bos=True),
+               TOKENIZER.encode("12341234", bos=True)]
+    pids = ["p0", "p1"]
+
+    baseline = SpecEngine(
+        params, cfg,
+        EngineConfig(spec_enabled=False, max_new_tokens=32, eos_token=1),
+    )
+    out0, st0 = baseline.generate(prompts, pids, key=jax.random.key(1))
+    print("baseline:", [TOKENIZER.decode(o) for o in out0])
+    print(f"  forward passes: {st0.n_fwd}")
+
+    das = SpecEngine(
+        params, cfg,
+        EngineConfig(spec_enabled=True, max_new_tokens=32, eos_token=1),
+        drafter=SuffixDrafter(DrafterConfig(scope="problem+request", min_match=2)),
+    )
+    # seed history (in RL training this happens automatically every epoch)
+    for pid, p, o in zip(pids, prompts, out0):
+        das.drafter.observe_rollout(pid, list(p) + list(o), epoch=0)
+        for _ in range(5):
+            das.length_policy.observe(pid, len(o))
+    out1, st1 = das.generate(prompts, pids, key=jax.random.key(2))
+    print("DAS:     ", [TOKENIZER.decode(o) for o in out1])
+    print(f"  forward passes: {st1.n_fwd}  (accept/round: "
+          f"{st1.acceptance_per_round:.2f})")
+    assert out0 == out1, "lossless: outputs must be identical"
+    print(f"LOSSLESS ✓  speedup in forward passes: "
+          f"{st0.n_fwd / max(st1.n_fwd, 1):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro: JAX/TPU reproduction of "Beat the long tail: Distribution-Aware
+Speculative Decoding for RL Training" (DAS).
+
+Subpackages:
+  core/        the paper's contribution (drafter, budgets, verify, engine)
+  models/      the 6-family architecture zoo
+  configs/     the 10 assigned architectures
+  data/ rl/ optim/ checkpoint/   RL-training substrate
+  kernels/     Pallas TPU kernels
+  launch/      mesh, sharding, dry-run, launchers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,56 @@
+"""Checkpointing: flattened pytree → .npz + path-keyed manifest.
+
+Keeps the substrate dependency-free (no orbax): leaves are saved under
+their tree-path keys so loads are robust to dict ordering; dtypes and a
+user metadata dict round-trip through a JSON sidecar entry.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(path: str, tree: Any, metadata: Optional[Dict] = None) -> None:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[_path_str(kp)] = np.asarray(leaf)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, __metadata__=json.dumps(metadata or {}), **flat)
+
+
+def load(path: str, like: Any) -> Tuple[Any, Dict]:
+    """Restore into the structure of `like` (a template pytree)."""
+    with np.load(path, allow_pickle=False) as zf:
+        meta = json.loads(str(zf["__metadata__"]))
+        leaves_by_key = {k: zf[k] for k in zf.files if k != "__metadata__"}
+    paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    out = []
+    for kp, leaf in paths:
+        key = _path_str(kp)
+        if key not in leaves_by_key:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = leaves_by_key[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch at {key}: ckpt {arr.shape} vs {np.shape(leaf)}"
+            )
+        out.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), meta

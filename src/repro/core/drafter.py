@@ -1,0 +1,253 @@
+"""Distribution-aware nonparametric drafter (paper §4.1).
+
+Maintains suffix-tree speculators over a *sliding window* of recent
+rollouts, scoped per problem (the paper's best configuration), per
+request, or globally (ablations, Fig. 6). Proposals come from the
+longest suffix match of the current decode context; continuations follow
+the highest (epoch-decayed) frequency path.
+
+Scopes
+------
+* ``problem``          — one tree per problem id (paper default).
+* ``problem+request``  — problem tree + a per-request tree built online
+                         from the tokens generated so far (captures
+                         self-repetition within one rollout).
+* ``global``           — single tree over everything (ablation: worse
+                         acceptance, slower queries as the corpus grows).
+
+Sliding window: per problem we keep the last ``window_size`` rollouts
+(deque); trees are rebuilt from the window at ``begin_iteration`` —
+matching the paper's "refresh the index for each iteration" — and are
+additionally extended online as new rollouts complete inside an
+iteration. Window size can be tied to the optimizer step scale via
+``window_for_update_norm``.
+"""
+
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+from .suffix_tree import MatchState, SuffixTree
+
+
+@dataclass
+class DrafterConfig:
+    scope: str = "problem"  # problem | problem+request | global
+    window_size: int = 16  # rollouts kept per problem (or globally)
+    max_draft: int = 16  # hard cap on tokens per proposal
+    min_match: int = 1  # minimum suffix-match length to draft at all
+    epoch_decay: float = 0.9  # down-weight for older epochs (1.0 = off)
+    use_prefix_trie: bool = False  # route requests by prompt prefix
+    # Window adaptation: window = clip(base / (1 + gamma * update_norm))
+    adapt_window_to_updates: bool = False
+    window_gamma: float = 1.0
+    min_window: int = 4
+
+    def __post_init__(self) -> None:
+        if self.scope not in ("problem", "problem+request", "global"):
+            raise ValueError(f"unknown drafter scope: {self.scope}")
+
+
+class PrefixTrie:
+    """Lightweight prompt-prefix router (paper §4.1.2, per-request trees).
+
+    Maps prompt token prefixes to problem ids so that at decode time a
+    request can be routed to the right per-problem tree even when the
+    engine does not carry an explicit problem id.
+    """
+
+    def __init__(self) -> None:
+        self._root: dict = {}
+        self._ids: Dict[int, object] = {}
+
+    def insert(self, prompt: Sequence[int], problem_id) -> None:
+        node = self._root
+        for t in prompt:
+            node = node.setdefault(int(t), {})
+        node["$"] = problem_id
+
+    def route(self, prompt: Sequence[int]):
+        """Deepest registered problem id along the prompt's path."""
+        node = self._root
+        best = None
+        for t in prompt:
+            if "$" in node:
+                best = node["$"]
+            node = node.get(int(t))
+            if node is None:
+                return best
+        return node.get("$", best)
+
+
+class DraftSession:
+    """Per-request streaming draft state.
+
+    ``feed`` consumes accepted tokens (amortized O(1) each); ``propose``
+    returns up to ``budget`` draft tokens. With scope problem+request the
+    request's own generation is also indexed online and the longer match
+    wins (ties prefer the request tree — it is policy-fresh by
+    construction).
+    """
+
+    def __init__(
+        self,
+        cfg: DrafterConfig,
+        problem_tree: Optional[SuffixTree],
+        request_tree: Optional[SuffixTree],
+    ) -> None:
+        self.cfg = cfg
+        self._pstate: Optional[MatchState] = (
+            problem_tree.match_state() if problem_tree is not None else None
+        )
+        self._rtree = request_tree
+        self._rstate: Optional[MatchState] = (
+            request_tree.match_state() if request_tree is not None else None
+        )
+        self._pending_request_tokens: List[int] = []
+        self.tokens_fed = 0
+
+    def feed(self, tokens: Sequence[int]) -> None:
+        toks = [int(t) for t in tokens]
+        self.tokens_fed += len(toks)
+        if self._pstate is not None:
+            self._pstate.feed_many(toks)
+        if self._rtree is not None:
+            # Index the request's own generation online (Ukkonen extend),
+            # then advance the matcher over the same tokens.
+            for t in toks:
+                self._rtree.extend(t)
+            self._rstate.feed_many(toks)
+
+    def propose(self, budget: int) -> List[int]:
+        """Problem tree first, request tree as fallback.
+
+        The request tree's match length is uninformative — the stream
+        always matches its own latest copy in full (trivial self-match),
+        so its proposals come from shorter-suffix fallbacks. Cross-epoch
+        problem history is the paper's signal; self-repetition only
+        helps when no history exists (measured: preferring the request
+        tree on match length more than doubled N_fwd in fig06)."""
+        budget = min(int(budget), self.cfg.max_draft)
+        if budget <= 0:
+            return []
+        if self._pstate is not None and self._pstate.match_len >= self.cfg.min_match:
+            d = self._pstate.propose(budget, self.cfg.min_match)
+            if d:
+                return d
+        if self._rstate is not None and self._rstate.match_len >= self.cfg.min_match:
+            return self._rstate.propose(budget, self.cfg.min_match)
+        return []
+
+    @property
+    def match_len(self) -> int:
+        m = self._pstate.match_len if self._pstate is not None else 0
+        r = self._rstate.match_len if self._rstate is not None else 0
+        return max(m, r)
+
+
+_GLOBAL_KEY = "__global__"
+
+
+class SuffixDrafter:
+    """Window-managed collection of suffix-tree speculators."""
+
+    def __init__(self, cfg: Optional[DrafterConfig] = None) -> None:
+        self.cfg = cfg or DrafterConfig()
+        self._windows: Dict[object, Deque[Tuple[List[int], int]]] = {}
+        self._trees: Dict[object, SuffixTree] = {}
+        self._trie = PrefixTrie() if self.cfg.use_prefix_trie else None
+        self.epoch = 0
+        self._window_size = self.cfg.window_size
+        # Stats for EXPERIMENTS/benchmarks
+        self.stats = collections.Counter()
+
+    # -- window / lifecycle ------------------------------------------------
+    def _key(self, problem_id) -> object:
+        return _GLOBAL_KEY if self.cfg.scope == "global" else problem_id
+
+    def register_prompt(self, problem_id, prompt: Sequence[int]) -> None:
+        if self._trie is not None:
+            self._trie.insert(prompt, problem_id)
+
+    def observe_rollout(
+        self, problem_id, tokens: Sequence[int], epoch: Optional[int] = None
+    ) -> None:
+        """Record one completed rollout; extends the live tree online."""
+        ep = self.epoch if epoch is None else int(epoch)
+        key = self._key(problem_id)
+        win = self._windows.setdefault(
+            key, collections.deque(maxlen=max(1, self._window_size))
+        )
+        toks = [int(t) for t in tokens]
+        win.append((toks, ep))
+        self.stats["rollouts_observed"] += 1
+        # NOTE: if the deque just evicted its oldest rollout, the live tree
+        # still contains that doc until the next begin_iteration() rebuild;
+        # in the interim it is only epoch-down-weighted. This matches the
+        # paper's "refresh the index for each iteration" semantics.
+        tree = self._trees.get(key)
+        if tree is None:
+            tree = self._rebuild(key)
+        else:
+            tree.add_document(toks, epoch=ep)
+
+    def _rebuild(self, key) -> SuffixTree:
+        tree = SuffixTree(epoch_decay=self.cfg.epoch_decay)
+        for toks, ep in self._windows.get(key, ()):  # oldest → newest
+            tree.add_document(toks, epoch=ep)
+        tree.current_epoch = self.epoch
+        self._trees[key] = tree
+        return tree
+
+    def begin_iteration(
+        self, epoch: int, update_norm: Optional[float] = None
+    ) -> None:
+        """Advance the epoch and refresh every tree from its window.
+
+        If ``adapt_window_to_updates`` is set, larger optimizer updates
+        (policy moved further) shrink the window (paper §4.1.2: "larger
+        parameter updates imply shorter windows").
+        """
+        self.epoch = int(epoch)
+        if self.cfg.adapt_window_to_updates and update_norm is not None:
+            w = int(round(self.cfg.window_size / (1.0 + self.cfg.window_gamma * float(update_norm))))
+            self._window_size = max(self.cfg.min_window, min(self.cfg.window_size, w))
+            for key, win in list(self._windows.items()):
+                if win.maxlen != self._window_size:
+                    self._windows[key] = collections.deque(
+                        list(win)[-self._window_size :], maxlen=self._window_size
+                    )
+        for key in list(self._windows.keys()):
+            self._rebuild(key)
+        self.stats["iterations"] += 1
+
+    # -- sessions ------------------------------------------------------------
+    def new_session(
+        self, problem_id=None, prompt: Optional[Sequence[int]] = None
+    ) -> DraftSession:
+        """Create the per-request draft session; feeds the prompt."""
+        if problem_id is None and self._trie is not None and prompt is not None:
+            problem_id = self._trie.route(prompt)
+        key = self._key(problem_id)
+        tree = self._trees.get(key)
+        rtree = None
+        if self.cfg.scope == "problem+request":
+            # The request tree is fed (prompt + generation) by the session
+            # itself — prompt n-grams become matchable (prompt-lookup
+            # behaviour) without a duplicate insertion.
+            rtree = SuffixTree(epoch_decay=1.0)
+        sess = DraftSession(self.cfg, tree, rtree)
+        if prompt is not None:
+            sess.feed(prompt)
+        self.stats["sessions"] += 1
+        return sess
+
+    # -- introspection ---------------------------------------------------
+    def tree_tokens(self, problem_id=None) -> int:
+        tree = self._trees.get(self._key(problem_id))
+        return 0 if tree is None else tree.n_tokens
+
+    def n_trees(self) -> int:
+        return len(self._trees)

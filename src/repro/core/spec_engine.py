@@ -1,0 +1,344 @@
+"""Batched speculative-decoding engine for RL rollouts (paper Fig. 3).
+
+Host side: per-request suffix-tree draft sessions (drafter.py), the
+length-aware budget policy (length_policy.py + budget.py), EOS/e-of-gen
+bookkeeping, and rollout statistics. Device side: jitted prefill and
+verify steps (models/model.py + verify.py).
+
+The verify block is padded to a *bucketed* size so each bucket compiles
+once: per-row budgets stay ragged (positions past a row's budget are
+auto-rejected), matching the paper's per-request budget allocation while
+keeping XLA shapes static. Latency is accounted with the paper's model
+(Eq. 2): t = c_base·N_fwd + c_tok·N_toks + C, using *proposed* token
+counts (what a ragged-batching serving engine would execute), plus
+measured wall-clock on this host.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.budget import LatencyModel, solve_budgets
+from repro.core.drafter import DrafterConfig, SuffixDrafter
+from repro.core.length_policy import LengthPolicy, LengthPolicyConfig
+from repro.core.verify import sample_token, verify_block
+from repro.models import model as M
+
+
+@dataclass
+class EngineConfig:
+    max_draft: int = 16  # hard cap K on draft tokens per round
+    block_buckets: Tuple[int, ...] = (0, 4, 8, 16)  # draft sizes compiled
+    temperature: float = 0.0
+    max_new_tokens: int = 256
+    eos_token: int = 1
+    use_budget_solver: bool = True  # Eq. 7/9 budgets (vs class-only)
+    spec_enabled: bool = True  # False = plain AR decode (baseline)
+    unlimited_budget: bool = False  # ablation: always max_draft
+    attn_impl: str = "xla"
+    cache_headroom: int = 64
+
+
+@dataclass
+class RolloutStats:
+    n_rounds: int = 0
+    n_fwd: int = 0  # forward passes (== rounds while any row active)
+    n_toks_proposed: int = 0  # Σ block tokens over active rows (ragged)
+    n_toks_emitted: int = 0
+    n_drafted: int = 0
+    n_accepted: int = 0
+    wall_time_s: float = 0.0
+    per_row_rounds: Optional[np.ndarray] = None
+    per_row_emitted: Optional[np.ndarray] = None
+    effective_batch: List[int] = field(default_factory=list)
+    round_accepts: List[float] = field(default_factory=list)
+
+    @property
+    def acceptance_per_round(self) -> float:
+        return self.n_accepted / max(self.n_rounds, 1)
+
+    @property
+    def mean_accepted_per_fwd(self) -> float:
+        return self.n_toks_emitted / max(self.n_fwd, 1)
+
+    def modeled_latency(self, lat: LatencyModel) -> float:
+        return lat.t_total(self.n_fwd, self.n_toks_proposed)
+
+
+class SpecEngine:
+    """Speculative rollout engine: draft (host) → verify (device)."""
+
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        engine: Optional[EngineConfig] = None,
+        drafter: Optional[SuffixDrafter] = None,
+        length_policy: Optional[LengthPolicy] = None,
+        latency: Optional[LatencyModel] = None,
+    ) -> None:
+        self.params = params
+        self.cfg = cfg
+        self.engine = engine or EngineConfig()
+        self.drafter = drafter or SuffixDrafter(DrafterConfig())
+        self.length_policy = length_policy or LengthPolicy()
+        self.latency = latency or LatencyModel(c_base=1.0, c_tok=0.002)
+        self._recurrent = M.has_recurrent(cfg)
+        self._verify_jit: Dict[int, Any] = {}
+        self._prefill_jit: Dict[Tuple[int, int], Any] = {}
+        self.epoch = 0
+
+    # -- jitted device steps ------------------------------------------------
+    def _get_prefill(self, Tp: int, max_len: int):
+        fn = self._prefill_jit.get((Tp, max_len))
+        if fn is None:
+            @jax.jit
+            def prefill_fn(params, toks, mask):
+                return M.prefill(
+                    params, self.cfg, toks, mask,
+                    max_len=max_len, headroom=self.engine.cache_headroom,
+                )
+            fn = prefill_fn
+            self._prefill_jit[(Tp, max_len)] = fn
+        return fn
+
+    def _get_verify(self, K: int):
+        """Jitted verify step for a draft-block bucket of size K."""
+        fn = self._verify_jit.get(K)
+        if fn is None:
+            temp = self.engine.temperature
+            recurrent = self._recurrent
+            attn_impl = self.engine.attn_impl
+
+            @jax.jit
+            def verify_fn(params, cache, block, budgets, active, key):
+                B = block.shape[0]
+                valid = jnp.broadcast_to(active[:, None], block.shape)
+                # Single pass: attention caches commit via the ring-slot
+                # overwrite trick; recurrent layers emit staged per-step
+                # states (collect_states) that are gathered at the
+                # acceptance count below — no second forward.
+                logits, cache1, _ = M.forward(
+                    params, self.cfg, block, cache=cache, valid=valid,
+                    commit_upto=None if recurrent else jnp.zeros((B,), jnp.int32),
+                    attn_impl=attn_impl, collect_states=recurrent,
+                )
+                logits = logits[:, :, : self.cfg.vocab_size]
+                res = verify_block(
+                    logits, block, budgets, temperature=temp, key=key,
+                    active=active,
+                )
+                n_commit = jnp.where(active, 1 + res.accepted, 0)
+                if recurrent:
+                    cache1 = M.commit_staged_cache(
+                        self.cfg, cache1, n_commit
+                    )
+                cache1 = cache1._replace(
+                    lengths=cache1.lengths + n_commit.astype(jnp.int32)
+                )
+                return res, cache1
+
+            fn = verify_fn
+            self._verify_jit[K] = fn
+        return fn
+
+    def _bucket(self, k: int) -> int:
+        for b in self.engine.block_buckets:
+            if k <= b:
+                return b
+        return self.engine.max_draft
+
+    # -- budgets --------------------------------------------------------------
+    def _round_budgets(
+        self, problem_ids, emitted_lens, active, remaining
+    ) -> np.ndarray:
+        e = self.engine
+        B = len(problem_ids)
+        if not e.spec_enabled:
+            return np.zeros(B, np.int64)
+        if e.unlimited_budget:
+            return np.where(active, e.max_draft, 0)
+        # Length-class budget (paper §4.2.3) per row …
+        cls_budget = np.array(
+            [
+                self.length_policy.budget(pid, el)
+                for pid, el in zip(problem_ids, emitted_lens)
+            ],
+            np.int64,
+        )
+        if e.use_budget_solver and self.length_policy.history_size() >= 8:
+            # … refined by the Eq. 7/9 solver on predicted remaining length:
+            # the class decides WHO speculates (Short rows skip, Obs. 2),
+            # the solver decides HOW MUCH (p* spread over expected rounds).
+            pred_rem = np.array(
+                [
+                    max(8.0, self.length_policy.expected_length(pid) - el)
+                    for pid, el in zip(problem_ids, emitted_lens)
+                ]
+            )
+            p_star, _ = solve_budgets(pred_rem, self.latency)
+            per_round = np.ceil(
+                p_star / np.maximum(pred_rem, 1.0) * e.max_draft
+            ).astype(np.int64)
+            solver_budget = np.where(p_star > 0, np.maximum(per_round, 1), 0)
+            cls_budget = np.where(
+                cls_budget > 0,
+                np.minimum(cls_budget, np.maximum(solver_budget, 1)),
+                0,
+            )
+        budgets = np.clip(cls_budget, 0, e.max_draft)
+        budgets = np.minimum(budgets, np.maximum(remaining - 1, 0))
+        return np.where(active, budgets, 0)
+
+    # -- main loop -----------------------------------------------------------
+    def generate(
+        self,
+        prompts: Sequence[Sequence[int]],
+        problem_ids: Optional[Sequence] = None,
+        *,
+        max_new_tokens: Optional[int] = None,
+        key: Optional[jax.Array] = None,
+        collect_effective_batch: bool = False,
+    ) -> Tuple[List[List[int]], RolloutStats]:
+        """Synchronous batched rollout with DAS speculation.
+
+        Returns (generations per row (token lists, EOS-exclusive), stats).
+        """
+        e = self.engine
+        t0 = time.perf_counter()
+        B = len(prompts)
+        max_new = max_new_tokens or e.max_new_tokens
+        if problem_ids is None:
+            problem_ids = list(range(B))
+        if key is None:
+            key = jax.random.key(0)
+        # ---- prefill (left-pad to a bucketed common length to bound the
+        # number of compiled prefill/verify variants) ----
+        Tp = max(len(p) for p in prompts)
+        Tp = ((Tp + 15) // 16) * 16
+        toks = np.zeros((B, Tp), np.int32)
+        mask = np.zeros((B, Tp), bool)
+        for b, p in enumerate(prompts):
+            toks[b, Tp - len(p):] = p
+            mask[b, Tp - len(p):] = True
+        max_len = Tp + max_new + e.max_draft + 2
+        max_len = ((max_len + 63) // 64) * 64
+        last_logits, cache = self._get_prefill(Tp, max_len)(
+            self.params, jnp.asarray(toks), jnp.asarray(mask)
+        )
+        key, k0 = jax.random.split(key)
+        head = np.array(
+            sample_token(
+                last_logits[:, : self.cfg.vocab_size],
+                temperature=e.temperature, key=k0,
+            )
+        ).astype(np.int32)
+        # ---- draft sessions ----
+        sessions = [
+            self.drafter.new_session(problem_ids[b], list(prompts[b]))
+            for b in range(B)
+        ]
+        outputs: List[List[int]] = [[] for _ in range(B)]
+        active = np.ones(B, bool)
+        emitted = np.zeros(B, np.int64)
+        rounds_per_row = np.zeros(B, np.int64)
+        stats = RolloutStats()
+        # first sampled token counts as emitted output
+        for b in range(B):
+            tok = int(head[b])
+            if tok == e.eos_token or max_new == 0:
+                active[b] = False
+                if max_new > 0:
+                    outputs[b].append(tok)
+            else:
+                outputs[b].append(tok)
+                emitted[b] = 1
+                sessions[b].feed([tok])
+        # account the prefill pass
+        stats.n_fwd += 1
+        stats.n_toks_proposed += int(mask.sum())
+
+        while active.any():
+            remaining = max_new - emitted
+            budgets_np = self._round_budgets(
+                problem_ids, emitted, active, remaining
+            )
+            kmax = int(budgets_np.max()) if active.any() else 0
+            K = self._bucket(kmax)
+            # ---- host drafting ----
+            block = np.zeros((B, K + 1), np.int32)
+            block[:, 0] = head
+            for b in range(B):
+                if not active[b] or budgets_np[b] <= 0:
+                    budgets_np[b] = 0
+                    continue
+                prop = sessions[b].propose(int(budgets_np[b]))
+                budgets_np[b] = len(prop)
+                if prop:
+                    block[b, 1 : 1 + len(prop)] = prop
+            key, kv = jax.random.split(key)
+            res, cache = self._get_verify(K)(
+                self.params, cache, jnp.asarray(block),
+                jnp.asarray(budgets_np.astype(np.int32)),
+                jnp.asarray(active), kv,
+            )
+            accepted = np.asarray(res.accepted)
+            next_tok = np.asarray(res.next_token)
+            # ---- host bookkeeping ----
+            stats.n_rounds += 1
+            stats.n_fwd += 1
+            stats.n_toks_proposed += int(
+                (1 + budgets_np[active]).sum()
+            )
+            stats.n_drafted += int(budgets_np[active].sum())
+            stats.n_accepted += int(accepted[active].sum())
+            stats.round_accepts.append(
+                float(accepted[active].mean()) if active.any() else 0.0
+            )
+            if collect_effective_batch:
+                stats.effective_batch.append(int(active.sum()))
+            for b in range(B):
+                if not active[b]:
+                    continue
+                rounds_per_row[b] += 1
+                new_toks = [int(t) for t in block[b, 1 : 1 + accepted[b]]]
+                new_toks.append(int(next_tok[b]))
+                for t in new_toks:
+                    outputs[b].append(t)
+                    emitted[b] += 1
+                    if t == e.eos_token or emitted[b] >= max_new:
+                        active[b] = False
+                        break
+                if active[b]:
+                    sessions[b].feed(new_toks)
+                    head[b] = new_toks[-1]
+        # strip EOS and observe history
+        for b in range(B):
+            if outputs[b] and outputs[b][-1] == e.eos_token:
+                outputs[b] = outputs[b][:-1]
+            self.drafter.observe_rollout(
+                problem_ids[b], list(prompts[b]) + outputs[b], self.epoch
+            )
+            self.length_policy.observe(problem_ids[b], len(outputs[b]))
+        stats.n_toks_emitted = int(sum(len(o) for o in outputs))
+        stats.per_row_rounds = rounds_per_row
+        stats.per_row_emitted = np.array([len(o) for o in outputs])
+        stats.wall_time_s = time.perf_counter() - t0
+        return outputs, stats
+
+    def begin_iteration(self, epoch: int, update_norm: float = 0.0) -> None:
+        self.epoch = epoch
+        self.drafter.begin_iteration(epoch, update_norm)
+
+    def set_params(self, params) -> None:
+        """Policy updated by the learner — the drafter adapts via its
+        sliding window; nothing to retrain (the paper's Insight-3)."""
+        self.params = params

@@ -1,0 +1,119 @@
+"""Lossless speculative verification (Leviathan et al. 2023).
+
+The nonparametric drafter proposes a *deterministic* token sequence, so
+the draft distribution is a point mass q = δ(d_j). Rejection sampling
+then reduces to:
+
+  accept d_j  with prob  p(d_j)      (u_j < p(d_j)),
+  on the first rejection at offset a, resample from the residual
+  (p - q)+ ∝ p with p(d_a) zeroed    (exactly lossless),
+  on full acceptance, sample the bonus token from p at offset K.
+
+Greedy (T=0) degenerates to accept-while-argmax-matches and the output
+is *token-identical* to plain autoregressive decoding — the property the
+paper uses to guarantee unchanged training curves.
+
+Block convention: the verify block fed to the model is
+``[head, d_1, ..., d_K]`` (head = last emitted-but-unwritten token), so
+``logits[:, j]`` is the target distribution for the token *after* block
+position j. Per-row draft budgets are ragged: positions ≥ budget are
+padding and never accepted.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VerifyResult(NamedTuple):
+    accepted: jnp.ndarray  # (B,) number of accepted draft tokens (0..K)
+    next_token: jnp.ndarray  # (B,) bonus (full accept) or corrected token
+    out_tokens: jnp.ndarray  # (B, K+1) accepted drafts then next_token
+    n_emitted: jnp.ndarray  # (B,) accepted + 1
+
+
+def _gather_probs(probs, tokens):
+    """probs (B,K,V), tokens (B,K) → p[tokens] (B,K)."""
+    return jnp.take_along_axis(probs, tokens[..., None], axis=-1)[..., 0]
+
+
+def verify_block(
+    logits: jnp.ndarray,  # (B, K+1, V) f32, target logits over the block
+    block: jnp.ndarray,  # (B, K+1) int32: [head, d_1..d_K]
+    budgets: jnp.ndarray,  # (B,) int32: valid draft count per row (<= K)
+    *,
+    temperature: float = 0.0,
+    key: Optional[jax.Array] = None,
+    active: Optional[jnp.ndarray] = None,  # (B,) bool
+) -> VerifyResult:
+    B, K1, V = logits.shape
+    K = K1 - 1
+    drafts = block[:, 1:]  # (B, K)
+    in_budget = jnp.arange(K)[None, :] < budgets[:, None]  # (B, K)
+
+    if temperature <= 0.0:
+        preds = jnp.argmax(logits, axis=-1)  # (B, K+1)
+        match = (preds[:, :-1] == drafts) & in_budget
+        acc_mask = jnp.cumprod(match.astype(jnp.int32), axis=-1).astype(bool)
+        accepted = acc_mask.sum(-1).astype(jnp.int32)  # (B,)
+        next_token = jnp.take_along_axis(
+            preds, accepted[:, None], axis=-1
+        )[:, 0]
+    else:
+        assert key is not None, "stochastic verification needs a PRNG key"
+        probs = jax.nn.softmax(logits / temperature, axis=-1)  # (B,K+1,V)
+        p_draft = _gather_probs(probs[:, :-1], drafts)  # (B, K)
+        u = jax.random.uniform(key, (B, K))
+        ok = (u < p_draft) & in_budget
+        acc_mask = jnp.cumprod(ok.astype(jnp.int32), axis=-1).astype(bool)
+        accepted = acc_mask.sum(-1).astype(jnp.int32)
+        # Residual / bonus distribution at offset = accepted.
+        p_at = jnp.take_along_axis(
+            probs, accepted[:, None, None], axis=1
+        )[:, 0]  # (B, V)
+        rejected_tok = jnp.take_along_axis(
+            # token that was rejected (clip: on full accept this is unused)
+            drafts, jnp.minimum(accepted, K - 1)[:, None] if K > 0 else
+            jnp.zeros((B, 1), jnp.int32), axis=-1,
+        )[:, 0] if K > 0 else jnp.zeros((B,), jnp.int32)
+        full_accept = accepted >= budgets  # no rejection happened
+        zap = jax.nn.one_hot(rejected_tok, V, dtype=probs.dtype)
+        p_resid = jnp.where(full_accept[:, None], p_at, p_at * (1.0 - zap))
+        p_resid = p_resid / jnp.maximum(
+            p_resid.sum(-1, keepdims=True), 1e-20
+        )
+        key2 = jax.random.fold_in(key, 1)
+        next_token = jax.random.categorical(
+            key2, jnp.log(jnp.maximum(p_resid, 1e-20))
+        ).astype(jnp.int32)
+
+    if active is not None:
+        accepted = jnp.where(active, accepted, 0)
+    n_emitted = jnp.where(
+        active if active is not None else jnp.ones((B,), bool),
+        accepted + 1,
+        0,
+    ).astype(jnp.int32)
+    # out_tokens: accepted drafts then next_token then junk (masked later)
+    idx = jnp.arange(K1)[None, :]
+    out = jnp.where(
+        idx < accepted[:, None],
+        jnp.pad(drafts, ((0, 0), (0, 1))),
+        jnp.where(idx == accepted[:, None], next_token[:, None], 0),
+    )
+    return VerifyResult(accepted, next_token.astype(jnp.int32), out, n_emitted)
+
+
+def sample_token(
+    logits: jnp.ndarray,  # (B, V)
+    *,
+    temperature: float = 0.0,
+    key: Optional[jax.Array] = None,
+) -> jnp.ndarray:
+    """First-token sampling after prefill (greedy or temperature)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)

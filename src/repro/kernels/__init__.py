@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- spec_verify/: flash-decode attention for speculative verification
+  (the DAS device hot-spot): (K+1)-query block vs position-tagged ring
+  KV cache, GQA, sliding window, online softmax over VMEM-streamed
+  chunks. kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
+  ref.py (pure-jnp oracle).
+- rglru/: blocked RG-LRU linear-recurrence scan (RecurrentGemma's
+  recurrent half) with VMEM carry across sequence chunks.
+
+Validated in interpret mode on CPU (this container); TPU v5e is the
+compile target. Import the subpackages lazily — they pull in pallas.
+"""

@@ -1,0 +1,5 @@
+from . import ops, ref
+from .ops import rglru_scan
+from .ref import rglru_scan_ref
+
+__all__ = ["ops", "ref", "rglru_scan", "rglru_scan_ref"]

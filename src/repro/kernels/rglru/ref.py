@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the RG-LRU sequence-scan kernel.
+
+Recurrence (RecurrentGemma, arXiv:2402.19427):
+
+  log a_t = c · r_t · log(sigmoid(Λ))        (c = 8)
+  h_t     = a_t · h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+
+x, r, i: (B, T, W) fp32 (post-conv branch activations and gates);
+Λ: (W,); h0: (B, W). Returns (h_seq (B,T,W), h_final (B,W)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+RGLRU_C = 8.0
+
+
+def rglru_scan_ref(x, r, i, lam, h0):
+    a_base = jnp.log(jax.nn.sigmoid(lam))  # (W,), negative
+    log_a = RGLRU_C * r * a_base[None, None, :]
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-9, 1.0))
+    gx = i * x
+
+    def step(h, inp):
+        a_t, gx_t, m_t = inp
+        h = a_t * h + m_t * gx_t
+        return h, h
+
+    xs = (
+        jnp.moveaxis(a, 1, 0),
+        jnp.moveaxis(gx, 1, 0),
+        jnp.moveaxis(mult, 1, 0),
+    )
+    h_fin, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1), h_fin

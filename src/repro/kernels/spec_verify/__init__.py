@@ -1,0 +1,5 @@
+from . import ops, ref
+from .ops import spec_verify_attention
+from .ref import spec_verify_attention_ref
+
+__all__ = ["ops", "ref", "spec_verify_attention", "spec_verify_attention_ref"]

@@ -1,0 +1,152 @@
+"""Pallas TPU kernel: flash-decode attention for speculative verification.
+
+The device hot-spot of DAS (DESIGN.md §3): one verify step attends a
+(K+1)-token draft block against a long, position-tagged ring KV cache.
+On TPU this is a flash-decode pattern with a *block* of queries:
+
+  grid = (B, Hkv, S_chunks)  — KV chunks stream HBM→VMEM sequentially
+                               (innermost axis), online-softmax state
+                               lives in VMEM scratch across chunks.
+
+  Q block   : (T·G, hd)  — the draft block's queries for one kv head,
+              groups unrolled into rows (GQA: G = Hq/Hkv); padded to the
+              8-row sublane tile.
+  KV chunk  : (C, hd)    — C = 512 keys/values per grid step; hd is the
+              128-lane register tile, MXU-aligned.
+  cpos chunk: (C,) int32 — absolute positions (the ring-cache mask:
+              0 <= cpos <= qpos, window, trash-slot = -1).
+
+Masking uses the cache's absolute positions, NOT slot indices — this is
+what makes speculative rollback free (stale rejected-draft slots are
+masked out by position until overwritten).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 512
+NEG_INF = -1e30
+
+
+def _verify_attn_kernel(
+    # refs (per grid step)
+    q_ref,  # (TG, hd)          queries
+    k_ref,  # (C, hd)           keys chunk
+    v_ref,  # (C, hd)           values chunk
+    cpos_ref,  # (C,) int32        absolute positions of the chunk slots
+    qpos_ref,  # (TG,) int32       absolute positions of each query row
+    o_ref,  # (TG, hd)          output
+    # scratch (persist across the innermost grid axis)
+    m_scr,  # (TG, 1) f32       running max
+    l_scr,  # (TG, 1) f32       running denominator
+    acc_scr,  # (TG, hd) f32      running numerator
+    *,
+    n_chunks: int,
+    scale: float,
+    window: int,
+    softcap: float,
+):
+    chunk = pl.program_id(2)
+
+    @pl.when(chunk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale  # (TG, C)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    cpos = cpos_ref[...]  # (C,)   (batch dim squeezed by BlockSpec None)
+    qpos = qpos_ref[...]  # (TG,)
+    mask = (cpos[None, :] >= 0) & (cpos[None, :] <= qpos[:, None])
+    if window > 0:
+        mask &= cpos[None, :] > (qpos[:, None] - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (TG, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (padded query rows): keep m finite
+    m_new = jnp.where(m_new <= NEG_INF, 0.0, m_new)
+    p = jnp.exp(s - m_new)  # (TG, C); masked lanes: exp(NEG_INF) == 0
+    alpha = jnp.exp(jnp.where(m_prev <= NEG_INF, NEG_INF, m_prev - m_new))
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = alpha * acc_scr[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(chunk == n_chunks - 1)
+    def _finalize():
+        o_ref[...] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-20)
+        ).astype(o_ref.dtype)
+
+
+def spec_verify_attention_kernel(
+    q: jnp.ndarray,  # (B, TG_padded, Hkv, hd) regrouped queries
+    k: jnp.ndarray,  # (B, S_padded, Hkv, hd)
+    v: jnp.ndarray,
+    cache_pos: jnp.ndarray,  # (B, S_padded) int32 (-1 where padded/trash)
+    qpos: jnp.ndarray,  # (B, TG_padded) int32 (-2^30 on padded rows)
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Low-level entry; see ops.spec_verify_attention for the public API."""
+    B, TG, Hkv, hd = q.shape
+    S = k.shape[1]
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    scale = 1.0 / math.sqrt(hd)
+    grid = (B, Hkv, n_chunks)
+
+    kernel = functools.partial(
+        _verify_attn_kernel,
+        n_chunks=n_chunks,
+        scale=scale,
+        window=window,
+        softcap=softcap,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, TG, None, hd), lambda b, h, c: (b, 0, h, 0)),
+            pl.BlockSpec((None, chunk, None, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((None, chunk, None, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((None, chunk), lambda b, h, c: (b, c)),
+            pl.BlockSpec((None, TG), lambda b, h, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, TG, None, hd), lambda b, h, c: (b, 0, h, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, TG, Hkv, hd), q.dtype),
+        scratch_shapes=[
+            # online-softmax state in VMEM, persisted across the chunk axis
+            pltpu.VMEM((TG, 1), jnp.float32),
+            pltpu.VMEM((TG, 1), jnp.float32),
+            pltpu.VMEM((TG, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, cache_pos, qpos)
+    return out

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the spec-verify flash-decode attention kernel.
+
+Semantics (shared with kernel.py): GQA attention of a T-token draft
+block against a position-tagged ring KV cache.
+
+  q:         (B, T, Hq, hd)   draft-block queries (rope already applied)
+  k, v:      (B, S, Hkv, hd)  cache (S includes the trash slot)
+  cache_pos: (B, S) int32     absolute position per slot, -1 = empty
+  positions: (B, T) int32     absolute positions of the block tokens
+
+mask: slot s visible to query t iff 0 <= cache_pos[s] <= positions[t]
+and (window == 0 or cache_pos[s] > positions[t] - window).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def spec_verify_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    cache_pos: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    B, T, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, T, Hkv, G, hd)
+    scores = jnp.einsum(
+        "btkgh,bskh->bkgts", qg, k.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    ) / math.sqrt(hd)
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qpos = positions[:, :, None]  # (B,T,1)
+    kpos = cache_pos[:, None, :]  # (B,1,S)
+    mask = (kpos >= 0) & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bkgts,bskh->btkgh", probs.astype(q.dtype), v.astype(q.dtype)
+    )
+    return out.reshape(B, T, Hq, hd)

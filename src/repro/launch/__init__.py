@@ -1,0 +1,7 @@
+"""Distribution layer: mesh factory, logical-axis sharding, dry-run,
+workload definitions, and launchers. Import `dryrun` only as a module
+entry point (it sets XLA_FLAGS)."""
+
+from .mesh import make_local_mesh, make_production_mesh
+
+__all__ = ["make_local_mesh", "make_production_mesh"]

@@ -1,0 +1,187 @@
+"""Compiled-artifact analysis: collective-bytes parsing + roofline terms.
+
+cost_analysis() gives HLO FLOPs / bytes; collective traffic is NOT in
+cost_analysis, so we parse the optimized HLO text and sum the result
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. Roofline terms follow the assignment:
+
+  compute    = FLOPs / (chips × 197e12)
+  memory     = bytes / (chips × 819e9)
+  collective = coll_bytes / (chips × 50e9)
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# one shape token: f32[16,128]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, int]]:
+    """Per-collective-kind {count, bytes} from optimized HLO text.
+
+    Bytes = sum of result-shape sizes (tuple results summed) — a
+    consistent upper proxy for per-chip traffic across ring/all-to-all
+    implementations."""
+    out: Dict[str, Dict[str, int]] = {
+        k: {"count": 0, "bytes": 0} for k in _COLLECTIVES
+    }
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, _, rhs = s.partition("=")
+        rhs = rhs.strip()
+        for kind in _COLLECTIVES:
+            # match the opcode at the start of the op expression, e.g.
+            # "f32[128]{0} all-reduce(" or "(f32[..], f32[..]) all-gather("
+            m = re.search(
+                r"^(\([^)]*\)|\S+)\s+" + kind + r"(-start|-done)?\(", rhs
+            )
+            if not m:
+                continue
+            if m.group(2) == "-done":
+                break  # avoid double counting start/done pairs
+            result = m.group(1)
+            nbytes = sum(
+                _shape_bytes(dt, dims)
+                for dt, dims in _SHAPE_RE.findall(result)
+            )
+            out[kind]["count"] += 1
+            out[kind]["bytes"] += nbytes
+            break
+    return out
+
+
+@dataclass
+class Roofline:
+    """All flops/bytes are PER CHIP (the SPMD module is per-device), so
+    each term divides by one chip's peak — algebraically identical to
+    the assignment's global form FLOPs_total / (chips × peak)."""
+
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_flops: float  # per chip
+    hlo_bytes: float  # per chip
+    collective_bytes: float  # per chip
+    model_flops: float  # per chip: 6·N·D (dense) / 6·N_active·D (MoE)
+    collectives: Dict[str, Dict[str, int]] = field(default_factory=dict)
+    bytes_per_device: float = 0.0
+    peak_memory: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        # per-chip traffic already (SPMD module is per-device); one ICI
+        # link per direction as the conservative denominator
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "n_chips": self.n_chips,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "collectives": self.collectives,
+            "bytes_per_device": self.bytes_per_device,
+            "peak_memory": self.peak_memory,
+        }
+
+
+def model_flops_for(cfg, shape, n_active_params: int) -> float:
+    """MODEL_FLOPS = 6·N·D with D = decoded/processed tokens.
+
+    train: 6·N·B·S (fwd 2ND + bwd 4ND); prefill: 2·N·B·S;
+    decode/verify: 2·N·B·T per step."""
+    if shape.kind == "train":
+        return 6.0 * n_active_params * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active_params * shape.global_batch * shape.seq_len
+    T = 1 if shape.kind == "decode" else 9
+    return 2.0 * n_active_params * shape.global_batch * T
+
+
+def extract_cost(compiled) -> Tuple[float, float]:
+    """(flops, bytes) from compiled.cost_analysis(), robust to the
+    per-backend dict/list variations."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    return flops, nbytes
+
+
+def extract_memory(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out

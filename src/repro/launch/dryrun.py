@@ -1,0 +1,273 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh).
+
+MUST be run as a module entry point; the first two lines below make 512
+placeholder CPU devices so jax.make_mesh can build the production mesh.
+Do NOT import this module from tests (it mutates XLA_FLAGS).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+      --shape train_4k [--multi-pod] [--all] [--out report.json]
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ASSIGNED,
+    active_params,
+    get_config,
+)
+from repro.launch import sharding as sh  # noqa: E402
+from repro.launch import workloads as W  # noqa: E402
+from repro.launch.analysis import (  # noqa: E402
+    Roofline,
+    extract_cost,
+    extract_memory,
+    model_flops_for,
+    parse_collectives,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+
+
+def _shard_tree(struct_tree, axes_tree, mesh, rules):
+    def one(sds_, axes_):
+        return NamedSharding(mesh, sh.spec_for(sds_.shape, axes_, mesh, rules))
+
+    return jax.tree.map(
+        one, struct_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def _bytes_per_device(struct_tree, shard_tree) -> float:
+    total = 0.0
+    for s, ns in zip(jax.tree.leaves(struct_tree), jax.tree.leaves(shard_tree)):
+        n = int(np.prod(s.shape)) if s.shape else 1
+        shard_n = n
+        spec = ns.spec
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axs = (ax,) if isinstance(ax, str) else ax
+            f = 1
+            for a in axs:
+                f *= ns.mesh.shape[a]
+            shard_n //= f
+        total += shard_n * s.dtype.itemsize
+    return total
+
+
+def _compile_workload(cfg, shape, mesh, rules):
+    """Lower + compile one workload; returns (compiled, static_bytes)."""
+    pstruct, paxes = W.param_specs(cfg)
+    psh = _shard_tree(pstruct, paxes, mesh, rules)
+    inputs, iaxes = W.input_specs(cfg, shape)
+    ish = {
+        k: NamedSharding(mesh, sh.spec_for(inputs[k].shape, iaxes[k], mesh, rules))
+        for k in inputs
+    }
+    act_spec = None
+    static_bytes = _bytes_per_device(pstruct, psh)
+
+    if shape.kind == "train":
+        ostruct, oaxes = W.opt_specs(cfg)
+        osh = _shard_tree(ostruct, oaxes, mesh, rules)
+        static_bytes += _bytes_per_device(ostruct, osh)
+        fn = W.make_train_fn(cfg)
+        args = (pstruct, ostruct, inputs)
+        in_sh = (psh, osh, ish)
+        act_spec = sh.residual_spec(mesh, shape.seq_len, rules)
+    elif shape.kind == "prefill":
+        fn = W.make_prefill_fn(cfg, shape)
+        args = (pstruct, inputs)
+        in_sh = (psh, ish)
+        act_spec = sh.residual_spec(mesh, shape.seq_len, rules)
+    else:
+        cstruct, caxes = W.cache_specs(cfg, shape, mesh)
+        csh = _shard_tree(cstruct, caxes, mesh, rules)
+        static_bytes += _bytes_per_device(cstruct, csh)
+        fn = W.make_decode_fn(cfg, shape)
+        args = (pstruct, cstruct, inputs)
+        in_sh = (psh, csh, ish)
+
+    # donate the state pytree (params+opt for train, cache for decode) so
+    # outputs alias inputs — mandatory at 104B/480B scale
+    if shape.kind == "train":
+        donate = (0, 1)
+    elif shape.kind in ("decode", "verify"):
+        donate = (1,)
+    else:
+        donate = ()
+    # NOTE: constraining MoE capacity buffers (use_activation_spec's
+    # moe_cap) was measured to HURT here — XLA's own propagation found a
+    # better layout (hlo_flops 4.7e14 → 1.6e15 with the constraint; see
+    # EXPERIMENTS.md §Perf, refuted hypothesis H-M1). Left off by default;
+    # available as a hillclimbing lever.
+    with mesh, sh.use_activation_spec(act_spec, moe_cap=None):
+        jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return compiled, static_bytes
+
+
+def _costs_of(compiled):
+    flops, nbytes = extract_cost(compiled)
+    colls = parse_collectives(compiled.as_text())
+    coll_bytes = sum(v["bytes"] for v in colls.values())
+    return np.array([flops, nbytes, float(coll_bytes)]), colls
+
+
+def _extrapolated_costs(cfg, shape, mesh, rules):
+    """True per-step costs via layer-count extrapolation.
+
+    XLA's cost_analysis counts a lax.scan body ONCE (verified), so the
+    full scanned compile under-reports flops/bytes/collectives. We
+    compile two small force_unroll variants (u and 2u layers; enc-dec
+    adds a 2→4-encoder-layer variant) and extrapolate linearly to the
+    full layer count — exact for homogeneous stacks.
+    """
+    u = max(1, len(cfg.block_pattern))
+    kw = {"force_unroll": True}
+    enc_kw = {"num_encoder_layers": 2} if cfg.is_encoder_decoder else {}
+    v1 = cfg.replace(num_layers=u, **enc_kw, **kw)
+    v2 = cfg.replace(num_layers=2 * u, **enc_kw, **kw)
+    c1, _ = _compile_workload(v1, shape, mesh, rules)
+    m1, colls = _costs_of(c1)
+    c2, _ = _compile_workload(v2, shape, mesh, rules)
+    m2, _ = _costs_of(c2)
+    per_layer = (m2 - m1) / u
+    total = m1 + (cfg.num_layers - u) * per_layer
+    if cfg.is_encoder_decoder:
+        v3 = cfg.replace(num_layers=u, num_encoder_layers=4, **kw)
+        c3, _ = _compile_workload(v3, shape, mesh, rules)
+        m3, _ = _costs_of(c3)
+        per_2enc = m3 - m1
+        total = total + (cfg.num_encoder_layers - 2) / 2.0 * per_2enc
+    return np.maximum(total, 0.0), colls
+
+
+def dry_run_one(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    rules=None,
+    verbose: bool = True,
+    extrapolate: bool = True,
+    cfg_override=None,
+):
+    """Lower + compile one (arch, shape, mesh); returns a result dict."""
+    cfg = cfg_override or get_config(arch)
+    shape = W.SHAPES[shape_name]
+    reason = W.skip_reason(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+    }
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+    rules = rules or sh.DEFAULT_RULES
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+
+    # 1) full scanned compile: proves lowering + memory analysis
+    compiled, static_bytes = _compile_workload(cfg, shape, mesh, rules)
+    mem = extract_memory(compiled)
+    # 2) cost extrapolation from small unrolled variants
+    if extrapolate:
+        (flops, nbytes, coll_bytes), colls = _extrapolated_costs(
+            cfg, shape, mesh, rules
+        )
+    else:
+        (flops, nbytes, coll_bytes), colls = _costs_of(compiled)
+    rl = Roofline(
+        arch=arch, shape=shape_name, mesh=rec["mesh"], n_chips=n_chips,
+        hlo_flops=float(flops), hlo_bytes=float(nbytes),
+        collective_bytes=float(coll_bytes),
+        model_flops=model_flops_for(cfg, shape, active_params(cfg))
+        / n_chips,
+        collectives=colls,
+        bytes_per_device=static_bytes,
+        peak_memory=mem.get("temp_size_in_bytes", 0.0) + static_bytes,
+    )
+    rec.update(rl.as_dict())
+    rec["status"] = "ok"
+    rec["memory_analysis"] = mem
+    rec["compile_s"] = time.time() - t0
+    if verbose:
+        print(
+            f"[dryrun] {arch:24s} {shape_name:12s} {rec['mesh']:8s} "
+            f"OK {rec['compile_s']:6.1f}s  flops/chip={flops:.3e} "
+            f"bytes/chip={nbytes:.3e} coll={coll_bytes:.3e} "
+            f"static={static_bytes/1e9:.2f}GB dominant={rl.dominant} "
+            f"useful={rl.useful_flops_ratio:.2f}"
+        )
+        if mem:
+            print(f"         memory_analysis: {mem}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all arch × shape")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--shapes", default="train_4k,prefill_32k,decode_32k,long_500k")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = (
+        args.shapes.split(",") if (args.all or not args.shape)
+        else [args.shape]
+    )
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(
+                        dry_run_one(arch, shape, multi_pod=mp)
+                    )
+                except Exception as e:  # a failure here is a system bug
+                    traceback.print_exc()
+                    results.append({
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "FAILED", "error": str(e)[:2000],
+                    })
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = sum(r["status"] == "FAILED" for r in results)
+    print(f"\n[dryrun] ok={n_ok} skipped={n_skip} FAILED={n_fail}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print(f"[dryrun] wrote {args.out}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,243 @@
+"""§Perf hillclimbing driver: the three selected (arch × shape) pairs,
+each iterated hypothesis → change → re-lower → re-analyse.
+
+  Pair A: seamless-m4t-medium × decode_32k   (worst useful-flops ratio)
+  Pair B: xlstm-125m × decode_32k            (most collective-bound)
+  Pair C: qwen3-8b × verify_8 vs decode_32k  (the paper's own workload)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb --pair A|B|C|all \
+      [--out hillclimb_report.json]
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch import sharding as sh  # noqa: E402
+from repro.launch import workloads as W  # noqa: E402
+from repro.launch import dryrun as D  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+
+
+def _fmt(rec):
+    return (
+        f"t_comp={rec['t_compute_s']:.3e}s t_mem={rec['t_memory_s']:.3e}s "
+        f"t_coll={rec['t_collective_s']:.3e}s dom={rec['dominant']} "
+        f"useful={rec['useful_flops_ratio']:.3f}"
+    )
+
+
+def _delta(base, new, term):
+    b, n = base[term], new[term]
+    return f"{term}: {b:.3e} → {n:.3e} ({(n - b) / max(b, 1e-30):+.1%})"
+
+
+# -- Pair A: cross-KV caching for the enc-dec decoder ----------------------
+
+def _compile_seamless(use_cross_cache: bool, rules=None):
+    """Custom compile path for pair A (needs the extra cross_cache input)."""
+    cfg = get_config("seamless-m4t-medium")
+    shape = W.SHAPES["decode_32k"]
+    rules = rules or sh.DEFAULT_RULES
+    mesh = make_production_mesh()
+    pstruct, paxes = W.param_specs(cfg)
+    psh = D._shard_tree(pstruct, paxes, mesh, rules)
+    inputs, iaxes = W.input_specs(cfg, shape)
+    if use_cross_cache:
+        enc_out = inputs.pop("enc_out")
+        iaxes.pop("enc_out")
+        cstruct = jax.eval_shape(
+            lambda p, e: M.build_cross_cache(p, cfg, e), pstruct, enc_out
+        )
+        inputs["cross_cache"] = cstruct
+        iaxes["cross_cache"] = M.cross_cache_logical_axes(cfg)
+    ish = {
+        k: D._shard_tree(inputs[k], iaxes[k], mesh, rules)
+        if k == "cross_cache"
+        else NamedSharding(mesh, sh.spec_for(inputs[k].shape, iaxes[k], mesh, rules))
+        for k in inputs
+    }
+    cstruct2, caxes = W.cache_specs(cfg, shape, mesh)
+    csh = D._shard_tree(cstruct2, caxes, mesh, rules)
+    fn = W.make_decode_fn(cfg, shape, use_cross_cache=use_cross_cache)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=(psh, csh, ish), donate_argnums=(1,))
+        compiled = jitted.lower(pstruct, cstruct2, inputs).compile()
+    m, colls = D._costs_of(compiled)
+    # extrapolate over layers with the same two-point scheme
+    u = 1
+    recs = []
+    for L_ in (1, 2):
+        cfg_v = cfg.replace(num_layers=L_, num_encoder_layers=2, force_unroll=True)
+        pst, pax = W.param_specs(cfg_v)
+        pshv = D._shard_tree(pst, pax, mesh, rules)
+        inp, iax = W.input_specs(cfg_v, shape)
+        if use_cross_cache:
+            enc_out = inp.pop("enc_out")
+            iax.pop("enc_out")
+            cc = jax.eval_shape(
+                lambda p, e: M.build_cross_cache(p, cfg_v, e), pst, enc_out
+            )
+            inp["cross_cache"] = cc
+            iax["cross_cache"] = M.cross_cache_logical_axes(cfg_v)
+        ishv = {
+            k: D._shard_tree(inp[k], iax[k], mesh, rules)
+            if k == "cross_cache"
+            else NamedSharding(mesh, sh.spec_for(inp[k].shape, iax[k], mesh, rules))
+            for k in inp
+        }
+        cstv, cax = W.cache_specs(cfg_v, shape, mesh)
+        cshv = D._shard_tree(cstv, cax, mesh, rules)
+        fnv = W.make_decode_fn(cfg_v, shape, use_cross_cache=use_cross_cache)
+        with mesh:
+            cv = jax.jit(
+                fnv, in_shardings=(pshv, cshv, ishv), donate_argnums=(1,)
+            ).lower(pst, cstv, inp).compile()
+        mv, _ = D._costs_of(cv)
+        recs.append(mv)
+    per_layer = recs[1] - recs[0]
+    total = recs[0] + (cfg.num_layers - 1) * per_layer
+    # encoder not present at decode; nothing else to add
+    from repro.configs import active_params
+    from repro.launch.analysis import Roofline, model_flops_for
+
+    rl = Roofline(
+        arch="seamless-m4t-medium", shape="decode_32k",
+        mesh="16x16", n_chips=256,
+        hlo_flops=float(total[0]), hlo_bytes=float(total[1]),
+        collective_bytes=float(total[2]),
+        model_flops=model_flops_for(
+            cfg, shape, active_params(cfg)
+        ) / 256,
+        collectives=colls,
+    )
+    return rl.as_dict()
+
+
+def pair_a():
+    print("=== Pair A: seamless-m4t-medium × decode_32k ===")
+    print(
+        "H-A1: baseline recomputes every decoder layer's cross-attention "
+        "K/V from enc_out (B,1024,1024) each step — 2·L·S_enc·d² flops "
+        "that dwarf the single-token decode (useful ratio 0.03). "
+        "Napkin: cross-KV projection = 12L·2·1024·1024²·2 ≈ 5.3e10 flops "
+        "global vs decode's ~2·0.9e9·128 ≈ 2.3e11... per chip the "
+        "projection dominates bytes. Expect flops and bytes to drop "
+        "several-fold with a precomputed cross cache."
+    )
+    base = _compile_seamless(False)
+    print("  baseline:", _fmt(base))
+    new = _compile_seamless(True)
+    print("  +cross_cache:", _fmt(new))
+    for t in ("hlo_flops", "hlo_bytes", "t_memory_s", "t_compute_s"):
+        print("   ", _delta(base, new, t))
+    return {"pair": "A", "baseline": base, "optimized": new,
+            "change": "precomputed cross-attention KV cache"}
+
+
+# -- Pair B: xlstm decode collectives --------------------------------------
+
+def pair_b():
+    print("=== Pair B: xlstm-125m × decode_32k ===")
+    print(
+        "H-B1: with FSDP rules a 125M model all-gathers ~0.23 GB of "
+        "params over ICI every step (t_coll 1.5e-4s) while the step "
+        "itself reads ~0.05 GB (t_mem 6e-5s). Napkin: replicating params "
+        "across 'data' removes the gathers; replicated reads add "
+        "0.25 GB/819 GB/s ≈ 3e-4 s... UNLESS XLA keeps weights resident "
+        "— bytes-accessed counts them once per step either way, so "
+        "expect t_coll ↓ ~10×, t_mem up to ~3-4× — net win iff "
+        "t_coll was dominant. Measure."
+    )
+    out = {"pair": "B", "variants": []}
+    base = D.dry_run_one("xlstm-125m", "decode_32k", verbose=False)
+    print("  baseline (embed→FSDP):", _fmt(base))
+    out["baseline"] = base
+    v1_rules = dict(sh.DEFAULT_RULES)
+    v1_rules["embed"] = None
+    v1 = D.dry_run_one("xlstm-125m", "decode_32k", rules=v1_rules, verbose=False)
+    print("  V1 embed→replicated:", _fmt(v1))
+    for t in ("t_collective_s", "t_memory_s", "hlo_flops"):
+        print("   ", _delta(base, v1, t))
+    out["variants"].append({"rules": "embed=None", **v1})
+    v2_rules = dict(v1_rules)
+    v2_rules["vocab"] = None
+    v2 = D.dry_run_one("xlstm-125m", "decode_32k", rules=v2_rules, verbose=False)
+    print("  V2 embed+vocab→replicated:", _fmt(v2))
+    for t in ("t_collective_s", "t_memory_s"):
+        print("   ", _delta(base, v2, t))
+    out["variants"].append({"rules": "embed=None,vocab=None", **v2})
+    return out
+
+
+# -- Pair C: the paper's verify step ----------------------------------------
+
+def pair_c():
+    print("=== Pair C: qwen3-8b × verify_8 (the DAS verify step) ===")
+    print(
+        "The paper's economics: one verify pass scores K+1=9 tokens. If "
+        "the per-pass cost grows by far less than 9×, speculation wins "
+        "by (tokens/pass)/(cost ratio). decode_32k is memory-bound "
+        "(cache + weights traffic is independent of T), so expect "
+        "cost_ratio ≈ 1 and a ~9× per-token win at acceptance 1."
+    )
+    dec = D.dry_run_one("qwen3-8b", "decode_32k", verbose=False)
+    ver = D.dry_run_one("qwen3-8b", "verify_8", verbose=False)
+    t_dec = max(dec["t_compute_s"], dec["t_memory_s"], dec["t_collective_s"])
+    t_ver = max(ver["t_compute_s"], ver["t_memory_s"], ver["t_collective_s"])
+    print("  decode_32k :", _fmt(dec))
+    print("  verify_8   :", _fmt(ver))
+    print(
+        f"  cost ratio verify/decode = {t_ver / t_dec:.2f}; tokens/pass 9 "
+        f"→ per-token speedup at full acceptance ≈ {9 * t_dec / t_ver:.1f}x"
+    )
+    out = {"pair": "C", "decode": dec, "verify": ver,
+           "cost_ratio": t_ver / t_dec}
+    print(
+        "H-C1: verify is memory-bound via FSDP param gathers + cache "
+        "reads; replicating params across 'data' for serving (weights "
+        "fit: 8.2B·2/16 model-shards = 1.0 GB/chip) should cut "
+        "t_collective."
+    )
+    rules = dict(sh.DEFAULT_RULES)
+    rules["embed"] = None
+    ver2 = D.dry_run_one("qwen3-8b", "verify_8", rules=rules, verbose=False)
+    print("  verify_8 +replicated-params:", _fmt(ver2))
+    for t in ("t_collective_s", "t_memory_s"):
+        print("   ", _delta(ver, ver2, t))
+    out["verify_replicated"] = ver2
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default="all", choices=["A", "B", "C", "all"])
+    ap.add_argument("--out", default="hillclimb_report.json")
+    args = ap.parse_args()
+    results = []
+    if args.pair in ("A", "all"):
+        results.append(pair_a())
+    if args.pair in ("B", "all"):
+        results.append(pair_b())
+    if args.pair in ("C", "all"):
+        results.append(pair_c())
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

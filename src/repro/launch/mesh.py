@@ -1,0 +1,32 @@
+"""Production mesh factory.
+
+Defined as a FUNCTION (never a module-level constant) so importing this
+module never touches jax device state. The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import to get placeholder devices; smoke tests and benches see 1 device.
+
+Target hardware: TPU v5e pods — 256 chips/pod (16×16), 2 pods = 512.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh() -> Mesh:
+    """1-device mesh with the same axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# Hardware constants for the roofline analysis (TPU v5e, per assignment).
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+CHIPS_PER_POD = 256

@@ -1,0 +1,176 @@
+"""Logical-axis sharding (MaxText-style rules).
+
+Every parameter leaf carries logical axis names (models/layers.Param);
+a *rules table* maps logical names → mesh axes. A logical axis only
+shards when the dimension size divides the mesh axis size — otherwise it
+silently replicates (e.g. qwen2's 12 heads on a 16-way model axis),
+which the roofline then makes visible. The rules table is the main
+§Perf hillclimbing lever: overrides are plain dicts.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+# Default logical→mesh rules (single- and multi-pod meshes share them;
+# absent mesh axes are dropped automatically).
+DEFAULT_RULES: Dict[str, AxisVal] = {
+    "vocab": "model",
+    "embed": ("pod", "data"),  # FSDP / ZeRO-3 on the weight feature dim
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "layers": None,
+    # activations
+    "batch": ("pod", "data"),
+    "act_seq": "model",  # sequence-parallel residual stream (training)
+    "kv_seq": "model",  # decode cache sequence when kv_heads can't shard
+}
+
+
+def _mesh_axis_size(mesh: Mesh, axis: AxisVal) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis] if axis in mesh.shape else 1
+    n = 1
+    for a in axis:
+        n *= mesh.shape[a] if a in mesh.shape else 1
+    return n
+
+
+def _filter_axis(mesh: Mesh, axis: AxisVal) -> AxisVal:
+    """Drop mesh axes that don't exist in this mesh (pod on single-pod)."""
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis if axis in mesh.shape else None
+    kept = tuple(a for a in axis if a in mesh.shape)
+    return kept if kept else None
+
+
+def spec_for(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Optional[Dict[str, AxisVal]] = None,
+) -> P:
+    """PartitionSpec for one array from its logical axes + divisibility."""
+    rules = rules or DEFAULT_RULES
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        axis = _filter_axis(mesh, rules.get(name)) if name else None
+        if axis is not None:
+            size = _mesh_axis_size(mesh, axis)
+            flat = (axis,) if isinstance(axis, str) else tuple(axis)
+            if dim % max(size, 1) != 0 or any(a in used for a in flat):
+                axis = None
+            else:
+                used.update(flat)
+        parts.append(axis)
+    return P(*parts)
+
+
+def tree_shardings(
+    shapes_tree,  # pytree of ShapeDtypeStruct / arrays
+    axes_tree,  # matching pytree of logical-axes tuples
+    mesh: Mesh,
+    rules: Optional[Dict[str, AxisVal]] = None,
+):
+    """NamedSharding pytree for a (shapes, logical axes) pair."""
+
+    def one(sds, axes):
+        return NamedSharding(mesh, spec_for(sds.shape, axes, mesh, rules))
+
+    return jax.tree.map(
+        one, shapes_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context (sequence-parallel residual stream).
+# model.forward consults this between blocks; the dry-run/launcher sets it.
+# ---------------------------------------------------------------------------
+
+_ctx = threading.local()
+
+
+def activation_spec() -> Optional[P]:
+    return getattr(_ctx, "act_spec", None)
+
+
+def moe_cap_axis() -> AxisVal:
+    return getattr(_ctx, "moe_cap", None)
+
+
+@contextlib.contextmanager
+def use_activation_spec(spec: Optional[P], moe_cap: AxisVal = None):
+    prev = getattr(_ctx, "act_spec", None)
+    prev_m = getattr(_ctx, "moe_cap", None)
+    _ctx.act_spec = spec
+    _ctx.moe_cap = moe_cap
+    try:
+        yield
+    finally:
+        _ctx.act_spec = prev
+        _ctx.moe_cap = prev_m
+
+
+def constrain(x):
+    """Apply the ambient activation sharding constraint, if any."""
+    spec = activation_spec()
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, TypeError):
+        return x
+
+
+def constrain_moe(x):
+    """Shard MoE capacity buffers (E, cap, d) / (E, cap, f): cap over the
+    ambient data axes — without this the scatter target replicates per
+    chip (21 GB/layer at Mixtral train scale)."""
+    axis = moe_cap_axis()
+    if axis is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, P(None, axis, *([None] * (x.ndim - 2)))
+        )
+    except (ValueError, TypeError):
+        return x
+
+
+def batch_spec(mesh: Mesh, rules=None, extra_dims: int = 1) -> P:
+    rules = rules or DEFAULT_RULES
+    b = _filter_axis(mesh, rules.get("batch"))
+    return P(b, *([None] * extra_dims))
+
+
+def residual_spec(mesh: Mesh, seq_len: int, rules=None) -> Optional[P]:
+    """(batch, seq, d) sequence-parallel spec if seq divides the model
+    axis (Megatron sequence parallelism — saves activation memory under
+    remat by the model-axis factor)."""
+    rules = rules or DEFAULT_RULES
+    b = _filter_axis(mesh, rules.get("batch"))
+    s = _filter_axis(mesh, rules.get("act_seq"))
+    if s is None:
+        return P(b, None, None)
+    if seq_len % _mesh_axis_size(mesh, s) != 0:
+        s = None
+    return P(b, s, None)

@@ -1,0 +1,237 @@
+"""Workload definitions for the dry-run: the four assigned input shapes
+lowered against every architecture.
+
+  train_4k     → jitted GRPO train step (fwd + bwd + AdamW)
+  prefill_32k  → jitted prompt prefill (full-seq compute + cache build)
+  decode_32k   → jitted serve step: ONE token against a 32k cache
+  long_500k    → same, 524288-token context (sub-quadratic archs only)
+  verify_8     → DAS verify step: 8-token draft block (paper workload;
+                 lowered for the hillclimb pairs, decode+verify share
+                 the cache layout)
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins (+ logical
+axes) for every input — weak-type-correct, shardable, no allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch import sharding as sh
+from repro.models import model as M
+from repro.models.layers import split_tree
+from repro.optim import adamw
+from repro.rl.grpo import GRPOConfig, grpo_loss
+
+S_ENC = 1024  # stub audio-frame count (encoder input length)
+SLOT_MULTIPLE = 256  # cache slot rounding for kv_seq sharding
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode | verify
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+    "verify_8": InputShape("verify_8", 32_768, 128, "verify"),
+}
+
+VERIFY_K = 8  # draft tokens per verify block (verify_8)
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return (
+            "full-attention arch: long_500k requires sub-quadratic "
+            "attention (DESIGN.md §4)"
+        )
+    return None
+
+
+# ---------------------------------------------------------------------------
+# input specs (abstract values + logical axes)
+# ---------------------------------------------------------------------------
+
+def input_specs(
+    cfg: ModelConfig, shape: InputShape
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (abstract inputs dict, logical-axes dict). Caches are
+    handled separately (cache_specs)."""
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    specs: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = sds((B, S), jnp.int32)
+        axes["tokens"] = ("batch", None)
+        specs["resp_mask"] = sds((B, S), jnp.bool_)
+        axes["resp_mask"] = ("batch", None)
+        specs["advantages"] = sds((B,), jnp.float32)
+        axes["advantages"] = ("batch",)
+        specs["old_logprobs"] = sds((B, S), jnp.float32)
+        axes["old_logprobs"] = ("batch", None)
+        if cfg.modality == "vision":
+            specs["embeds"] = sds((B, S, d), cfg.dtype)
+            axes["embeds"] = ("batch", None, None)
+            specs["mrope_positions"] = sds((3, B, S), jnp.int32)
+            axes["mrope_positions"] = (None, "batch", None)
+        if cfg.is_encoder_decoder:
+            specs["enc_embeds"] = sds((B, S_ENC, d), cfg.dtype)
+            axes["enc_embeds"] = ("batch", None, None)
+            specs["enc_mask"] = sds((B, S_ENC), jnp.bool_)
+            axes["enc_mask"] = ("batch", None)
+    elif shape.kind == "prefill":
+        specs["tokens"] = sds((B, S), jnp.int32)
+        axes["tokens"] = ("batch", None)
+        specs["pad_mask"] = sds((B, S), jnp.bool_)
+        axes["pad_mask"] = ("batch", None)
+        if cfg.modality == "vision":
+            specs["embeds"] = sds((B, S, d), cfg.dtype)
+            axes["embeds"] = ("batch", None, None)
+            specs["mrope_positions"] = sds((3, B, S), jnp.int32)
+            axes["mrope_positions"] = (None, "batch", None)
+        if cfg.is_encoder_decoder:
+            specs["enc_out"] = sds((B, S_ENC, d), cfg.dtype)
+            axes["enc_out"] = ("batch", None, None)
+            specs["enc_mask"] = sds((B, S_ENC), jnp.bool_)
+            axes["enc_mask"] = ("batch", None)
+    else:  # decode / verify
+        T = 1 if shape.kind == "decode" else VERIFY_K + 1
+        specs["block"] = sds((B, T), jnp.int32)
+        axes["block"] = ("batch", None)
+        if shape.kind == "verify":
+            specs["budgets"] = sds((B,), jnp.int32)
+            axes["budgets"] = ("batch",)
+        if cfg.modality == "vision":
+            specs["mrope_positions"] = sds((3, B, T), jnp.int32)
+            axes["mrope_positions"] = (None, "batch", None)
+        if cfg.is_encoder_decoder:
+            specs["enc_out"] = sds((B, S_ENC, d), cfg.dtype)
+            axes["enc_out"] = ("batch", None, None)
+            specs["enc_mask"] = sds((B, S_ENC), jnp.bool_)
+            axes["enc_mask"] = ("batch", None)
+    return specs, axes
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    """(abstract Cache, axes Cache) for decode/verify workloads."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: M.init_cache(
+            cfg, B, S + VERIFY_K + 2, headroom=VERIFY_K + 8,
+            slot_multiple=SLOT_MULTIPLE,
+        )
+    )
+    model_size = mesh.shape.get("model", 1)
+    axes = M.cache_logical_axes(cfg, model_size)
+    return cache, axes
+
+
+def param_specs(cfg: ModelConfig):
+    """(abstract params, logical axes) via eval_shape — no allocation."""
+    ptree = M.param_shapes(cfg)
+    return split_tree(ptree)
+
+
+# ---------------------------------------------------------------------------
+# step functions (what gets lowered)
+# ---------------------------------------------------------------------------
+
+def make_train_fn(cfg: ModelConfig) -> Callable:
+    gcfg = GRPOConfig(group_size=8, remat=True)
+    ocfg = adamw.AdamWConfig(lr=3e-4, weight_decay=0.0)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: grpo_loss(p, cfg, gcfg, batch), has_aux=True
+        )(params)
+        params, opt_state, om = adamw.apply_updates(ocfg, params, grads, opt_state)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_fn(cfg: ModelConfig, shape: InputShape) -> Callable:
+    max_len = shape.seq_len + VERIFY_K + 2
+
+    def prefill_step(params, batch):
+        return M.prefill(
+            params, cfg, batch.get("tokens"), batch["pad_mask"],
+            max_len=max_len, headroom=VERIFY_K + 8,
+            embeds=batch.get("embeds"),
+            mrope_positions=batch.get("mrope_positions"),
+            enc_out=batch.get("enc_out"), enc_mask=batch.get("enc_mask"),
+        )
+
+    return prefill_step
+
+
+def make_decode_fn(
+    cfg: ModelConfig, shape: InputShape, use_cross_cache: bool = False
+) -> Callable:
+    is_verify = shape.kind == "verify"
+
+    def serve_step(params, cache, batch):
+        block = batch["block"]
+        B, T = block.shape
+        valid = jnp.ones((B, T), bool)
+        cross = batch.get("cross_cache") if use_cross_cache else None
+        recurrent = M.has_recurrent(cfg)
+        logits, cache1, _ = M.forward(
+            params, cfg, block, cache=cache, valid=valid,
+            commit_upto=(
+                None if (not is_verify or recurrent)
+                else jnp.zeros((B,), jnp.int32)
+            ),
+            mrope_positions=batch.get("mrope_positions"),
+            enc_out=None if use_cross_cache else batch.get("enc_out"),
+            enc_mask=batch.get("enc_mask"),
+            cross_cache=cross,
+            collect_states=is_verify and recurrent,
+        )
+        if is_verify:
+            from repro.core.verify import verify_block
+
+            res = verify_block(
+                logits[:, :, : cfg.vocab_size], block, batch["budgets"]
+            )
+            if recurrent:
+                # single-pass: gather staged recurrent states at the
+                # acceptance count (no second forward)
+                cache1 = M.commit_staged_cache(cfg, cache1, 1 + res.accepted)
+            cache1 = cache1._replace(
+                lengths=cache1.lengths + 1 + res.accepted
+            )
+            return res.next_token, cache1
+        next_tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
+        cache1 = cache1._replace(lengths=cache1.lengths + 1)
+        return next_tok, cache1
+
+    return serve_step
+
+
+def opt_specs(cfg: ModelConfig):
+    """Abstract AdamW state + axes (mirrors the param tree twice)."""
+    pshapes, paxes = param_specs(cfg)
+    mu = jax.tree.map(lambda s: sds(s.shape, jnp.float32), pshapes)
+    state = adamw.AdamWState(sds((), jnp.int32), mu, mu)
+    ax = adamw.AdamWState((), paxes, paxes)
+    return state, ax

@@ -1,0 +1,34 @@
+"""Model zoo: composable blocks (layers.py) + assembly (model.py).
+
+Families: dense GQA (RoPE standard/partial/M-RoPE, SWA, parallel
+blocks), MoE (capacity scatter dispatch, dense residual), RG-LRU hybrid,
+xLSTM (mLSTM/sLSTM), encoder-decoder. All share one cached-verify code
+path that makes speculative rollback free (see model.py docstring).
+"""
+
+from . import layers, model
+from .model import (
+    Cache,
+    build_cross_cache,
+    encode,
+    forward,
+    has_recurrent,
+    init_cache,
+    init_params,
+    param_shapes,
+    prefill,
+)
+
+__all__ = [
+    "layers",
+    "model",
+    "Cache",
+    "build_cross_cache",
+    "encode",
+    "forward",
+    "has_recurrent",
+    "init_cache",
+    "init_params",
+    "param_shapes",
+    "prefill",
+]

@@ -1,0 +1,15 @@
+from .grpo import GRPOConfig, compute_old_logprobs, grpo_loss, group_advantages, make_train_step
+from .rollout import RolloutBatch, RolloutWorker
+from .trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "GRPOConfig",
+    "compute_old_logprobs",
+    "grpo_loss",
+    "group_advantages",
+    "make_train_step",
+    "RolloutBatch",
+    "RolloutWorker",
+    "Trainer",
+    "TrainerConfig",
+]

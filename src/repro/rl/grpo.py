@@ -1,0 +1,194 @@
+"""GRPO (Group Relative Policy Optimization) in pure JAX.
+
+The learner side of the paper's pipeline (kept *unchanged* by DAS — the
+paper accelerates only the rollout phase). Group-normalized advantages
+(DeepSeek-R1 style), clipped surrogate, optional KL-to-old penalty, MoE
+aux loss pass-through, AdamW update. The jitted `train_step` is also the
+``train_4k`` dry-run workload.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.optim import adamw
+
+
+@dataclass(frozen=True)
+class GRPOConfig:
+    clip_eps: float = 0.2
+    kl_coef: float = 0.0
+    entropy_coef: float = 0.0
+    group_size: int = 8
+    adv_eps: float = 1e-4
+    remat: bool = False  # activation checkpointing on the layer scan
+
+
+def group_advantages(
+    rewards: np.ndarray, group_size: int, eps: float = 1e-4
+) -> np.ndarray:
+    """(N,) rewards, rows grouped consecutively per problem → normalized
+    advantages A = (r - mean_g) / (std_g + eps)."""
+    r = rewards.reshape(-1, group_size)
+    mean = r.mean(axis=1, keepdims=True)
+    std = r.std(axis=1, keepdims=True)
+    return ((r - mean) / (std + eps)).reshape(-1)
+
+
+def chunked_token_logprobs(
+    params, cfg: ModelConfig, hidden: jnp.ndarray, tokens: jnp.ndarray,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Memory-efficient lp[:, t] = log p(tokens[:,t] | ...) from final
+    hidden states, never materializing the (B,S,V) logits: lax.scan over
+    sequence chunks, each chunk checkpointed so the backward recomputes
+    its logits tile. Essential for the 256k-vocab assigned archs."""
+    B, S, D = hidden.shape
+    V = cfg.vocab_size
+    h = hidden[:, :-1]  # positions predicting tokens[:, 1:]
+    t = tokens[:, 1:]
+    Sm = S - 1
+    C = min(chunk, Sm)
+    Sp = ((Sm + C - 1) // C) * C
+    h = jnp.pad(h, ((0, 0), (0, Sp - Sm), (0, 0)))
+    t = jnp.pad(t, ((0, 0), (0, Sp - Sm)))
+    h_c = jnp.moveaxis(h.reshape(B, Sp // C, C, D), 1, 0)
+    t_c = jnp.moveaxis(t.reshape(B, Sp // C, C), 1, 0)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+    def step(_, xs):
+        hc, tc = xs  # (B,C,D), (B,C)
+        if cfg.tie_embeddings:
+            lg = jnp.einsum("bcd,vd->bcv", hc, head[:V]).astype(jnp.float32)
+        else:
+            lg = jnp.einsum("bcd,dv->bcv", hc, head[:, :V]).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        tgt = jnp.take_along_axis(lg, tc[..., None], axis=-1)[..., 0]
+        return None, tgt - lse
+
+    step = jax.checkpoint(step, prevent_cse=False)
+    _, lps = jax.lax.scan(step, None, (h_c, t_c))
+    lp = jnp.moveaxis(lps, 0, 1).reshape(B, Sp)[:, :Sm]
+    return jnp.pad(lp, ((0, 0), (1, 0)))  # align: lp[:, t] for token t
+
+
+def token_logprobs(logits: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """logits (B,S,V) f32; tokens (B,S). Returns lp (B,S) where lp[:, t]
+    is log p(tokens[:, t] | tokens[:, :t]) (position t-1's logits)."""
+    lp_all = jax.nn.log_softmax(logits, axis=-1)
+    # shift: logits at position t predict token t+1
+    lp = jnp.take_along_axis(
+        lp_all[:, :-1], tokens[:, 1:, None], axis=-1
+    )[..., 0]
+    return jnp.pad(lp, ((0, 0), (1, 0)))  # align: lp[:, t] for token t
+
+
+def grpo_loss(
+    params,
+    cfg: ModelConfig,
+    gcfg: GRPOConfig,
+    batch: Dict[str, jnp.ndarray],
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """batch: tokens (B,S), resp_mask (B,S) bool, advantages (B,),
+    old_logprobs (B,S) — ratio=1 when old==new (single on-policy update).
+    Modality extras (assigned VLM/audio archs): ``embeds`` replaces the
+    token embedding lookup, ``mrope_positions`` (3,B,S) for M-RoPE,
+    ``enc_embeds``/``enc_mask`` run the encoder for cross-attention.
+    """
+    tokens = batch["tokens"]
+    enc_out = None
+    enc_mask = batch.get("enc_mask")
+    if "enc_embeds" in batch:
+        enc_out = M.encode(params, cfg, batch["enc_embeds"], enc_mask)
+    hidden, _, aux = M.forward(
+        params, cfg, tokens,
+        embeds=batch.get("embeds"),
+        mrope_positions=batch.get("mrope_positions"),
+        enc_out=enc_out, enc_mask=enc_mask,
+        remat=gcfg.remat,
+        return_hidden=True,
+    )
+    lp = chunked_token_logprobs(params, cfg, hidden, tokens)
+    mask = batch["resp_mask"].astype(jnp.float32)
+    adv = batch["advantages"][:, None]
+    ratio = jnp.exp(lp - batch["old_logprobs"])
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - gcfg.clip_eps, 1.0 + gcfg.clip_eps) * adv
+    pg = -jnp.minimum(unclipped, clipped)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (pg * mask).sum() / denom
+    metrics = {"pg_loss": loss, "aux_loss": aux}
+    if gcfg.kl_coef > 0:
+        # k3 estimator of KL(new || old)
+        logr = lp - batch["old_logprobs"]
+        kl = (jnp.exp(-logr) - 1.0 + logr) * mask
+        kl = kl.sum() / denom
+        loss = loss + gcfg.kl_coef * kl
+        metrics["kl"] = kl
+    if gcfg.entropy_coef > 0:
+        # cheap surrogate compatible with the chunked-logprob path:
+        # maximizing -E[log p(sampled)] (sampled-token entropy estimator)
+        ent = -(lp * mask).sum() / denom
+        loss = loss - gcfg.entropy_coef * ent
+        metrics["entropy"] = ent
+    loss = loss + aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, gcfg: GRPOConfig, ocfg: adamw.AdamWConfig):
+    """Returns jit-able train_step(params, opt_state, batch) →
+    (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: grpo_loss(p, cfg, gcfg, batch), has_aux=True
+        )(params)
+        params, opt_state, om = adamw.apply_updates(
+            ocfg, params, grads, opt_state
+        )
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def compute_old_logprobs(params, cfg: ModelConfig, tokens) -> jnp.ndarray:
+    hidden, _, _ = M.forward(params, cfg, tokens, return_hidden=True)
+    return chunked_token_logprobs(params, cfg, hidden, tokens)
+
+
+def make_sft_step(cfg: ModelConfig, ocfg: adamw.AdamWConfig):
+    """Supervised warmup step (cross-entropy on the response span).
+
+    The paper post-trains *pretrained* checkpoints; on CPU we cannot
+    pretrain, so a brief SFT phase on task responses plays that role
+    before GRPO takes over (documented in DESIGN.md §8).
+    """
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        hidden, _, aux = M.forward(params, cfg, tokens, return_hidden=True)
+        lp = chunked_token_logprobs(params, cfg, hidden, tokens)
+        mask = batch["resp_mask"].astype(jnp.float32)
+        ce = -(lp * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        return ce + aux, {"sft_loss": ce}
+
+    def sft_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        params, opt_state, om = adamw.apply_updates(
+            ocfg, params, grads, opt_state
+        )
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return sft_step

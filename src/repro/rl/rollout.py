@@ -1,0 +1,88 @@
+"""Rollout phase: batched generation with G samples per problem.
+
+Wraps the speculative engine for RL: replicates each problem G times
+(all G samples share the same per-problem suffix tree — exactly the
+reuse the paper exploits), computes verifiable rewards, and packs the
+result into a GRPO training batch. The baseline (no speculation) is the
+same code path with ``spec_enabled=False`` so timing comparisons are
+apples-to-apples.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.spec_engine import RolloutStats, SpecEngine
+from repro.data.tasks import Problem, Task
+from repro.data.tokenizer import PAD
+from repro.rl.grpo import group_advantages
+
+
+@dataclass
+class RolloutBatch:
+    tokens: np.ndarray  # (N, S) prompt+response, right-padded
+    resp_mask: np.ndarray  # (N, S) bool, True on response tokens
+    advantages: np.ndarray  # (N,)
+    rewards: np.ndarray  # (N,)
+    responses: List[List[int]]
+    problems: List[Problem]
+    stats: RolloutStats
+    gen_time_s: float
+
+
+class RolloutWorker:
+    def __init__(self, engine: SpecEngine, task: Task, group_size: int = 8):
+        self.engine = engine
+        self.task = task
+        self.G = group_size
+
+    def rollout(
+        self,
+        problems: Sequence[Problem],
+        *,
+        key,
+        max_new_tokens: Optional[int] = None,
+        collect_effective_batch: bool = False,
+    ) -> RolloutBatch:
+        t0 = time.perf_counter()
+        prompts, pids, probs = [], [], []
+        for p in problems:
+            for _ in range(self.G):
+                prompts.append(list(p.prompt))
+                pids.append(p.pid)
+                probs.append(p)
+        outs, stats = self.engine.generate(
+            prompts, pids, max_new_tokens=max_new_tokens, key=key,
+            collect_effective_batch=collect_effective_batch,
+        )
+        gen_time = time.perf_counter() - t0
+        rewards = np.array(
+            [self.task.reward(pr, o) for pr, o in zip(probs, outs)],
+            np.float32,
+        )
+        adv = group_advantages(rewards, self.G)
+        # pack train batch (bucketed width to bound train-step recompiles)
+        N = len(prompts)
+        S = max(len(p) + len(o) for p, o in zip(prompts, outs)) + 1
+        S = ((S + 31) // 32) * 32
+        tokens = np.full((N, S), PAD, np.int32)
+        resp_mask = np.zeros((N, S), bool)
+        for i, (p, o) in enumerate(zip(prompts, outs)):
+            seq = list(p) + list(o)
+            tokens[i, : len(seq)] = seq
+            resp_mask[i, len(p) : len(seq)] = True
+        return RolloutBatch(
+            tokens=tokens,
+            resp_mask=resp_mask,
+            advantages=adv.astype(np.float32),
+            rewards=rewards,
+            responses=outs,
+            problems=probs,
+            stats=stats,
+            gen_time_s=gen_time,
+        )

@@ -1,0 +1,191 @@
+"""Actor–learner RL trainer (VeRL-equivalent loop, single SPMD program).
+
+Per step: rollout (speculative or baseline) → verifiable rewards →
+group advantages → GRPO update → drafter window refresh keyed by the
+optimizer's update norm (paper §4.1.2). The drafter needs *no retraining*
+after policy updates — that is the paper's central systems claim.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.budget import LatencyModel
+from repro.core.drafter import DrafterConfig, SuffixDrafter
+from repro.core.length_policy import LengthPolicy, LengthPolicyConfig
+from repro.core.spec_engine import EngineConfig, SpecEngine
+from repro.data.loader import PromptLoader
+from repro.data.tasks import Task
+from repro.models import model as M
+from repro.models.layers import split_tree
+from repro.optim import adamw
+from repro.data.tokenizer import EOS, PAD
+from repro.rl.grpo import (
+    GRPOConfig,
+    compute_old_logprobs,
+    make_sft_step,
+    make_train_step,
+)
+from repro.rl.rollout import RolloutBatch, RolloutWorker
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 30
+    prompts_per_step: int = 8
+    group_size: int = 4
+    max_new_tokens: int = 64
+    temperature: float = 0.0
+    seed: int = 0
+    # substrate configs
+    grpo: GRPOConfig = field(default_factory=GRPOConfig)
+    optim: adamw.AdamWConfig = field(default_factory=lambda: adamw.AdamWConfig(lr=1e-3))
+    engine: EngineConfig = field(default_factory=EngineConfig)
+    drafter: DrafterConfig = field(default_factory=DrafterConfig)
+    ckpt_path: str = ""
+    ckpt_every: int = 0
+    # SFT warmup: stands in for the pretrained checkpoint the paper
+    # post-trains (we cannot pretrain on CPU); 0 disables.
+    sft_warmup_steps: int = 0
+    sft_lr: float = 3e-3
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        task: Task,
+        tcfg: TrainerConfig,
+        params=None,
+    ) -> None:
+        self.cfg = cfg
+        self.task = task
+        self.tcfg = tcfg
+        key = jax.random.key(tcfg.seed)
+        if params is None:
+            ptree = M.init_params(cfg, key)
+            params, _ = split_tree(ptree)
+        self.params = params
+        self.opt_state = adamw.init_state(params)
+        tcfg.engine.temperature = tcfg.temperature
+        tcfg.engine.max_new_tokens = tcfg.max_new_tokens
+        self.engine = SpecEngine(
+            params, cfg, tcfg.engine,
+            drafter=SuffixDrafter(tcfg.drafter),
+            length_policy=LengthPolicy(),
+        )
+        self.worker = RolloutWorker(self.engine, task, tcfg.group_size)
+        self.loader = PromptLoader(task, tcfg.prompts_per_step, seed=tcfg.seed)
+        gcfg = GRPOConfig(
+            clip_eps=tcfg.grpo.clip_eps, kl_coef=tcfg.grpo.kl_coef,
+            entropy_coef=tcfg.grpo.entropy_coef, group_size=tcfg.group_size,
+        )
+        self._train_step = jax.jit(make_train_step(cfg, gcfg, tcfg.optim))
+        self._old_lp = jax.jit(
+            lambda p, t: compute_old_logprobs(p, cfg, t)
+        )
+        self.history: List[Dict[str, Any]] = []
+
+    def sft_warmup(self, steps: Optional[int] = None) -> float:
+        """Supervised warmup on task target responses (pretraining
+        stand-in, see TrainerConfig.sft_warmup_steps). Returns final CE."""
+        tcfg = self.tcfg
+        n = steps if steps is not None else tcfg.sft_warmup_steps
+        if n <= 0:
+            return float("nan")
+        ocfg = adamw.AdamWConfig(lr=tcfg.sft_lr, warmup_steps=2)
+        sft_step = jax.jit(make_sft_step(self.cfg, ocfg))
+        opt = adamw.init_state(self.params)
+        probs = self.loader.problems
+        # static batch: all problems with their expected responses
+        seqs, masks = [], []
+        S = 0
+        for p in probs:
+            want = self.task.expected_response(p)
+            seq = list(p.prompt) + list(want) + [EOS]
+            S = max(S, len(seq))
+        S = ((S + 31) // 32) * 32
+        tok = np.full((len(probs), S), PAD, np.int32)
+        rmask = np.zeros((len(probs), S), bool)
+        for i, p in enumerate(probs):
+            want = self.task.expected_response(p)
+            seq = list(p.prompt) + list(want) + [EOS]
+            tok[i, : len(seq)] = seq
+            rmask[i, len(p.prompt) : len(seq)] = True
+        batch = {
+            "tokens": jnp.asarray(tok),
+            "resp_mask": jnp.asarray(rmask),
+        }
+        loss = float("nan")
+        for _ in range(n):
+            self.params, opt, m = sft_step(self.params, opt, batch)
+            loss = float(m["sft_loss"])
+        self.engine.set_params(self.params)
+        return loss
+
+    def run(self, steps: Optional[int] = None) -> List[Dict[str, Any]]:
+        tcfg = self.tcfg
+        n_steps = steps or tcfg.steps
+        if tcfg.sft_warmup_steps > 0 and not self.history:
+            self.sft_warmup()
+        key = jax.random.key(tcfg.seed + 1)
+        step = 0
+        epoch = 0
+        update_norm = 0.0
+        while step < n_steps:
+            self.engine.begin_iteration(epoch, update_norm)
+            for problems in self.loader.epoch_batches(epoch):
+                if step >= n_steps:
+                    break
+                key, kr = jax.random.split(key)
+                batch = self.worker.rollout(
+                    problems, key=kr, max_new_tokens=tcfg.max_new_tokens
+                )
+                t0 = time.perf_counter()
+                tokens = jnp.asarray(batch.tokens)
+                train_batch = {
+                    "tokens": tokens,
+                    "resp_mask": jnp.asarray(batch.resp_mask),
+                    "advantages": jnp.asarray(batch.advantages),
+                    "old_logprobs": self._old_lp(self.params, tokens),
+                }
+                self.params, self.opt_state, metrics = self._train_step(
+                    self.params, self.opt_state, train_batch
+                )
+                jax.block_until_ready(metrics["loss"])
+                train_time = time.perf_counter() - t0
+                update_norm = float(metrics["update_norm"])
+                self.engine.set_params(self.params)
+                rec = {
+                    "step": step,
+                    "epoch": epoch,
+                    "reward_mean": float(batch.rewards.mean()),
+                    "reward_max": float(batch.rewards.max()),
+                    "gen_time_s": batch.gen_time_s,
+                    "train_time_s": train_time,
+                    "n_fwd": batch.stats.n_fwd,
+                    "n_toks_proposed": batch.stats.n_toks_proposed,
+                    "accept_per_round": batch.stats.acceptance_per_round,
+                    "emitted_per_fwd": batch.stats.mean_accepted_per_fwd,
+                    "loss": float(metrics["loss"]),
+                    "grad_norm": float(metrics["grad_norm"]),
+                }
+                self.history.append(rec)
+                if tcfg.ckpt_every and (step + 1) % tcfg.ckpt_every == 0 and tcfg.ckpt_path:
+                    from repro.checkpoint import save
+
+                    save(
+                        f"{tcfg.ckpt_path}/step{step+1}.npz",
+                        {"params": self.params},
+                        {"step": step + 1},
+                    )
+                step += 1
+            epoch += 1
+        return self.history

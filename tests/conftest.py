@@ -1,0 +1,31 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run sets its own flags in a
+# separate process); keep any user XLA_FLAGS but never the 512-device one.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs.base import ModelConfig  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def tiny_dense() -> ModelConfig:
+    return ModelConfig(
+        name="tiny-dense", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+        vocab_pad_multiple=8, dtype="float32",
+    )
+
+
+def make_params(cfg: ModelConfig, seed: int = 0):
+    from repro.models import model as M
+    from repro.models.layers import split_tree
+
+    params, axes = split_tree(M.init_params(cfg, jax.random.key(seed)))
+    return params

@@ -1,0 +1,103 @@
+"""Eq. 1-9 budget machinery: solver optimality + the paper's four
+observations (§4.2.2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.budget import (
+    AcceptanceModel,
+    LatencyModel,
+    objective,
+    optimal_budgets,
+    per_round_budgets,
+    residual_tokens,
+    solve_budgets,
+)
+
+
+def test_latency_fit_recovers_linear_model():
+    rng = np.random.default_rng(0)
+    n = rng.integers(1, 500, size=200).astype(float)
+    t = 3.0 + 0.05 * n + rng.normal(0, 0.01, size=200)
+    lm = LatencyModel.fit(n, t)
+    assert abs(lm.c_base - 3.0) < 0.1
+    assert abs(lm.c_tok - 0.05) < 0.01
+    assert lm.mean_relative_error(n, t) < 0.12  # paper: ~12% MRE
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    lengths=st.lists(st.floats(10, 5000), min_size=1, max_size=8),
+    c_base=st.floats(0.1, 50),
+    c_tok=st.floats(1e-4, 0.5),
+    k=st.floats(0.2, 1.0),
+    alpha=st.floats(0.2, 2.0),
+)
+def test_solver_minimizes_objective(lengths, c_base, c_tok, k, alpha):
+    lat = LatencyModel(c_base=c_base, c_tok=c_tok)
+    l = np.asarray(lengths)
+    a = np.full(len(l), alpha)
+    kk = np.full(len(l), k)
+    p, n_star = solve_budgets(l, lat, a, kk)
+    J0 = objective(n_star, l, a, kk, lat)
+    lo = float(np.max(l * (1.0 - kk))) + 1e-6
+    hi = float(np.max(l))
+    for nn in np.linspace(lo + 1e-3, hi, 17):
+        assert J0 <= objective(float(nn), l, a, kk, lat) + 1e-4 * max(J0, 1.0)
+
+
+def test_observation_1_budget_grows_with_length():
+    lat = LatencyModel(c_base=10.0, c_tok=0.02)
+    l = np.array([50.0, 200.0, 800.0, 3200.0])
+    p, _ = solve_budgets(l, lat)
+    assert np.all(np.diff(p) >= -1e-9)
+
+
+def test_observation_2_short_requests_skip():
+    lat = LatencyModel(c_base=10.0, c_tok=0.02)
+    l = np.array([10.0, 4000.0])
+    p, n_star = solve_budgets(l, lat)
+    assert p[0] == 0.0 and l[0] <= n_star
+
+
+def test_observation_3_weak_drafter_shrinks_budget():
+    lat = LatencyModel(c_base=10.0, c_tok=0.02)
+    l = np.array([500.0, 2000.0])
+    p_strong, _ = solve_budgets(l, lat, k=np.array([0.95, 0.95]))
+    p_weak, _ = solve_budgets(l, lat, k=np.array([0.2, 0.2]))
+    assert p_weak.sum() < p_strong.sum()
+
+
+def test_observation_4_token_cost_dominant_regime():
+    lat = LatencyModel(c_base=1e-4, c_tok=1.0)
+    l = np.array([100.0, 1000.0])
+    p, n_star = solve_budgets(l, lat)
+    assert p.sum() < 1e-2  # speculation never pays when c_tok >> c_base
+    lat2 = LatencyModel(c_base=100.0, c_tok=1e-5)
+    p2, n2 = solve_budgets(l, lat2)
+    assert p2[-1] > 0 and n2 < l.max()  # base-cost regime: cut N_fwd
+
+
+def test_acceptance_saturates():
+    am = AcceptanceModel(alpha=1.0, k=0.8)
+    l = 100.0
+    a_small = am.accepted(10.0, l)
+    a_big = am.accepted(1e6, l)
+    assert a_small < a_big <= 0.8 * l + 1e-6
+
+
+def test_residual_consistent_with_budget():
+    l = np.array([2000.0])
+    a = np.array([1.0])
+    k = np.array([0.8])
+    n = 900.0
+    p = optimal_budgets(n, l, a, k)
+    r = residual_tokens(n, l, a, k, p)
+    np.testing.assert_allclose(r, n, rtol=1e-6)
+
+
+def test_per_round_budgets_zero_for_skipped():
+    p = np.array([0.0, 120.0])
+    out = per_round_budgets(p, [50.0, 600.0], round_cap=16)
+    assert out[0] == 0 and 1 <= out[1] <= 16

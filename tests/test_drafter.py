@@ -1,0 +1,93 @@
+"""Drafter manager: scopes, windows, routing, adaptation."""
+
+import numpy as np
+import pytest
+
+from repro.core.drafter import DrafterConfig, PrefixTrie, SuffixDrafter
+from repro.core.length_policy import LengthPolicy, LengthPolicyConfig
+
+
+def test_problem_scope_isolation():
+    d = SuffixDrafter(DrafterConfig(scope="problem", min_match=1))
+    d.observe_rollout("p1", [1, 2, 3, 4, 5], 0)
+    d.observe_rollout("p2", [1, 2, 3, 9, 9], 0)
+    s1 = d.new_session("p1", [1, 2, 3])
+    s2 = d.new_session("p2", [1, 2, 3])
+    assert s1.propose(2) == [4, 5]
+    assert s2.propose(2) == [9, 9]
+
+
+def test_global_scope_mixes():
+    d = SuffixDrafter(DrafterConfig(scope="global", min_match=1))
+    d.observe_rollout("p1", [1, 2, 3, 4], 0)
+    d.observe_rollout("p2", [1, 2, 3, 4], 0)
+    d.observe_rollout("p3", [1, 2, 3, 9], 0)
+    s = d.new_session("anything", [1, 2, 3])
+    assert s.propose(1) == [4]  # majority continuation across problems
+
+
+def test_sliding_window_evicts_after_refresh():
+    d = SuffixDrafter(DrafterConfig(scope="problem", window_size=2, min_match=1))
+    d.observe_rollout("p", [1, 2, 3, 7], 0)
+    d.observe_rollout("p", [1, 2, 3, 8], 1)
+    d.observe_rollout("p", [1, 2, 3, 8], 2)  # evicts the "7" rollout
+    d.begin_iteration(3)
+    s = d.new_session("p", [1, 2, 3])
+    assert s.propose(1) == [8]
+    # the evicted continuation must be gone entirely
+    tree = d._trees[d._key("p")]
+    assert tree.n_docs == 2
+
+
+def test_request_scope_catches_self_repetition():
+    d = SuffixDrafter(DrafterConfig(scope="problem+request", min_match=2))
+    s = d.new_session("new-problem", [5, 6])
+    # no history at all; model generates a repeating pattern
+    s.feed([1, 2, 3, 1, 2, 3, 1, 2])
+    prop = s.propose(3)
+    assert prop[:1] == [3]  # request tree predicts the cycle
+
+
+def test_adaptive_window_shrinks_on_big_updates():
+    d = SuffixDrafter(
+        DrafterConfig(
+            scope="problem", window_size=16, adapt_window_to_updates=True,
+            window_gamma=1.0, min_window=4,
+        )
+    )
+    for i in range(20):
+        d.observe_rollout("p", [1, 2, 3, i % 5], i)
+    d.begin_iteration(21, update_norm=3.0)  # large policy move
+    assert d._window_size == max(4, round(16 / 4))
+    d.begin_iteration(22, update_norm=0.0)
+    assert d._window_size == 16
+
+
+def test_prefix_trie_routes_by_prompt():
+    trie = PrefixTrie()
+    trie.insert([1, 2, 3], "pA")
+    trie.insert([1, 2, 9], "pB")
+    assert trie.route([1, 2, 3, 4, 5]) == "pA"
+    assert trie.route([1, 2, 9]) == "pB"
+    assert trie.route([7, 7]) is None
+    d = SuffixDrafter(DrafterConfig(scope="problem", use_prefix_trie=True, min_match=1))
+    d.register_prompt("pA", [1, 2, 3])
+    d.observe_rollout("pA", [1, 2, 3, 4, 4], 0)
+    s = d.new_session(problem_id=None, prompt=[1, 2, 3])  # routed via trie
+    assert s.propose(1) == [4]
+
+
+def test_length_policy_runtime_escalation():
+    lp = LengthPolicy(LengthPolicyConfig(min_history=4))
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        lp.observe("short_p", float(rng.normal(20, 2)))
+        lp.observe("med_p", float(rng.normal(100, 10)))
+        lp.observe("long_p", float(rng.normal(500, 40)))
+    b_short = lp.budget("short_p", 5)
+    b_long = lp.budget("long_p", 150)
+    assert b_short == lp.cfg.budget_short  # Short skips speculation
+    assert b_long > b_short
+    # a "short" problem that has already run past every historical length
+    # must escalate to Long
+    assert lp.classify("short_p", 800.0) == 2

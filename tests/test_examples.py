@@ -1,0 +1,39 @@
+"""Examples must keep running (bit-rot guards, quick settings)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+
+
+def _run(args, timeout=300):
+    return subprocess.run(
+        [sys.executable] + args, cwd=ROOT, env=ENV, timeout=timeout,
+        capture_output=True, text=True,
+    )
+
+
+def test_quickstart_lossless():
+    r = _run(["examples/quickstart.py"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "LOSSLESS" in r.stdout
+
+
+def test_serve_spec_example():
+    r = _run(["examples/serve_spec.py", "--rounds", "2", "--batch", "4"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "round 1" in r.stdout
+
+
+def test_rl_math_short():
+    r = _run(
+        ["examples/rl_math.py", "--steps", "2", "--sft-warmup", "5",
+         "--max-new", "24"],
+        timeout=420,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "total rollout time" in r.stdout

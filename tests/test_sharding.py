@@ -1,0 +1,72 @@
+"""Sharding rules + cache axes trees (structure-level; the real mesh is
+exercised by launch/dryrun.py in its own process)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, smoke_variant
+from repro.launch import sharding as sh
+from repro.launch.mesh import make_local_mesh
+from repro.models import model as M
+
+
+def test_spec_for_divisibility_guard():
+    mesh = make_local_mesh()  # (1,1) data×model
+    # every axis size is 1 → everything "shards" trivially
+    spec = sh.spec_for((16, 128), ("vocab", "embed"), mesh)
+    assert isinstance(spec, P)
+
+
+def test_spec_for_drops_missing_axes():
+    mesh = make_local_mesh()
+    spec = sh.spec_for((8, 4), ("batch", None), mesh)
+    # 'pod' missing on the local mesh: filtered out, 'data' kept
+    assert spec[0] in ("data", ("data",), None)
+
+
+def test_cache_axes_tree_matches_cache_structure():
+    for arch in ("mixtral-8x7b", "recurrentgemma-9b", "xlstm-125m", "yi-9b"):
+        cfg = smoke_variant(get_config(arch))
+        cache = jax.eval_shape(lambda c=cfg: M.init_cache(c, 2, 64))
+        axes = M.cache_logical_axes(cfg, mesh_model=16)
+        flat_c = jax.tree.leaves(cache)
+        flat_a = jax.tree.leaves(
+            axes,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x),
+        )
+        assert len(flat_c) == len(flat_a), arch
+        for c, a in zip(flat_c, flat_a):
+            assert len(c.shape) == len(a), (arch, c.shape, a)
+
+
+def test_param_axes_rank_matches_shapes():
+    from repro.launch.workloads import param_specs
+
+    for arch in ("qwen2-1.5b", "arctic-480b", "seamless-m4t-medium"):
+        cfg = smoke_variant(get_config(arch))
+        shapes, axes = param_specs(cfg)
+        for s, a in zip(jax.tree.leaves(shapes), jax.tree.leaves(
+            axes,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x),
+        )):
+            assert len(s.shape) == len(a), (arch, s.shape, a)
+
+
+def test_activation_constraint_noop_outside_mesh():
+    x = jnp.ones((4, 4))
+    with sh.use_activation_spec(None):
+        assert sh.constrain(x) is x
+
+
+def test_skip_reasons():
+    from repro.launch.workloads import SHAPES, skip_reason
+
+    assert skip_reason(get_config("yi-9b"), SHAPES["long_500k"])
+    assert skip_reason(get_config("xlstm-125m"), SHAPES["long_500k"]) is None
+    assert skip_reason(get_config("mixtral-8x7b"), SHAPES["long_500k"]) is None
+    assert skip_reason(get_config("yi-9b"), SHAPES["train_4k"]) is None

@@ -1,0 +1,129 @@
+"""End-to-end speculative engine: losslessness + speedup + robustness."""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_params
+from repro.configs.base import ModelConfig
+from repro.core.drafter import DrafterConfig, SuffixDrafter
+from repro.core.spec_engine import EngineConfig, SpecEngine
+
+BASE = dict(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=64, vocab_pad_multiple=8, dtype="float32",
+)
+PROMPTS = [[2, 3, 4, 5], [7, 8], [9, 10, 11, 12, 13, 14]]
+PIDS = ["a", "b", "c"]
+
+
+def _engines(cfg, max_new=40):
+    params = make_params(cfg)
+    eng0 = SpecEngine(
+        params, cfg,
+        EngineConfig(spec_enabled=False, max_new_tokens=max_new, eos_token=1),
+    )
+    eng1 = SpecEngine(
+        params, cfg,
+        EngineConfig(
+            spec_enabled=True, max_new_tokens=max_new, eos_token=1,
+            use_budget_solver=False,
+        ),
+        drafter=SuffixDrafter(DrafterConfig(scope="problem+request", min_match=2)),
+    )
+    return eng0, eng1
+
+
+def _warm(eng, outs):
+    for i in range(7):
+        for pid, p, o in zip(PIDS, PROMPTS, outs):
+            if i == 0:
+                eng.drafter.observe_rollout(pid, list(p) + list(o), epoch=0)
+            eng.length_policy.observe(pid, len(o))
+
+
+@pytest.mark.parametrize(
+    "family_kw",
+    [
+        dict(family="dense"),
+        dict(
+            family="hybrid", block_pattern=("rglru", "rglru", "local_attn"),
+            num_layers=3, local_window=8, rnn_width=64,
+        ),
+        dict(
+            family="ssm", block_pattern=("mlstm", "slstm"), d_ff=0,
+            num_layers=2, rnn_width=64,
+        ),
+    ],
+    ids=["dense", "hybrid", "ssm"],
+)
+def test_greedy_lossless_and_fewer_fwd(family_kw):
+    cfg = ModelConfig(name="t", **{**BASE, **family_kw})
+    eng0, eng1 = _engines(cfg, max_new=30)
+    out0, st0 = eng0.generate(PROMPTS, PIDS, key=jax.random.key(5))
+    _warm(eng1, out0)
+    out1, st1 = eng1.generate(PROMPTS, PIDS, key=jax.random.key(6))
+    assert out0 == out1, "speculation must be lossless at T=0"
+    assert st1.n_fwd < st0.n_fwd, "warmed drafter must cut forward passes"
+
+
+def test_acceptance_stats_consistent():
+    cfg = ModelConfig(name="t", family="dense", **BASE)
+    eng0, eng1 = _engines(cfg, max_new=25)
+    out0, _ = eng0.generate(PROMPTS, PIDS, key=jax.random.key(5))
+    _warm(eng1, out0)
+    out1, st = eng1.generate(PROMPTS, PIDS, key=jax.random.key(6))
+    assert st.n_accepted <= st.n_drafted
+    assert st.n_toks_emitted == sum(len(o) for o in out1)
+    assert st.mean_accepted_per_fwd >= 1.0 - 1e-9
+
+
+def test_stochastic_spec_runs_and_terminates():
+    cfg = ModelConfig(name="t", family="dense", **BASE)
+    params = make_params(cfg)
+    eng = SpecEngine(
+        params, cfg,
+        EngineConfig(
+            spec_enabled=True, max_new_tokens=20, eos_token=1,
+            temperature=0.9, use_budget_solver=False,
+        ),
+        drafter=SuffixDrafter(DrafterConfig(scope="problem+request")),
+    )
+    outs, st = eng.generate(PROMPTS, PIDS, key=jax.random.key(0))
+    assert all(len(o) <= 20 for o in outs)
+    assert st.n_fwd >= 1
+
+
+def test_unlimited_budget_ablation_more_tokens():
+    cfg = ModelConfig(name="t", family="dense", **BASE)
+    params = make_params(cfg)
+    common = dict(max_new_tokens=25, eos_token=1, use_budget_solver=False)
+    e_unl = SpecEngine(
+        params, cfg, EngineConfig(unlimited_budget=True, **common),
+        drafter=SuffixDrafter(DrafterConfig(scope="problem+request", min_match=1)),
+    )
+    e_ar = SpecEngine(params, cfg, EngineConfig(spec_enabled=False, **common))
+    out_ar, _ = e_ar.generate(PROMPTS, PIDS, key=jax.random.key(1))
+    for pid, p, o in zip(PIDS, PROMPTS, out_ar):
+        e_unl.drafter.observe_rollout(pid, list(p) + list(o), 0)
+        e_unl.length_policy.observe(pid, len(o))
+    out_unl, st = e_unl.generate(PROMPTS, PIDS, key=jax.random.key(2))
+    assert out_unl == out_ar  # still lossless
+    # unlimited budget proposes the max draft every round for all rows
+    assert st.n_drafted >= st.n_rounds  # proposes aggressively
+
+
+def test_effective_batch_collapse_recorded():
+    cfg = ModelConfig(name="t", family="dense", **BASE)
+    params = make_params(cfg)
+    eng = SpecEngine(
+        params, cfg,
+        EngineConfig(spec_enabled=False, max_new_tokens=30, eos_token=1),
+    )
+    outs, st = eng.generate(
+        PROMPTS, PIDS, key=jax.random.key(5), collect_effective_batch=True
+    )
+    assert len(st.effective_batch) == st.n_rounds
+    assert all(
+        a >= b for a, b in zip(st.effective_batch, st.effective_batch[1:])
+    ), "effective batch must be non-increasing (Fig. 1)"

@@ -1,0 +1,51 @@
+"""Suffix array baseline: correctness vs the tree + brute force."""
+
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.suffix_array import SuffixArray
+from repro.core.suffix_tree import SuffixTree
+
+tokens = st.integers(min_value=0, max_value=5)
+doc = st.lists(tokens, min_size=1, max_size=40)
+
+
+def test_sa_order_is_sorted():
+    sa = SuffixArray()
+    sa.add_document([3, 1, 2, 1, 2])
+    t = list(sa.text)
+    order = [list(t[int(i):]) for i in sa.sa]
+    assert order == sorted(order)
+
+
+@settings(max_examples=30, deadline=None)
+@given(docs=st.lists(doc, min_size=1, max_size=3), ctx=st.lists(tokens, min_size=1, max_size=20))
+def test_sa_matches_tree_longest_suffix(docs, ctx):
+    sa = SuffixArray()
+    tr = SuffixTree()
+    for d in docs:
+        sa.add_document(d)
+        tr.add_document(d)
+    assert sa.longest_suffix_match(ctx) == tr.longest_suffix_match(ctx)
+
+
+def test_sa_find_range_counts_occurrences():
+    sa = SuffixArray()
+    sa.add_document([1, 2, 1, 2, 1])
+    lo, hi = sa.find_range([1, 2])
+    assert hi - lo == 2
+    lo, hi = sa.find_range([1])
+    assert hi - lo == 3
+    lo, hi = sa.find_range([9])
+    assert hi == lo
+
+
+def test_sa_propose_frequency_weighted():
+    sa = SuffixArray()
+    sa.add_document([1, 2, 7])
+    sa.add_document([1, 2, 9])
+    sa.add_document([1, 2, 9])
+    assert sa.propose([5, 1, 2], 1) == [9]

@@ -1,0 +1,128 @@
+"""Property tests for the online suffix tree (the paper's core index)."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.suffix_tree import SuffixTree
+
+
+def brute_longest_suffix(docs, ctx):
+    for L in range(len(ctx), 0, -1):
+        pat = ctx[-L:]
+        for d in docs:
+            for i in range(len(d) - L + 1):
+                if d[i : i + L] == pat:
+                    return L
+    return 0
+
+
+tokens = st.integers(min_value=0, max_value=5)
+doc = st.lists(tokens, min_size=1, max_size=50)
+
+
+@settings(max_examples=60, deadline=None)
+@given(docs=st.lists(doc, min_size=1, max_size=4), ctx=st.lists(tokens, min_size=1, max_size=30))
+def test_longest_suffix_matches_bruteforce(docs, ctx):
+    t = SuffixTree()
+    for e, d in enumerate(docs):
+        t.add_document(d, epoch=e)
+    assert t.longest_suffix_match(ctx) == brute_longest_suffix(docs, ctx)
+
+
+@settings(max_examples=40, deadline=None)
+@given(docs=st.lists(doc, min_size=1, max_size=3), ctx=st.lists(tokens, min_size=1, max_size=25))
+def test_propose_continuation_exists_in_corpus(docs, ctx):
+    t = SuffixTree()
+    for e, d in enumerate(docs):
+        t.add_document(d, epoch=e)
+    stt = t.match_state()
+    stt.feed_many(ctx)
+    prop = stt.propose(6)
+    if stt.match_len and prop:
+        # propose may fall back to a shorter suffix when the deepest
+        # match has no continuation: the proposal must extend SOME
+        # suffix of the context that occurs in the corpus.
+        ok = False
+        for L in range(stt.match_len, 0, -1):
+            pat = ctx[-L:] + prop
+            if any(
+                d[i : i + len(pat)] == pat
+                for d in docs
+                for i in range(len(d) - len(pat) + 1)
+            ):
+                ok = True
+                break
+        assert ok, (docs, ctx, stt.match_len, prop)
+
+
+def test_streaming_equals_batch():
+    random.seed(3)
+    t = SuffixTree()
+    for e in range(3):
+        t.add_document([random.randrange(4) for _ in range(60)], epoch=e)
+    ctx = [random.randrange(4) for _ in range(100)]
+    stt = t.match_state(resync_cap=128)
+    for i, tok in enumerate(ctx):
+        ml = stt.feed(tok)
+        assert ml == brute_longest_suffix(
+            [list(d) for d in _docs(t)], ctx[: i + 1]
+        )
+
+
+def _docs(tree):
+    out, cur = [], []
+    for tok in tree.text:
+        if tok < 0:
+            out.append(cur)
+            cur = []
+        else:
+            cur.append(tok)
+    if cur:
+        out.append(cur)
+    return out
+
+
+def test_online_mutation_resync():
+    random.seed(1)
+    t = SuffixTree()
+    t.add_document([random.randrange(5) for _ in range(30)], 0)
+    stt = t.match_state()
+    for i in range(300):
+        tok = random.randrange(5)
+        stt.feed(tok)
+        t.extend(tok)
+        if i % 11 == 0:
+            t.add_document([random.randrange(5) for _ in range(10)], 1)
+        if i % 5 == 0:
+            stt.propose(4)  # must never crash on stale pointers
+
+
+def test_epoch_decay_prefers_recent():
+    t = SuffixTree(epoch_decay=0.5)
+    # old epoch says 1,2,3 -> 7 twice; new epoch says 1,2,3 -> 9 once each
+    t.add_document([1, 2, 3, 7], epoch=0)
+    t.add_document([1, 2, 3, 7], epoch=0)
+    t.add_document([1, 2, 3, 9], epoch=4)
+    stt = t.match_state()
+    stt.feed_many([1, 2, 3])
+    # weights: 7 -> 2 * 0.5^4 = 0.125 ; 9 -> 1 * 0.5^0 = 1.0
+    assert stt.propose(1) == [9]
+    t2 = SuffixTree(epoch_decay=1.0)
+    t2.add_document([1, 2, 3, 7], epoch=0)
+    t2.add_document([1, 2, 3, 7], epoch=0)
+    t2.add_document([1, 2, 3, 9], epoch=4)
+    s2 = t2.match_state()
+    s2.feed_many([1, 2, 3])
+    assert s2.propose(1) == [7]  # frequency wins without decay
+
+
+def test_no_cross_document_bridging():
+    t = SuffixTree()
+    t.add_document([1, 2], 0)
+    t.add_document([3, 4], 0)
+    assert t.longest_suffix_match([2, 3]) == 1  # "2,3" must not match
+    stt = t.match_state()
+    stt.feed_many([1, 2])
+    assert stt.propose(5) == []  # separator stops the walk

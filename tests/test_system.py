@@ -1,0 +1,129 @@
+"""End-to-end system behaviour: the paper's central claims at toy scale.
+
+1. DAS is lossless: greedy rollouts are token-identical with and without
+   speculation (⇒ identical training curves, Figs. 10/11).
+2. DAS cuts forward passes (the hardware-independent speedup metric).
+3. The drafter self-evolves: acceptance grows as history accumulates
+   (Fig. 4) with NO drafter retraining across policy updates.
+4. Long-tail: long rollouts get more budget than short ones (§4.2).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_params
+from repro.configs.base import ModelConfig
+from repro.core.budget import LatencyModel
+from repro.core.drafter import DrafterConfig, SuffixDrafter
+from repro.core.length_policy import LengthPolicy
+from repro.core.spec_engine import EngineConfig, SpecEngine
+from repro.data.tasks import PatternTask
+from repro.data.tokenizer import TOKENIZER
+from repro.rl.rollout import RolloutWorker
+
+CFG = ModelConfig(
+    name="sys", family="dense", num_layers=2, d_model=96, num_heads=4,
+    num_kv_heads=2, d_ff=192, vocab_size=TOKENIZER.vocab_size,
+    vocab_pad_multiple=8, dtype="float32",
+)
+
+
+def _task():
+    return PatternTask(n_problems=6, mean_len=14.0, sigma=0.7, max_len=40, seed=3)
+
+
+def test_das_rollout_identical_and_faster_over_epochs():
+    params = make_params(CFG)
+    task = _task()
+    probs = task.problems()
+
+    base = SpecEngine(
+        params, CFG,
+        EngineConfig(spec_enabled=False, max_new_tokens=40, eos_token=1),
+    )
+    das = SpecEngine(
+        params, CFG,
+        EngineConfig(
+            spec_enabled=True, max_new_tokens=40, eos_token=1,
+            use_budget_solver=False, max_draft=8, block_buckets=(0, 4, 8),
+        ),
+        drafter=SuffixDrafter(DrafterConfig(scope="problem+request", min_match=2)),
+    )
+    w_base = RolloutWorker(base, task, group_size=1)
+    w_das = RolloutWorker(das, task, group_size=1)
+
+    fwd_per_epoch = []
+    acc_per_epoch = []
+    for epoch in range(3):
+        das.begin_iteration(epoch)
+        kb = jax.random.key(100 + epoch)
+        b0 = w_base.rollout(probs, key=kb)
+        b1 = w_das.rollout(probs, key=kb)
+        assert b1.responses == b0.responses, "lossless at T=0"
+        np.testing.assert_array_equal(b1.rewards, b0.rewards)
+        fwd_per_epoch.append((b0.stats.n_fwd, b1.stats.n_fwd))
+        acc_per_epoch.append(b1.stats.acceptance_per_round)
+    # after the first epoch the drafter has history → fewer fwd passes
+    assert fwd_per_epoch[1][1] < fwd_per_epoch[1][0]
+    assert fwd_per_epoch[2][1] < fwd_per_epoch[2][0]
+    # acceptance grows once history exists (Fig. 4 phenomenology)
+    assert acc_per_epoch[1] > acc_per_epoch[0]
+
+
+def test_length_aware_budgets_favor_long_rollouts():
+    lp = LengthPolicy()
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        lp.observe("short", float(rng.normal(10, 1)))
+        lp.observe("long", float(rng.normal(300, 20)))
+    b_short = lp.budget("short", 3)
+    b_long = lp.budget("long", 50)
+    assert b_long > b_short
+    assert b_short == 0  # short generations skip speculation (Obs. 2)
+
+
+def test_modeled_latency_improves_with_das():
+    params = make_params(CFG)
+    task = _task()
+    probs = task.problems()
+    lat = LatencyModel(c_base=10.0, c_tok=0.01)
+    base = SpecEngine(
+        params, CFG, EngineConfig(spec_enabled=False, max_new_tokens=30, eos_token=1)
+    )
+    das = SpecEngine(
+        params, CFG,
+        EngineConfig(spec_enabled=True, max_new_tokens=30, eos_token=1,
+                     use_budget_solver=False),
+        drafter=SuffixDrafter(DrafterConfig(scope="problem+request", min_match=2)),
+        latency=lat,
+    )
+    w0 = RolloutWorker(base, task, group_size=1)
+    w1 = RolloutWorker(das, task, group_size=1)
+    k = jax.random.key(0)
+    b0 = w0.rollout(probs, key=k)
+    _ = w1.rollout(probs, key=k)  # epoch 0: builds history
+    das.begin_iteration(1)
+    b1 = w1.rollout(probs, key=k)
+    t0 = b0.stats.modeled_latency(lat)
+    t1 = b1.stats.modeled_latency(lat)
+    assert t1 < t0, (t0, t1)
+
+
+def test_policy_update_does_not_require_drafter_retrain():
+    """Insight-3: after a (simulated) policy update the same drafter
+    object keeps working — no retraining step exists at all."""
+    params = make_params(CFG, seed=0)
+    params2 = make_params(CFG, seed=1)  # "updated" policy
+    das = SpecEngine(
+        params, CFG,
+        EngineConfig(spec_enabled=True, max_new_tokens=15, eos_token=1,
+                     use_budget_solver=False),
+        drafter=SuffixDrafter(DrafterConfig(scope="problem+request")),
+    )
+    prompts = [[2, 3, 4]]
+    das.generate(prompts, ["p"], key=jax.random.key(0))
+    das.set_params(params2)
+    das.begin_iteration(1)
+    outs, st = das.generate(prompts, ["p"], key=jax.random.key(1))
+    assert st.n_fwd >= 1 and len(outs[0]) <= 15

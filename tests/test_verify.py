@@ -1,0 +1,99 @@
+"""Lossless verification semantics (greedy + stochastic)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.verify import verify_block
+
+
+def _mklogits(preds, V=16, sharp=50.0):
+    B, K1 = preds.shape
+    lg = np.full((B, K1, V), -sharp, np.float32)
+    for b in range(B):
+        for j in range(K1):
+            lg[b, j, preds[b, j]] = sharp
+    return jnp.asarray(lg)
+
+
+def test_greedy_accept_prefix():
+    # target argmax sequence: 5,6,7,8 ; drafts match first 2 then diverge
+    preds = np.array([[5, 6, 7, 8]])
+    logits = _mklogits(preds)
+    block = jnp.asarray([[9, 5, 6, 1]])  # head, d1=5 ok, d2=6 ok, d3=1 bad
+    res = verify_block(logits, block, jnp.asarray([3]))
+    assert int(res.accepted[0]) == 2
+    assert int(res.next_token[0]) == 7  # correction token at offset 2
+    assert list(np.asarray(res.out_tokens[0][:3])) == [5, 6, 7]
+    assert int(res.n_emitted[0]) == 3
+
+
+def test_greedy_full_accept_gets_bonus():
+    preds = np.array([[5, 6, 7, 8]])
+    logits = _mklogits(preds)
+    block = jnp.asarray([[9, 5, 6, 7]])
+    res = verify_block(logits, block, jnp.asarray([3]))
+    assert int(res.accepted[0]) == 3
+    assert int(res.next_token[0]) == 8  # bonus token
+
+
+def test_budget_caps_acceptance():
+    preds = np.array([[5, 6, 7, 8]])
+    logits = _mklogits(preds)
+    block = jnp.asarray([[9, 5, 6, 7]])
+    res = verify_block(logits, block, jnp.asarray([1]))  # budget 1
+    assert int(res.accepted[0]) == 1
+    assert int(res.next_token[0]) == 6
+
+
+def test_zero_budget_is_plain_decode():
+    preds = np.array([[5, 6]])
+    logits = _mklogits(preds)
+    block = jnp.asarray([[9, 0]])
+    res = verify_block(logits, block, jnp.asarray([0]))
+    assert int(res.accepted[0]) == 0
+    assert int(res.next_token[0]) == 5
+
+
+def test_inactive_rows_emit_nothing():
+    preds = np.array([[5, 6], [5, 6]])
+    logits = _mklogits(preds)
+    block = jnp.asarray([[9, 5], [9, 5]])
+    res = verify_block(
+        logits, block, jnp.asarray([1, 1]), active=jnp.asarray([True, False])
+    )
+    assert int(res.n_emitted[1]) == 0 and int(res.accepted[1]) == 0
+
+
+def test_stochastic_losslessness_distribution():
+    """Spec-decode output distribution == target distribution (the
+    Leviathan guarantee), chi-square-checked over many trials."""
+    V = 6
+    rng = np.random.default_rng(0)
+    logits_np = rng.normal(0, 1.2, size=(1, 2, V)).astype(np.float32)
+    logits = jnp.asarray(logits_np)
+    temp = 0.8
+    p_target = np.asarray(jax.nn.softmax(logits / temp, -1))[0, 0]
+    draft_tok = int(np.argmax(p_target))  # drafter proposes the mode
+    block = jnp.asarray([[0, draft_tok]])
+    budgets = jnp.asarray([1])
+
+    counts = np.zeros(V)
+    N = 4000
+    # batch the trials via vmap over keys
+    keys = jax.random.split(jax.random.key(42), N)
+
+    def one(key):
+        res = verify_block(logits, block, budgets, temperature=temp, key=key)
+        # first emitted token: draft if accepted else correction
+        return jnp.where(res.accepted[0] >= 1, draft_tok, res.next_token[0])
+
+    toks = np.asarray(jax.vmap(one)(keys))
+    for t in toks:
+        counts[int(t)] += 1
+    freq = counts / N
+    # chi-square against p_target
+    chi2 = N * np.sum((freq - p_target) ** 2 / np.maximum(p_target, 1e-9))
+    # 5 dof, p=0.001 critical ~ 20.5
+    assert chi2 < 25.0, (freq, p_target, chi2)
