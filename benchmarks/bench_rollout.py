@@ -1,0 +1,144 @@
+"""Makespan benchmark: lock-step waves vs continuous slot recycling.
+
+A long-tailed request set (≥2× length spread, fig01-style) is served
+with *equal device slots* B two ways:
+
+* **lock-step** — the requests are split into ⌈N/B⌉ padded batches
+  (longest-predicted-first, the same LPT courtesy the continuous
+  scheduler gets) and each wave runs ``SpecEngine.generate`` to
+  completion; every wave's makespan is its longest row.
+* **continuous** — all N requests stream through one B-slot pool
+  (``SpecEngine.generate_continuous``): finished rows' slots are
+  immediately re-prefilled, so only the global straggler bounds the
+  tail.
+
+Per-request outputs are asserted token-identical (greedy verification
+is lossless in both modes). Emits ``BENCH_rollout.json`` — makespan
+verify rounds, tokens/s and accept rate per mode — to seed the perf
+trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import make_engine, make_params, row
+
+SLOTS = 4
+
+
+def _requests(n_req: int, seed: int = 0):
+    """Long-tailed (lognormal) per-request token limits, ≥2× spread."""
+    rng = np.random.default_rng(seed)
+    lengths = np.clip(
+        rng.lognormal(mean=np.log(12.0), sigma=0.9, size=n_req), 4, 40
+    ).astype(int)
+    prompts, pids = [], []
+    for i in range(n_req):
+        pid = f"p{i % 4}"
+        prompts.append([2] + list(rng.integers(4, 20, size=4 + i % 4)))
+        pids.append(pid)
+    return prompts, pids, [int(x) for x in lengths]
+
+
+def _order_lpt(engine, pids, lengths):
+    """Longest-predicted-first order (same heuristic as the scheduler)."""
+    pred = [
+        (engine.length_policy.expected_length(pid), -i)
+        for i, pid in enumerate(pids)
+    ]
+    return sorted(range(len(pids)), key=lambda i: pred[i], reverse=True)
+
+
+def _warm(engine, prompts, pids, lengths, seed=100):
+    """One lock-step epoch to build drafter + length history."""
+    engine.begin_iteration(0)
+    engine.generate(prompts, pids, max_new_tokens=lengths,
+                    key=jax.random.key(seed))
+    engine.begin_iteration(1)
+
+
+def run(quick: bool = True):
+    params = make_params()
+    n_req = 12 if quick else 24
+    prompts, pids, lengths = _requests(n_req)
+    spread = max(lengths) / max(min(lengths), 1)
+    assert spread >= 2.0, f"workload must be long-tailed, spread={spread:.1f}"
+
+    results = {}
+    outputs = {}
+    for mode in ("lockstep", "continuous"):
+        eng = make_engine(params, spec=True)
+        _warm(eng, prompts, pids, lengths)
+        t0 = time.perf_counter()
+        if mode == "lockstep":
+            order = _order_lpt(eng, pids, lengths)
+            outs = [None] * n_req
+            rounds = fwd = drafted = accepted = toks = 0
+            for w0 in range(0, n_req, SLOTS):
+                wave = order[w0 : w0 + SLOTS]
+                o, st = eng.generate(
+                    [prompts[i] for i in wave],
+                    [pids[i] for i in wave],
+                    max_new_tokens=[lengths[i] for i in wave],
+                    key=jax.random.key(7),
+                )
+                for i, oi in zip(wave, o):
+                    outs[i] = oi
+                rounds += st.n_rounds
+                fwd += st.n_fwd
+                drafted += st.n_drafted
+                accepted += st.n_accepted
+                toks += st.n_toks_emitted
+        else:
+            outs, st = eng.generate_continuous(
+                prompts, pids, slots=SLOTS, max_new_tokens=lengths,
+                key=jax.random.key(7),
+            )
+            rounds, fwd = st.n_rounds, st.n_fwd
+            drafted, accepted = st.n_drafted, st.n_accepted
+            toks = st.n_toks_emitted
+        wall = time.perf_counter() - t0
+        outputs[mode] = outs
+        results[mode] = {
+            "makespan_rounds": int(rounds),
+            "n_fwd": int(fwd),
+            "tokens": int(toks),
+            "tokens_per_s": float(toks / max(wall, 1e-9)),
+            "accept_rate": float(accepted / max(drafted, 1)),
+            "wall_s": float(wall),
+        }
+
+    assert outputs["continuous"] == outputs["lockstep"], \
+        "continuous outputs must be token-identical to lock-step at T=0"
+    red = 1.0 - (
+        results["continuous"]["makespan_rounds"]
+        / max(results["lockstep"]["makespan_rounds"], 1)
+    )
+    payload = {
+        "slots": SLOTS,
+        "n_requests": n_req,
+        "length_spread": float(spread),
+        "reduction_makespan_rounds": float(red),
+        **results,
+    }
+    with open("BENCH_rollout.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    return [
+        row(
+            "bench_rollout/makespan_rounds_lockstep",
+            results["lockstep"]["makespan_rounds"],
+            f"slots={SLOTS};n_req={n_req};"
+            f"tok_s={results['lockstep']['tokens_per_s']:.0f}",
+        ),
+        row(
+            "bench_rollout/makespan_rounds_continuous",
+            results["continuous"]["makespan_rounds"],
+            f"slots={SLOTS};reduction={red:.2f};"
+            f"tok_s={results['continuous']['tokens_per_s']:.0f}",
+        ),
+    ]

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the full test suite on CPU (ROADMAP.md).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

@@ -5,7 +5,9 @@
 - budget: latency model + optimal speculative budgets (§4.2.1-4.2.2)
 - length_policy: Long/Medium/Short runtime classification (§4.2.3)
 - verify: lossless speculative verification (greedy + rejection sampling)
-- spec_engine: batched draft → verify → update rollout loop
+- scheduler: continuous-batching slot pool + LPT admission queue
+- spec_engine: draft → verify → update rollout loop (lock-step batched
+  `generate` and continuous-batching `serve`/`generate_continuous`)
 """
 
 from .budget import (
@@ -26,6 +28,7 @@ from .length_policy import (
     LengthPolicy,
     LengthPolicyConfig,
 )
+from .scheduler import Request, SlotScheduler
 from .suffix_array import SuffixArray
 from .suffix_tree import MatchState, SuffixTree
 
@@ -47,6 +50,8 @@ __all__ = [
     "SHORT",
     "LengthPolicy",
     "LengthPolicyConfig",
+    "Request",
+    "SlotScheduler",
     "SuffixArray",
     "MatchState",
     "SuffixTree",

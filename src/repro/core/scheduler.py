@@ -1,0 +1,140 @@
+"""Continuous-batching slot scheduler (the Fig. 1 remedy).
+
+The paper's core observation is that long-tailed rollout lengths make
+the *effective* batch collapse: short rows finish early, yet a lock-step
+batched engine keeps them as dead padded slots while the stragglers set
+the makespan. This module treats rollout as a continuously scheduled
+serving problem instead:
+
+* a fixed pool of ``n_slots`` device slots (one KV/state-cache row each),
+* an admission queue ordered **longest-predicted-first** using
+  ``LengthPolicy.expected_length`` — the classic LPT makespan heuristic:
+  stragglers start as early as possible, short rows backfill around them,
+* **slot recycling**: the moment a row finishes (EOS / token limit) its
+  slot is released and the next pending request is prefilled into it, so
+  the pool stays full through the long tail.
+
+The scheduler is pure host-side bookkeeping (no jax): the engine owns
+the device pool and asks the scheduler *which* request goes into *which*
+slot.  See ``SpecEngine.serve`` for the device side.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+QUEUED = "queued"
+RUNNING = "running"
+FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    """One generation request flowing through the slot pool.
+
+    The first block of fields is caller-provided; the rest is runtime
+    state owned by the scheduler/engine while the request is resident.
+    """
+
+    rid: int
+    problem_id: Any = None
+    prompt: List[int] = field(default_factory=list)
+    max_new_tokens: int = 256
+    predicted_len: Optional[float] = None  # admission-priority override
+
+    # -- runtime state -----------------------------------------------------
+    state: str = QUEUED
+    slot: int = -1  # device slot while RUNNING
+    output: List[int] = field(default_factory=list)  # EOS-stripped on finish
+    emitted: int = 0
+    rounds: int = 0  # verify rounds while resident
+    admit_round: int = -1  # pool round at admission
+    finish_round: int = -1
+    session: Any = None  # drafter DraftSession while RUNNING
+    head: int = -1  # last emitted-but-unverified token
+
+
+class SlotScheduler:
+    """Fixed pool of device slots + longest-predicted-first admission.
+
+    ``submit`` enqueues requests with priority = predicted final length
+    (``Request.predicted_len`` if given, else the length policy's
+    ``expected_length`` for the request's problem, else its token limit).
+    ``next_admissions`` pairs free slots with the longest queued requests;
+    ``release`` recycles a finished request's slot back into the pool.
+    Ties admit in submission order (deterministic).
+    """
+
+    def __init__(self, n_slots: int, length_policy=None) -> None:
+        if n_slots <= 0:
+            raise ValueError(f"n_slots must be positive, got {n_slots}")
+        self.n_slots = n_slots
+        self.length_policy = length_policy
+        self._free: List[int] = list(range(n_slots))
+        heapq.heapify(self._free)  # lowest slot first: deterministic
+        self._queue: List[Any] = []  # heap of (-priority, seq, Request)
+        self._seq = itertools.count()
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.n_submitted = 0
+        self.n_finished = 0
+
+    # -- queue -----------------------------------------------------------
+    def priority(self, req: Request) -> float:
+        """Predicted final length — larger admits earlier (LPT)."""
+        if req.predicted_len is not None:
+            return float(req.predicted_len)
+        if self.length_policy is not None:
+            return float(self.length_policy.expected_length(req.problem_id))
+        return float(req.max_new_tokens)
+
+    def submit(self, req: Request) -> None:
+        req.state = QUEUED
+        heapq.heappush(self._queue, (-self.priority(req), next(self._seq), req))
+        self.n_submitted += 1
+
+    # -- admission / recycling -------------------------------------------
+    def next_admissions(self) -> List[Request]:
+        """Pair each free slot with the longest-predicted queued request.
+
+        Returns the admitted requests (their ``slot`` fields set); empty
+        when the pool is full or the queue is drained.
+        """
+        out: List[Request] = []
+        while self._free and self._queue:
+            slot = heapq.heappop(self._free)
+            _, _, req = heapq.heappop(self._queue)
+            req.slot = slot
+            req.state = RUNNING
+            self.slots[slot] = req
+            out.append(req)
+        return out
+
+    def release(self, req: Request) -> int:
+        """Recycle a finished request's slot back into the free pool."""
+        slot = req.slot
+        if slot < 0 or self.slots[slot] is not req:
+            raise ValueError(f"request {req.rid} does not own a slot")
+        self.slots[slot] = None
+        heapq.heappush(self._free, slot)
+        req.state = FINISHED
+        req.slot = -1
+        self.n_finished += 1
+        return slot
+
+    # -- introspection ---------------------------------------------------
+    def running(self) -> List[Request]:
+        return [r for r in self.slots if r is not None]
+
+    @property
+    def n_running(self) -> int:
+        return sum(1 for r in self.slots if r is not None)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    def has_work(self) -> bool:
+        return bool(self._queue) or self.n_running > 0

@@ -1,9 +1,26 @@
-"""Batched speculative-decoding engine for RL rollouts (paper Fig. 3).
+"""Speculative-decoding rollout engine (paper Fig. 3) — lock-step and
+continuous-batching modes.
 
 Host side: per-request suffix-tree draft sessions (drafter.py), the
-length-aware budget policy (length_policy.py + budget.py), EOS/e-of-gen
-bookkeeping, and rollout statistics. Device side: jitted prefill and
-verify steps (models/model.py + verify.py).
+length-aware budget policy (length_policy.py + budget.py), vectorized
+EOS/emit bookkeeping, and rollout statistics. Device side: jitted
+prefill and verify steps (models/model.py + verify.py).
+
+Two serving modes share the same stepwise primitives (budget solve →
+host draft → device verify → vectorized consume):
+
+* ``generate``            — lock-step batched rollout: one fixed batch,
+  every row steps together; finished rows ride along as dead padded
+  slots until the stragglers drain (the Fig. 1 batch collapse).
+* ``serve`` / ``generate_continuous`` — continuous batching: a fixed
+  pool of device slots fed from an admission queue ordered
+  longest-predicted-first (scheduler.py). A finished row's slot is
+  immediately re-prefilled with the next pending request (slot
+  recycling keeps the effective batch full through the long tail), and
+  rounds are double-buffered: while the jitted verify for round *t*
+  executes on device, the host observes finished rollouts and pre-solves
+  round *t+1* budgets, materializing ``res.accepted`` only when the next
+  dispatch needs it.
 
 The verify block is padded to a *bucketed* size so each bucket compiles
 once: per-row budgets stay ragged (positions past a row's budget are
@@ -12,14 +29,17 @@ keeping XLA shapes static. Latency is accounted with the paper's model
 (Eq. 2): t = c_base·N_fwd + c_tok·N_toks + C, using *proposed* token
 counts (what a ragged-batching serving engine would execute), plus
 measured wall-clock on this host.
+
+Greedy (T=0) speculative verification is lossless, so both modes emit
+token-identical per-request outputs (continuous-vs-lock-step parity is
+asserted in tests/test_scheduler.py and benchmarks/bench_rollout.py).
 """
 
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +49,7 @@ from repro.configs.base import ModelConfig
 from repro.core.budget import LatencyModel, solve_budgets
 from repro.core.drafter import DrafterConfig, SuffixDrafter
 from repro.core.length_policy import LengthPolicy, LengthPolicyConfig
+from repro.core.scheduler import Request, SlotScheduler
 from repro.core.verify import sample_token, verify_block
 from repro.models import model as M
 
@@ -49,8 +70,8 @@ class EngineConfig:
 
 @dataclass
 class RolloutStats:
-    n_rounds: int = 0
-    n_fwd: int = 0  # forward passes (== rounds while any row active)
+    n_rounds: int = 0  # verify rounds (continuous: pool rounds = makespan)
+    n_fwd: int = 0  # forward passes (prefills + verify rounds)
     n_toks_proposed: int = 0  # Σ block tokens over active rows (ragged)
     n_toks_emitted: int = 0
     n_drafted: int = 0
@@ -71,6 +92,64 @@ class RolloutStats:
 
     def modeled_latency(self, lat: LatencyModel) -> float:
         return lat.t_total(self.n_fwd, self.n_toks_proposed)
+
+
+def _emit_scan(
+    cand: np.ndarray,  # (B, K+1) candidate emissions per row
+    n_new: np.ndarray,  # (B,) accepted + 1 (tokens the verify produced)
+    remaining: np.ndarray,  # (B,) max_new - emitted before this round
+    eos: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized EOS/token-limit scan (append-then-check semantics).
+
+    Each row appends its candidates in order, stopping after the first
+    EOS or once the emitted count reaches the row's limit (the token
+    that trips either condition is still appended). Returns
+
+      n_take — tokens to append this round,
+      alive  — rows that neither hit EOS nor their limit.
+
+    Rows outside the caller's active mask produce garbage (n_new is 1
+    there); the caller must AND ``alive`` with its own mask.
+    """
+    B, K1 = cand.shape
+    idx = np.arange(K1)[None, :]
+    valid = idx < n_new[:, None]
+    eos_hit = (cand == eos) & valid
+    has_eos = eos_hit.any(axis=1)
+    first_eos = np.where(has_eos, eos_hit.argmax(axis=1), K1)
+    cap = np.maximum(remaining, 1)  # append-then-check: >=1 lands
+    n_take = np.minimum(np.minimum(n_new, cap),
+                        np.where(has_eos, first_eos + 1, K1 + 1))
+    last = cand[np.arange(B), np.maximum(n_take - 1, 0)]
+    alive = (n_take == n_new) & (last != eos) & (n_take < remaining)
+    return n_take.astype(np.int64), alive
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _prompt_bucket(n: int) -> int:
+    """Prompt pad width (16-multiples). Both serving modes MUST use the
+    same bucketing: compiled prefill variants are keyed on (Tp, max_len)
+    and the lock-step/continuous parity + cache-geometry contract
+    (copy_cache_row) relies on identical padding."""
+    return max(16, _round_up(n, 16))
+
+
+def _cache_bucket(n: int) -> int:
+    """Cache length rounding (64-multiples), shared for the same reason."""
+    return _round_up(n, 64)
+
+
+def _as_max_new_array(mn, B: int) -> np.ndarray:
+    if isinstance(mn, (list, tuple, np.ndarray)):
+        arr = np.asarray(mn, np.int64)
+        if arr.shape != (B,):
+            raise ValueError(f"max_new_tokens shape {arr.shape} != ({B},)")
+        return arr
+    return np.full(B, int(mn), np.int64)
 
 
 class SpecEngine:
@@ -94,6 +173,14 @@ class SpecEngine:
         self._recurrent = M.has_recurrent(cfg)
         self._verify_jit: Dict[int, Any] = {}
         self._prefill_jit: Dict[Tuple[int, int], Any] = {}
+        self._write_slot_fn = None
+        # Per-(problem, partial-length) budget memo: with G samples per
+        # problem the per-row LengthPolicy calls are G-way duplicated
+        # every verify round; keyed on the history version so any new
+        # observation invalidates.
+        self._budget_memo: Dict[Tuple[Any, int], int] = {}
+        self._pred_memo: Dict[Any, float] = {}
+        self._memo_version = -1
         self.epoch = 0
 
     # -- jitted device steps ------------------------------------------------
@@ -150,6 +237,21 @@ class SpecEngine:
             self._verify_jit[K] = fn
         return fn
 
+    def _get_write_slot(self):
+        """Jitted slot-recycling cache write (one compile per pool
+        geometry; the slot index is traced)."""
+        if self._write_slot_fn is None:
+            cfg = self.cfg
+
+            def write_fn(dst, src, slot):
+                return M.copy_cache_row(cfg, dst, src, slot)
+
+            # Donating the pool lets XLA lower the write to an in-place
+            # dynamic-update-slice instead of copying the whole cache on
+            # every admission (the hot path of slot recycling).
+            self._write_slot_fn = jax.jit(write_fn, donate_argnums=(0,))
+        return self._write_slot_fn
+
     def _bucket(self, k: int) -> int:
         for b in self.engine.block_buckets:
             if k <= b:
@@ -160,30 +262,53 @@ class SpecEngine:
     def _round_budgets(
         self, problem_ids, emitted_lens, active, remaining
     ) -> np.ndarray:
+        """Per-row draft budgets for one verify round.
+
+        Only *active* rows are evaluated (and, for the Eq. 7/9 solver,
+        only active rows enter the coupled solve — dead slots cost no
+        forward passes, so they must not drag the optimum). Per-row
+        ``LengthPolicy`` calls are memoized on (problem, partial length)
+        keyed to the history version: with G samples per problem the
+        lock-step engine used to recompute identical posteriors G times
+        per round.
+        """
         e = self.engine
         B = len(problem_ids)
+        budgets = np.zeros(B, np.int64)
         if not e.spec_enabled:
-            return np.zeros(B, np.int64)
+            return budgets
+        active = np.asarray(active, bool)
         if e.unlimited_budget:
             return np.where(active, e.max_draft, 0)
+        idx = np.nonzero(active)[0]
+        if idx.size == 0:
+            return budgets
+        ver = self.length_policy.history_size()
+        if ver != self._memo_version:
+            self._memo_version = ver
+            self._budget_memo.clear()
+            self._pred_memo.clear()
+        bm = self._budget_memo
         # Length-class budget (paper §4.2.3) per row …
-        cls_budget = np.array(
-            [
-                self.length_policy.budget(pid, el)
-                for pid, el in zip(problem_ids, emitted_lens)
-            ],
-            np.int64,
-        )
-        if e.use_budget_solver and self.length_policy.history_size() >= 8:
+        cls_budget = np.empty(idx.size, np.int64)
+        for j, i in enumerate(idx):
+            k = (problem_ids[i], int(emitted_lens[i]))
+            v = bm.get(k)
+            if v is None:
+                v = bm[k] = int(self.length_policy.budget(k[0], k[1]))
+            cls_budget[j] = v
+        if e.use_budget_solver and ver >= 8:
             # … refined by the Eq. 7/9 solver on predicted remaining length:
             # the class decides WHO speculates (Short rows skip, Obs. 2),
             # the solver decides HOW MUCH (p* spread over expected rounds).
-            pred_rem = np.array(
-                [
-                    max(8.0, self.length_policy.expected_length(pid) - el)
-                    for pid, el in zip(problem_ids, emitted_lens)
-                ]
-            )
+            pm = self._pred_memo
+            pred_rem = np.empty(idx.size, np.float64)
+            for j, i in enumerate(idx):
+                pid = problem_ids[i]
+                el = pm.get(pid)
+                if el is None:
+                    el = pm[pid] = float(self.length_policy.expected_length(pid))
+                pred_rem[j] = max(8.0, el - float(emitted_lens[i]))
             p_star, _ = solve_budgets(pred_rem, self.latency)
             per_round = np.ceil(
                 p_star / np.maximum(pred_rem, 1.0) * e.max_draft
@@ -194,43 +319,48 @@ class SpecEngine:
                 np.minimum(cls_budget, np.maximum(solver_budget, 1)),
                 0,
             )
-        budgets = np.clip(cls_budget, 0, e.max_draft)
-        budgets = np.minimum(budgets, np.maximum(remaining - 1, 0))
-        return np.where(active, budgets, 0)
+        b = np.clip(cls_budget, 0, e.max_draft)
+        b = np.minimum(b, np.maximum(np.asarray(remaining)[idx] - 1, 0))
+        budgets[idx] = b
+        return budgets
 
-    # -- main loop -----------------------------------------------------------
+    # -- lock-step mode -------------------------------------------------------
     def generate(
         self,
         prompts: Sequence[Sequence[int]],
         problem_ids: Optional[Sequence] = None,
         *,
-        max_new_tokens: Optional[int] = None,
+        max_new_tokens=None,
         key: Optional[jax.Array] = None,
         collect_effective_batch: bool = False,
     ) -> Tuple[List[List[int]], RolloutStats]:
-        """Synchronous batched rollout with DAS speculation.
+        """Synchronous lock-step batched rollout with DAS speculation.
 
-        Returns (generations per row (token lists, EOS-exclusive), stats).
+        ``max_new_tokens`` may be a scalar or a per-row sequence. Returns
+        (generations per row (token lists, EOS-exclusive), stats). This
+        is the baseline mode; ``generate_continuous`` serves the same
+        requests through the slot-recycling pool.
         """
         e = self.engine
         t0 = time.perf_counter()
         B = len(prompts)
-        max_new = max_new_tokens or e.max_new_tokens
+        mn = max_new_tokens if max_new_tokens is not None else e.max_new_tokens
+        max_new_arr = _as_max_new_array(mn, B)
         if problem_ids is None:
             problem_ids = list(range(B))
         if key is None:
             key = jax.random.key(0)
         # ---- prefill (left-pad to a bucketed common length to bound the
         # number of compiled prefill/verify variants) ----
-        Tp = max(len(p) for p in prompts)
-        Tp = ((Tp + 15) // 16) * 16
+        Tp = _prompt_bucket(max(len(p) for p in prompts))
         toks = np.zeros((B, Tp), np.int32)
         mask = np.zeros((B, Tp), bool)
         for b, p in enumerate(prompts):
             toks[b, Tp - len(p):] = p
             mask[b, Tp - len(p):] = True
-        max_len = Tp + max_new + e.max_draft + 2
-        max_len = ((max_len + 63) // 64) * 64
+        max_len = _cache_bucket(
+            Tp + int(max_new_arr.max(initial=0)) + e.max_draft + 2
+        )
         last_logits, cache = self._get_prefill(Tp, max_len)(
             self.params, jnp.asarray(toks), jnp.asarray(mask)
         )
@@ -254,20 +384,23 @@ class SpecEngine:
         # first sampled token counts as emitted output
         for b in range(B):
             tok = int(head[b])
-            if tok == e.eos_token or max_new == 0:
+            if tok == e.eos_token or max_new_arr[b] == 0:
                 active[b] = False
-                if max_new > 0:
+                if max_new_arr[b] > 0:
                     outputs[b].append(tok)
             else:
                 outputs[b].append(tok)
                 emitted[b] = 1
-                sessions[b].feed([tok])
+                if max_new_arr[b] <= 1:  # head token already fills the limit
+                    active[b] = False
+                else:
+                    sessions[b].feed([tok])
         # account the prefill pass
         stats.n_fwd += 1
         stats.n_toks_proposed += int(mask.sum())
 
         while active.any():
-            remaining = max_new - emitted
+            remaining = max_new_arr - emitted
             budgets_np = self._round_budgets(
                 problem_ids, emitted, active, remaining
             )
@@ -276,8 +409,8 @@ class SpecEngine:
             # ---- host drafting ----
             block = np.zeros((B, K + 1), np.int32)
             block[:, 0] = head
-            for b in range(B):
-                if not active[b] or budgets_np[b] <= 0:
+            for b in np.nonzero(active)[0]:
+                if budgets_np[b] <= 0:
                     budgets_np[b] = 0
                     continue
                 prop = sessions[b].propose(int(budgets_np[b]))
@@ -290,14 +423,12 @@ class SpecEngine:
                 jnp.asarray(budgets_np.astype(np.int32)),
                 jnp.asarray(active), kv,
             )
-            accepted = np.asarray(res.accepted)
-            next_tok = np.asarray(res.next_token)
-            # ---- host bookkeeping ----
+            accepted = np.asarray(res.accepted).astype(np.int64)
+            next_tok = np.asarray(res.next_token).astype(np.int32)
+            # ---- host bookkeeping (vectorized EOS/emit scan) ----
             stats.n_rounds += 1
             stats.n_fwd += 1
-            stats.n_toks_proposed += int(
-                (1 + budgets_np[active]).sum()
-            )
+            stats.n_toks_proposed += int((1 + budgets_np[active]).sum())
             stats.n_drafted += int(budgets_np[active].sum())
             stats.n_accepted += int(accepted[active].sum())
             stats.round_accepts.append(
@@ -305,21 +436,22 @@ class SpecEngine:
             )
             if collect_effective_batch:
                 stats.effective_batch.append(int(active.sum()))
-            for b in range(B):
-                if not active[b]:
-                    continue
+            cand = np.zeros((B, K + 1), np.int32)
+            cand[:, :K] = block[:, 1:]
+            cand[np.arange(B), accepted] = next_tok
+            n_take, alive = _emit_scan(
+                cand, accepted + 1, max_new_arr - emitted, e.eos_token
+            )
+            alive &= active
+            for b in np.nonzero(active)[0]:
                 rounds_per_row[b] += 1
-                new_toks = [int(t) for t in block[b, 1 : 1 + accepted[b]]]
-                new_toks.append(int(next_tok[b]))
-                for t in new_toks:
-                    outputs[b].append(t)
-                    emitted[b] += 1
-                    if t == e.eos_token or emitted[b] >= max_new:
-                        active[b] = False
-                        break
-                if active[b]:
-                    sessions[b].feed(new_toks)
-                    head[b] = new_toks[-1]
+                take = cand[b, : n_take[b]].tolist()
+                outputs[b].extend(take)
+                if alive[b]:
+                    sessions[b].feed(take)
+            emitted[active] += n_take[active]
+            head = np.where(alive, next_tok, head)
+            active = alive
         # strip EOS and observe history
         for b in range(B):
             if outputs[b] and outputs[b][-1] == e.eos_token:
@@ -330,6 +462,311 @@ class SpecEngine:
             self.length_policy.observe(problem_ids[b], len(outputs[b]))
         stats.n_toks_emitted = int(sum(len(o) for o in outputs))
         stats.per_row_rounds = rounds_per_row
+        stats.per_row_emitted = np.array([len(o) for o in outputs])
+        stats.wall_time_s = time.perf_counter() - t0
+        return outputs, stats
+
+    # -- continuous-batching mode --------------------------------------------
+    def serve(
+        self,
+        requests: Iterable[Request],
+        *,
+        slots: Optional[int] = None,
+        key: Optional[jax.Array] = None,
+        stats: Optional[RolloutStats] = None,
+        collect_effective_batch: bool = False,
+    ) -> Iterator[Request]:
+        """Continuous-batching serve loop (generator of finished requests).
+
+        A fixed pool of ``slots`` device slots is fed from an admission
+        queue ordered longest-predicted-first (``SlotScheduler``). The
+        moment a row finishes, its slot is re-prefilled (B=1 prefill +
+        ``copy_cache_row``) with the next pending request, so the
+        effective batch stays full through the long tail.
+
+        Rounds are double-buffered: after the jitted verify for round
+        *t* is dispatched, the host (a) observes rollouts that finished
+        in earlier rounds — the drafter/length-policy updates benefit
+        still-running stragglers mid-serve — and (b) pre-solves round
+        *t+1* budgets from bounded-staleness emitted counts (re-clamped
+        against fresh limits before dispatch). ``res.accepted`` is only
+        materialized when the next dispatch actually needs the head
+        tokens, so the device verify overlaps all of that host work.
+
+        Greedy verification is lossless, so per-request outputs are
+        token-identical to ``generate`` at temperature 0.
+
+        ``stats`` counters (rounds, forwards, drafted/accepted, emitted
+        tokens, wall time) aggregate across the serve; the per-row
+        arrays are request-order views that only the
+        ``generate_continuous`` wrapper fills.
+        """
+        e = self.engine
+        reqs = list(requests)
+        if stats is None:
+            stats = RolloutStats()
+        if not reqs:
+            return
+        n_slots = max(1, min(int(slots) if slots else len(reqs), len(reqs)))
+        sched = SlotScheduler(n_slots, self.length_policy)
+        for r in reqs:
+            sched.submit(r)
+        if key is None:
+            key = jax.random.key(0)
+
+        # One pool cache sized for the worst admitted request.
+        max_tp = max(_prompt_bucket(len(r.prompt)) for r in reqs)
+        pool_len = _cache_bucket(
+            max_tp + max(int(r.max_new_tokens) for r in reqs)
+            + e.max_draft + 2
+        )
+        cache = M.init_cache(self.cfg, n_slots, pool_len, e.cache_headroom)
+        write_slot = self._get_write_slot()
+
+        head = np.zeros(n_slots, np.int32)
+        emitted = np.zeros(n_slots, np.int64)
+        max_new_arr = np.ones(n_slots, np.int64)
+        active = np.zeros(n_slots, bool)
+        pids: List[Any] = [None] * n_slots
+        sessions: List[Any] = [None] * n_slots
+
+        pending = None  # in-flight round: (res<device>, block, budgets, mask)
+        finalize_q: List[Request] = []  # finished; observation deferred
+        done_q: List[Request] = []  # observed; ready to yield
+        round_no = 0
+
+        t_serve0 = time.perf_counter()
+
+        def finish(req: Request) -> None:
+            if req.output and req.output[-1] == e.eos_token:
+                req.output.pop()
+            req.emitted = len(req.output)
+            req.finish_round = round_no
+            req.session = None
+            stats.n_toks_emitted += req.emitted
+            sched.release(req)
+            finalize_q.append(req)
+
+        def admit() -> None:
+            """Fill free slots from the queue: B=1 prefill into the pool
+            row (``copy_cache_row``). Immediate-EOS admissions release
+            their slot and the loop re-admits into it."""
+            nonlocal cache, key
+            while True:
+                newly = sched.next_admissions()
+                if not newly:
+                    return
+                for req in newly:
+                    s = req.slot
+                    n_p = len(req.prompt)
+                    Tp = _prompt_bucket(n_p)
+                    toks = np.zeros((1, Tp), np.int32)
+                    mask = np.zeros((1, Tp), bool)
+                    toks[0, Tp - n_p:] = req.prompt
+                    mask[0, Tp - n_p:] = True
+                    last_logits, row_cache = self._get_prefill(Tp, pool_len)(
+                        self.params, jnp.asarray(toks), jnp.asarray(mask)
+                    )
+                    cache = write_slot(cache, row_cache, np.int32(s))
+                    key, k0 = jax.random.split(key)
+                    tok = int(np.asarray(sample_token(
+                        last_logits[:, : self.cfg.vocab_size],
+                        temperature=e.temperature, key=k0,
+                    ))[0])
+                    stats.n_fwd += 1
+                    stats.n_toks_proposed += n_p
+                    req.admit_round = round_no
+                    req.head = tok
+                    if tok == e.eos_token or req.max_new_tokens <= 0:
+                        if req.max_new_tokens > 0:
+                            req.output.append(tok)
+                        finish(req)  # slot freed; outer loop re-admits
+                        continue
+                    req.output.append(tok)
+                    if req.max_new_tokens <= 1:  # head fills the limit
+                        finish(req)
+                        continue
+                    req.session = self.drafter.new_session(
+                        req.problem_id, req.prompt
+                    )
+                    req.session.feed([tok])
+                    sessions[s] = req.session
+                    pids[s] = req.problem_id
+                    head[s] = tok
+                    emitted[s] = 1
+                    max_new_arr[s] = req.max_new_tokens
+                    active[s] = True
+
+        def consume() -> None:
+            """Materialize the in-flight verify (device sync point) and
+            apply the vectorized emit/EOS bookkeeping."""
+            nonlocal pending
+            if pending is None:
+                return
+            res, block, budgets, mask = pending
+            pending = None
+            accepted = np.asarray(res.accepted).astype(np.int64)
+            next_tok = np.asarray(res.next_token).astype(np.int32)
+            stats.n_accepted += int(accepted[mask].sum())
+            stats.round_accepts.append(
+                float(accepted[mask].mean()) if mask.any() else 0.0
+            )
+            cand = np.zeros((n_slots, block.shape[1]), np.int32)
+            cand[:, :-1] = block[:, 1:]
+            cand[np.arange(n_slots), accepted] = next_tok
+            n_take, alive = _emit_scan(
+                cand, accepted + 1, max_new_arr - emitted, e.eos_token
+            )
+            alive &= mask
+            for s in np.nonzero(mask)[0]:
+                req = sched.slots[s]
+                take = cand[s, : n_take[s]].tolist()
+                req.output.extend(take)
+                emitted[s] += n_take[s]
+                if alive[s]:
+                    sessions[s].feed(take)
+                    head[s] = next_tok[s]
+                else:
+                    active[s] = False
+                    sessions[s] = None
+                    pids[s] = None
+                    finish(req)
+
+        def precompute_budgets():
+            """Round t+1 budgets from bounded-staleness emitted counts —
+            runs in the overlap window while the device verifies round t.
+            The occupant snapshot guards against slot recycling: a budget
+            precomputed for a slot's previous request must not be applied
+            to the request admitted into it afterwards."""
+            if not active.any():
+                return None
+            rem = max_new_arr - emitted
+            return (
+                self._round_budgets(pids, emitted, active, rem),
+                active.copy(),
+                list(sched.slots),
+            )
+
+        def dispatch(pre) -> None:
+            nonlocal pending, cache, key, round_no
+            remaining = max_new_arr - emitted
+            budgets = np.zeros(n_slots, np.int64)
+            if pre is not None:
+                pb, pmask, pocc = pre
+                same = np.fromiter(
+                    (sched.slots[s] is pocc[s] for s in range(n_slots)),
+                    bool, n_slots,
+                )
+                use = pmask & active & same
+                budgets[use] = pb[use]
+                fresh_rows = active & ~use
+            else:
+                fresh_rows = active.copy()
+            if fresh_rows.any():  # rows admitted/recycled since precompute
+                fb = self._round_budgets(pids, emitted, fresh_rows, remaining)
+                budgets[fresh_rows] = fb[fresh_rows]
+            # re-clamp stale budgets against fresh limits
+            budgets = np.where(
+                active, np.minimum(budgets, np.maximum(remaining - 1, 0)), 0
+            )
+            K = self._bucket(int(budgets.max(initial=0)))
+            block = np.zeros((n_slots, K + 1), np.int32)
+            block[:, 0] = head
+            for s in np.nonzero(active)[0]:
+                if budgets[s] <= 0:
+                    budgets[s] = 0
+                    continue
+                prop = sessions[s].propose(int(budgets[s]))
+                budgets[s] = len(prop)
+                if prop:
+                    block[s, 1 : 1 + len(prop)] = prop
+            key, kv = jax.random.split(key)
+            res, cache = self._get_verify(K)(
+                self.params, cache, jnp.asarray(block),
+                jnp.asarray(budgets.astype(np.int32)),
+                jnp.asarray(active), kv,
+            )
+            pending = (res, block, budgets, active.copy())
+            round_no += 1
+            stats.n_rounds += 1
+            stats.n_fwd += 1
+            stats.n_toks_proposed += int((1 + budgets[active]).sum())
+            stats.n_drafted += int(budgets[active].sum())
+            if collect_effective_batch:
+                stats.effective_batch.append(int(active.sum()))
+            for s in np.nonzero(active)[0]:
+                sched.slots[s].rounds += 1
+
+        while sched.has_work() or pending is not None:
+            # ---- overlap window: the device executes the in-flight
+            # verify; the host observes finished rollouts (their drafts
+            # immediately help still-running stragglers) and pre-solves
+            # the next round's budgets.
+            while finalize_q:
+                req = finalize_q.pop(0)
+                self._finalize_request(req)
+                done_q.append(req)
+            pre = precompute_budgets() if pending is not None else None
+            consume()  # device sync: the next dispatch needs the heads
+            admit()  # recycle freed slots before the next round
+            if active.any():
+                dispatch(pre)
+            while done_q:
+                yield done_q.pop(0)
+        while finalize_q:  # tail: rows that finished in the last round
+            req = finalize_q.pop(0)
+            self._finalize_request(req)
+            yield req
+        stats.wall_time_s = time.perf_counter() - t_serve0
+
+    def _finalize_request(self, req: Request) -> None:
+        """Observe a finished rollout (drafter window + length history)."""
+        self.drafter.observe_rollout(
+            req.problem_id, list(req.prompt) + req.output, self.epoch
+        )
+        self.length_policy.observe(req.problem_id, len(req.output))
+
+    def generate_continuous(
+        self,
+        prompts: Sequence[Sequence[int]],
+        problem_ids: Optional[Sequence] = None,
+        *,
+        slots: Optional[int] = None,
+        max_new_tokens=None,
+        key: Optional[jax.Array] = None,
+        collect_effective_batch: bool = False,
+    ) -> Tuple[List[List[int]], RolloutStats]:
+        """Drop-in for ``generate`` backed by the continuous engine.
+
+        Streams the batch through a pool of ``slots`` device slots
+        (default: one per request — pure recycling of early-finishers'
+        slots requires ``slots < len(prompts)`` to show). Returns
+        outputs in request order plus the usual stats; ``n_rounds`` is
+        the pool makespan in verify rounds.
+        """
+        t0 = time.perf_counter()
+        B = len(prompts)
+        if problem_ids is None:
+            problem_ids = list(range(B))
+        mn = max_new_tokens if max_new_tokens is not None \
+            else self.engine.max_new_tokens
+        max_new_arr = _as_max_new_array(mn, B)
+        reqs = [
+            Request(
+                rid=i, problem_id=problem_ids[i], prompt=list(prompts[i]),
+                max_new_tokens=int(max_new_arr[i]),
+            )
+            for i in range(B)
+        ]
+        stats = RolloutStats()
+        for _ in self.serve(
+            reqs, slots=slots, key=key, stats=stats,
+            collect_effective_batch=collect_effective_batch,
+        ):
+            pass
+        outputs = [r.output for r in reqs]
+        stats.n_toks_emitted = int(sum(len(o) for o in outputs))
+        stats.per_row_rounds = np.array([r.rounds for r in reqs], np.int64)
         stats.per_row_emitted = np.array([len(o) for o in outputs])
         stats.wall_time_s = time.perf_counter() - t0
         return outputs, stats

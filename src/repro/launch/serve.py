@@ -1,12 +1,18 @@
 """Production launcher: serving entry point (decode/verify workloads).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --continuous [--slots 4] [--requests 16]
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --dry-run \
         [--shape verify_8] [--multi-pod]
 
 ``--smoke`` runs real batched speculative serving of the reduced config
-on CPU (suffix-tree drafter warmed by repeated requests); ``--dry-run``
-lowers+compiles the full config's serve step on the production mesh.
+on CPU (suffix-tree drafter warmed by repeated requests). With
+``--continuous`` the request stream flows through the slot-recycling
+pool (``--slots`` device rows, longest-predicted-first admission) and
+completions are printed as they stream out — the serving shape for
+heavy traffic. ``--dry-run`` lowers+compiles the full config's serve
+step on the production mesh.
 """
 
 from __future__ import annotations
@@ -24,6 +30,13 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the slot-recycling pool")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="device slots in the continuous pool")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="requests per round in continuous mode "
+                         "(default: 2x --batch)")
     args = ap.parse_args()
 
     if args.dry_run:
@@ -65,6 +78,40 @@ def main() -> None:
                                             min_match=2)),
     )
     rng = np.random.default_rng(0)
+    if args.continuous:
+        from repro.core.scheduler import Request
+        from repro.core.spec_engine import RolloutStats
+
+        n_req = args.requests or 2 * args.batch
+        for rnd in range(args.rounds):
+            reqs = []
+            for i in range(n_req):
+                seed = i % 4
+                reqs.append(Request(
+                    rid=i, problem_id=f"q{seed}",
+                    prompt=[2] + list(rng.integers(4, 20, size=4 + seed)),
+                    max_new_tokens=8 * (1 + seed),  # long-tailed stream
+                ))
+            st = RolloutStats()
+            t0 = time.perf_counter()
+            for fin in eng.serve(reqs, slots=args.slots,
+                                 key=jax.random.key(rnd), stats=st):
+                print(
+                    f"  req {fin.rid:3d} ({fin.problem_id}) done: "
+                    f"{len(fin.output):3d} toks, rounds "
+                    f"{fin.admit_round}->{fin.finish_round}"
+                )
+            dt = time.perf_counter() - t0
+            toks = st.n_toks_emitted
+            print(
+                f"round {rnd}: {dt*1e3:8.1f} ms  {n_req} reqs / "
+                f"{args.slots} slots  makespan={st.n_rounds} rounds "
+                f"fwd={st.n_fwd:4d} tok/s={toks/max(dt,1e-9):7.1f} "
+                f"accept/round={st.acceptance_per_round:6.2f}"
+            )
+            eng.begin_iteration(rnd + 1)
+        return
+
     for rnd in range(args.rounds):
         prompts, pids = [], []
         for b in range(args.batch):

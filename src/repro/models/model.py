@@ -490,6 +490,37 @@ def prefill(
     return last_logits, Cache(tuple(new_stages), plen)
 
 
+def copy_cache_row(cfg: ModelConfig, dst: Cache, src: Cache, slot) -> Cache:
+    """Write batch row 0 of ``src`` into batch row ``slot`` of ``dst``.
+
+    The slot-recycling admission primitive: a finished row's slot in the
+    continuous-batching pool is overwritten with a freshly prefilled
+    B=1 cache of the next pending request. Both caches must share the
+    same geometry (``max_len``/``headroom``); the batch axis is leading
+    for unstacked stages and second (after the scan-repeat axis) for
+    stacked ones. ``slot`` may be traced (dynamic-update-slice under
+    jit, so one compile serves every slot).
+    """
+
+    def write(d, s, stacked: bool):
+        def one(dl, sl):
+            if stacked:  # (R, B, ...)
+                return dl.at[:, slot].set(sl[:, 0].astype(dl.dtype))
+            return dl.at[slot].set(sl[0].astype(dl.dtype))
+
+        return jax.tree.map(one, d, s)
+
+    new_stages = []
+    for si, (unit, repeats) in enumerate(cfg.scan_stages):
+        unit_new = tuple(
+            write(dst.stages[si][ui], src.stages[si][ui], repeats > 1)
+            for ui in range(len(unit))
+        )
+        new_stages.append(unit_new)
+    lengths = dst.lengths.at[slot].set(src.lengths[0])
+    return Cache(tuple(new_stages), lengths)
+
+
 def has_recurrent(cfg: ModelConfig) -> bool:
     return any(k in ("rglru", "mlstm", "slstm") for k in cfg.layer_kinds)
 

@@ -6,6 +6,13 @@ reuse the paper exploits), computes verifiable rewards, and packs the
 result into a GRPO training batch. The baseline (no speculation) is the
 same code path with ``spec_enabled=False`` so timing comparisons are
 apples-to-apples.
+
+With ``continuous=True`` the worker streams the N = problems × G
+requests through the engine's fixed slot pool (``slots`` device rows,
+longest-predicted-first admission, slot recycling) instead of one giant
+padded lock-step batch — the long tail no longer pins dead slots, and
+finished groups' rollouts sharpen the drafter for still-running
+stragglers mid-rollout. Outputs are token-identical at temperature 0.
 """
 
 from __future__ import annotations
@@ -36,10 +43,20 @@ class RolloutBatch:
 
 
 class RolloutWorker:
-    def __init__(self, engine: SpecEngine, task: Task, group_size: int = 8):
+    def __init__(
+        self,
+        engine: SpecEngine,
+        task: Task,
+        group_size: int = 8,
+        *,
+        continuous: bool = False,
+        slots: Optional[int] = None,
+    ):
         self.engine = engine
         self.task = task
         self.G = group_size
+        self.continuous = continuous
+        self.slots = slots  # pool size; None = one slot per request
 
     def rollout(
         self,
@@ -56,10 +73,17 @@ class RolloutWorker:
                 prompts.append(list(p.prompt))
                 pids.append(p.pid)
                 probs.append(p)
-        outs, stats = self.engine.generate(
-            prompts, pids, max_new_tokens=max_new_tokens, key=key,
-            collect_effective_batch=collect_effective_batch,
-        )
+        if self.continuous:
+            outs, stats = self.engine.generate_continuous(
+                prompts, pids, slots=self.slots,
+                max_new_tokens=max_new_tokens, key=key,
+                collect_effective_batch=collect_effective_batch,
+            )
+        else:
+            outs, stats = self.engine.generate(
+                prompts, pids, max_new_tokens=max_new_tokens, key=key,
+                collect_effective_batch=collect_effective_batch,
+            )
         gen_time = time.perf_counter() - t0
         rewards = np.array(
             [self.task.reward(pr, o) for pr, o in zip(probs, outs)],

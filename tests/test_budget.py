@@ -3,7 +3,11 @@ observations (§4.2.2)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_stub
+
+# Property-based tests are skipped when hypothesis is unavailable
+# (offline CI image); the plain tests below still run.
+given, settings, st = hypothesis_or_stub()
 
 from repro.core.budget import (
     AcceptanceModel,
