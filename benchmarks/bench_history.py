@@ -1,0 +1,267 @@
+"""History-store benchmark: incremental maintenance + warm-start value.
+
+Two measurements, emitted to ``BENCH_history.json``:
+
+1. **Refresh latency vs window size** — per-iteration index refresh
+   (one new rollout in, oldest out) done two ways: the seed's full
+   rebuild (Ukkonen over the whole window) vs the incremental path
+   (online extend + online document retirement, amortized compaction).
+   The incremental path must be >=5x faster at window >= 64.
+
+2. **Acceptance trajectory across simulated epochs, warm vs cold** —
+   per-problem rollout streams with stable cross-epoch structure
+   (template + per-epoch token noise, the paper's Insight-2) are
+   drafted against drafter-only (no model: proposals scored by exact
+   match against the actual continuation, the T=0 acceptance rule).
+   A *warm* drafter (history persisted from a previous run, reloaded
+   through ``repro.history.persist``) must beat a *cold* one on the
+   first iteration — the restart win the subsystem exists for.
+
+Drafter-only on purpose: both measurements isolate the paper's index
+layer, so they are hardware-independent and CI-sized (``--smoke``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.drafter import DrafterConfig, SuffixDrafter
+from repro.history import persist
+from repro.history.incremental import IncrementalIndex
+from repro.history.store import RolloutHistoryStore
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"
+
+
+# ---------------------------------------------------------------------------
+# 1) refresh latency: rebuild vs incremental
+# ---------------------------------------------------------------------------
+def _doc_stream(rng, n, doc_len, vocab=24):
+    """Rollouts with shared n-gram structure (realistic tree shapes)."""
+    base = rng.integers(0, vocab, size=doc_len)
+    out = []
+    for _ in range(n):
+        d = base.copy()
+        flips = rng.random(doc_len) < 0.2
+        d[flips] = rng.integers(0, vocab, size=int(flips.sum()))
+        out.append([int(t) for t in d])
+    return out
+
+
+def bench_refresh(window: int, n_refresh: int, doc_len: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    docs = _doc_stream(rng, window + n_refresh, doc_len)
+
+    # -- rebuild path: every refresh re-runs Ukkonen over the window ----
+    store_r = RolloutHistoryStore(window_size=window)
+    idx_r = IncrementalIndex(epoch_decay=1.0)
+    for i in range(window):
+        store_r.append("k", docs[i], epoch=0)
+    idx_r.rebuild("k", store_r.window("k"), epoch=0)
+    t_rebuild = 0.0
+    for i in range(n_refresh):
+        store_r.append("k", docs[window + i], epoch=1 + i)
+        t0 = time.perf_counter()
+        idx_r.rebuild("k", store_r.window("k"), epoch=1 + i)
+        t_rebuild += time.perf_counter() - t0
+
+    # -- incremental path: extend + retire (+ amortized compaction) -----
+    store_i = RolloutHistoryStore(window_size=window)
+    idx_i = IncrementalIndex(epoch_decay=1.0)
+    for i in range(window):
+        rec, _ = store_i.append("k", docs[i], epoch=0)
+        idx_i.add("k", rec.doc_id, docs[i], 0)
+    t_inc = 0.0
+    for i in range(n_refresh):
+        t0 = time.perf_counter()
+        rec, evicted = store_i.append("k", docs[window + i], epoch=1 + i)
+        idx_i.add("k", rec.doc_id, docs[window + i], 1 + i)
+        for ev in evicted:
+            idx_i.evict("k", ev.doc_id)
+        idx_i.maybe_compact("k", store_i.window("k"))
+        t_inc += time.perf_counter() - t0
+
+    # equivalence spot-check (the property tests do this exhaustively)
+    probe = docs[-1][: doc_len // 2]
+    assert (
+        idx_i.tree("k").longest_suffix_match(probe)
+        == idx_r.tree("k").longest_suffix_match(probe)
+    )
+    return {
+        "window": window,
+        "doc_len": doc_len,
+        "n_refresh": n_refresh,
+        "rebuild_ms_per_refresh": 1e3 * t_rebuild / n_refresh,
+        "incremental_ms_per_refresh": 1e3 * t_inc / n_refresh,
+        "speedup": t_rebuild / max(t_inc, 1e-12),
+        "compactions": idx_i.stats.compactions,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 2) acceptance trajectory: warm (persisted) vs cold history
+# ---------------------------------------------------------------------------
+def _epoch_rollouts(rng, templates, noise):
+    """One epoch of rollouts: per-problem template + token noise."""
+    out = []
+    for pid, tpl in templates.items():
+        d = tpl.copy()
+        flips = rng.random(len(d)) < noise
+        d[flips] = rng.integers(0, 24, size=int(flips.sum()))
+        out.append((pid, [int(t) for t in d]))
+    return out
+
+
+def _drafted_acceptance(drafter, pid, rollout, k=8):
+    """Simulate T=0 speculative decoding of `rollout` against the
+    drafter: accepted = longest exact-match prefix of each proposal.
+    Returns (drafted, accepted, verify_rounds)."""
+    sess = drafter.new_session(pid, rollout[:4])
+    pos = 4
+    drafted = accepted = rounds = 0
+    while pos < len(rollout):
+        prop = sess.propose(k)
+        a = 0
+        for t in prop:
+            if pos + a < len(rollout) and t == rollout[pos + a]:
+                a += 1
+            else:
+                break
+        drafted += len(prop)
+        accepted += a
+        rounds += 1
+        emit = a + 1  # accepted run + the corrected token
+        sess.feed(rollout[pos : pos + emit])
+        pos += emit
+    if drafted:
+        drafter.note_draft(pid, drafted, accepted)
+    return drafted, accepted, rounds
+
+
+def _simulate(drafter, rng, templates, n_epochs, group, noise, epoch0=0):
+    """Per-epoch accepted-tokens-per-verify-round (the quantity that
+    cuts N_fwd; a drafter that proposes nothing scores 0, not a pass)."""
+    traj = []
+    for e in range(epoch0, epoch0 + n_epochs):
+        drafter.begin_iteration(e)
+        ac = rd = 0
+        for _ in range(group):
+            for pid, roll in _epoch_rollouts(rng, templates, noise):
+                d, a, r = _drafted_acceptance(drafter, pid, roll)
+                ac += a
+                rd += r
+                drafter.observe_rollout(pid, roll, e, response_len=len(roll))
+        traj.append(ac / max(rd, 1))
+    return traj
+
+
+def bench_warm_vs_cold(tmpdir, n_problems, doc_len, n_epochs, group,
+                       noise=0.1, seed=1):
+    rng = np.random.default_rng(seed)
+    templates = {
+        f"p{i}": rng.integers(0, 24, size=doc_len) for i in range(n_problems)
+    }
+    cfg = DrafterConfig(scope="problem", window_size=16, min_match=2)
+
+    # cold run: epochs 0..n-1 from nothing; persist at the end
+    cold = SuffixDrafter(cfg)
+    cold_traj = _simulate(cold, np.random.default_rng(seed + 1), templates,
+                          n_epochs, group, noise)
+    persist.save_history(tmpdir, drafter=cold)
+
+    # warm run: fresh process, history reloaded, same workload shape
+    warm = persist.restore_drafter(persist.load_history(tmpdir))
+    warm_traj = _simulate(warm, np.random.default_rng(seed + 2), templates,
+                          n_epochs, group, noise, epoch0=n_epochs)
+    # cold control for the same epochs (fresh drafter, no history)
+    cold2 = SuffixDrafter(cfg)
+    cold2_traj = _simulate(cold2, np.random.default_rng(seed + 2), templates,
+                           n_epochs, group, noise, epoch0=n_epochs)
+    return {
+        "n_problems": n_problems,
+        "group": group,
+        "noise": noise,
+        "acceptance_cold": cold_traj,
+        "acceptance_warm_restart": warm_traj,
+        "acceptance_cold_restart": cold2_traj,
+        "first_iter_warm": warm_traj[0],
+        "first_iter_cold": cold2_traj[0],
+        "warm_gain_first_iter": warm_traj[0] - cold2_traj[0],
+    }
+
+
+# ---------------------------------------------------------------------------
+def run(quick: bool = True, smoke: bool = False, out: str = "BENCH_history.json"):
+    import tempfile
+
+    if smoke:
+        windows, n_refresh, doc_len = (16, 64), 8, 80
+        wc_args = dict(n_problems=2, doc_len=60, n_epochs=2, group=2)
+    elif quick:
+        windows, n_refresh, doc_len = (16, 64, 128), 16, 120
+        wc_args = dict(n_problems=4, doc_len=100, n_epochs=3, group=3)
+    else:
+        windows, n_refresh, doc_len = (16, 64, 128, 256), 24, 160
+        wc_args = dict(n_problems=6, doc_len=140, n_epochs=5, group=4)
+
+    refresh = [bench_refresh(w, n_refresh, doc_len) for w in windows]
+    with tempfile.TemporaryDirectory() as td:
+        warmcold = bench_warm_vs_cold(td, **wc_args)
+
+    payload = {"refresh": refresh, "warm_vs_cold": warmcold}
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    for r in refresh:
+        if r["window"] >= 64:
+            assert r["speedup"] >= 5.0, (
+                f"incremental refresh must be >=5x faster than rebuild at "
+                f"window {r['window']}, got {r['speedup']:.1f}x"
+            )
+    assert warmcold["first_iter_warm"] > warmcold["first_iter_cold"], (
+        "warm (persisted) history must beat a cold start on the first "
+        f"iteration: warm={warmcold['first_iter_warm']:.3f} "
+        f"cold={warmcold['first_iter_cold']:.3f}"
+    )
+
+    rows = [
+        row(
+            f"bench_history/refresh_w{r['window']}",
+            r["incremental_ms_per_refresh"] * 1e3,
+            f"rebuild_ms={r['rebuild_ms_per_refresh']:.2f};"
+            f"incr_ms={r['incremental_ms_per_refresh']:.3f};"
+            f"speedup={r['speedup']:.1f}x;compactions={r['compactions']}",
+        )
+        for r in refresh
+    ]
+    rows.append(
+        row(
+            "bench_history/first_iter_acceptance",
+            0.0,
+            f"warm={warmcold['first_iter_warm']:.3f};"
+            f"cold={warmcold['first_iter_cold']:.3f};"
+            f"gain={warmcold['warm_gain_first_iter']:.3f}",
+        )
+    )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (seconds)")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_history.json")
+    args = ap.parse_args()
+    for r in run(quick=not args.full, smoke=args.smoke, out=args.out):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

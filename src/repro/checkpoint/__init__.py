@@ -1,3 +1,3 @@
-from .ckpt import load, save
+from .ckpt import SIDECAR_SCHEMA_VERSION, load, load_sidecar, save
 
-__all__ = ["load", "save"]
+__all__ = ["SIDECAR_SCHEMA_VERSION", "load", "load_sidecar", "save"]

@@ -3,6 +3,13 @@
 Keeps the substrate dependency-free (no orbax): leaves are saved under
 their tree-path keys so loads are robust to dict ordering; dtypes and a
 user metadata dict round-trip through a JSON sidecar entry.
+
+Non-pytree state (drafter / rollout-history / length-policy blobs —
+anything JSON-able that must travel with the weights so a resumed run
+is warm) rides in a versioned **sidecar** entry: ``save(...,
+sidecar={...})`` + ``load_sidecar(path)``. Loads check the sidecar
+schema version and fail with a clear error on mismatch instead of
+silently mis-reading a foreign blob.
 """
 
 from __future__ import annotations
@@ -13,6 +20,9 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+SIDECAR_SCHEMA_VERSION = 1
+_RESERVED = ("__metadata__", "__sidecar__")
 
 
 def _path_str(path) -> str:
@@ -27,19 +37,59 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def save(path: str, tree: Any, metadata: Optional[Dict] = None) -> None:
+def save(
+    path: str,
+    tree: Any,
+    metadata: Optional[Dict] = None,
+    sidecar: Optional[Dict] = None,
+) -> None:
+    """Save a pytree (+ JSON metadata, + optional JSON sidecar blobs)."""
     flat = {}
     for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        flat[_path_str(kp)] = np.asarray(leaf)
+        key = _path_str(kp)
+        if key in _RESERVED:
+            raise ValueError(f"tree path {key!r} collides with a reserved key")
+        flat[key] = np.asarray(leaf)
+    if sidecar is not None:
+        flat["__sidecar__"] = json.dumps(
+            {"schema_version": SIDECAR_SCHEMA_VERSION, "blobs": sidecar}
+        )
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     np.savez(path, __metadata__=json.dumps(metadata or {}), **flat)
+
+
+def load_sidecar(
+    path: str, expected_version: int = SIDECAR_SCHEMA_VERSION
+) -> Dict:
+    """Read the sidecar blobs; schema-checked.
+
+    Raises ``KeyError`` when the checkpoint has no sidecar and
+    ``ValueError`` on a schema/version mismatch — resumption code must
+    not guess at the layout of a foreign blob.
+    """
+    with np.load(path, allow_pickle=False) as zf:
+        if "__sidecar__" not in zf.files:
+            raise KeyError(
+                f"{path}: checkpoint has no sidecar state "
+                "(saved without sidecar=...)"
+            )
+        obj = json.loads(str(zf["__sidecar__"]))
+    if not isinstance(obj, dict) or "schema_version" not in obj:
+        raise ValueError(f"{path}: malformed sidecar (no schema_version)")
+    if obj["schema_version"] != expected_version:
+        raise ValueError(
+            f"{path}: sidecar schema_version {obj['schema_version']} != "
+            f"expected {expected_version}; re-save the checkpoint with "
+            "this build or upgrade the loader"
+        )
+    return obj["blobs"]
 
 
 def load(path: str, like: Any) -> Tuple[Any, Dict]:
     """Restore into the structure of `like` (a template pytree)."""
     with np.load(path, allow_pickle=False) as zf:
         meta = json.loads(str(zf["__metadata__"]))
-        leaves_by_key = {k: zf[k] for k in zf.files if k != "__metadata__"}
+        leaves_by_key = {k: zf[k] for k in zf.files if k not in _RESERVED}
     paths = jax.tree_util.tree_flatten_with_path(like)[0]
     treedef = jax.tree_util.tree_structure(like)
     out = []

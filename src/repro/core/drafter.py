@@ -15,21 +15,30 @@ Scopes
 * ``global``           — single tree over everything (ablation: worse
                          acceptance, slower queries as the corpus grows).
 
-Sliding window: per problem we keep the last ``window_size`` rollouts
-(deque); trees are rebuilt from the window at ``begin_iteration`` —
-matching the paper's "refresh the index for each iteration" — and are
-additionally extended online as new rollouts complete inside an
-iteration. Window size can be tied to the optimizer step scale via
-``window_for_update_norm``.
+Sliding window: rollouts live in a ``RolloutHistoryStore`` (the
+cross-epoch, persistable log — ``repro.history.store``) that keeps the
+last ``window_size`` rollouts per problem. Trees are maintained *live*
+by an ``IncrementalIndex``: each observed rollout extends its tree
+online (Ukkonen) and each rollout that slides out of the window is
+retired online (``SuffixTree.remove_document``) — no per-iteration
+rebuild. ``begin_iteration`` only advances the epoch cursor (decay
+reference), applies window adaptation, and compacts corpora whose dead
+text dominates. ``_rebuild`` survives as the verified reference path
+(property-tested query-equivalent to the incremental tree) and powers
+warm starts from persisted history (``repro.history.persist``).
 """
 
 from __future__ import annotations
 
 import collections
-from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
 
 from .suffix_tree import MatchState, SuffixTree
+
+# NOTE: repro.history imports repro.core (suffix_tree); the drafter's
+# store/index dependencies are imported lazily inside SuffixDrafter to
+# keep the module import graph acyclic whichever package loads first.
 
 
 @dataclass
@@ -151,17 +160,32 @@ _GLOBAL_KEY = "__global__"
 
 
 class SuffixDrafter:
-    """Window-managed collection of suffix-tree speculators."""
+    """Store-backed collection of incrementally maintained speculators."""
 
-    def __init__(self, cfg: Optional[DrafterConfig] = None) -> None:
+    def __init__(
+        self,
+        cfg: Optional[DrafterConfig] = None,
+        store=None,
+    ) -> None:
+        from repro.history.incremental import IncrementalIndex
+        from repro.history.store import RolloutHistoryStore
+
         self.cfg = cfg or DrafterConfig()
-        self._windows: Dict[object, Deque[Tuple[List[int], int]]] = {}
-        self._trees: Dict[object, SuffixTree] = {}
-        self._trie = PrefixTrie() if self.cfg.use_prefix_trie else None
-        self.epoch = 0
         self._window_size = self.cfg.window_size
+        self.store = (
+            store if store is not None
+            else RolloutHistoryStore(window_size=self._window_size)
+        )
+        self.index = IncrementalIndex(epoch_decay=self.cfg.epoch_decay)
+        self._trie = PrefixTrie() if self.cfg.use_prefix_trie else None
+        self.epoch = self.store.epoch
         # Stats for EXPERIMENTS/benchmarks
         self.stats = collections.Counter()
+
+    @property
+    def _trees(self) -> Dict[object, SuffixTree]:
+        """Live trees (introspection; owned by the incremental index)."""
+        return self.index.trees
 
     # -- window / lifecycle ------------------------------------------------
     def _key(self, problem_id) -> object:
@@ -172,55 +196,102 @@ class SuffixDrafter:
             self._trie.insert(prompt, problem_id)
 
     def observe_rollout(
-        self, problem_id, tokens: Sequence[int], epoch: Optional[int] = None
+        self,
+        problem_id,
+        tokens: Sequence[int],
+        epoch: Optional[int] = None,
+        response_len: Optional[int] = None,
     ) -> None:
-        """Record one completed rollout; extends the live tree online."""
+        """Record one completed rollout.
+
+        Appends to the history store, extends the live tree online and
+        retires any rollout that just slid out of the window — the tree
+        tracks the window exactly, with no deferred rebuild.
+        ``response_len`` (generated tokens, prompt excluded) feeds the
+        store's per-prompt length telemetry for ``LengthPolicy`` warm
+        starts and longest-predicted-first admission.
+        """
         ep = self.epoch if epoch is None else int(epoch)
         key = self._key(problem_id)
-        win = self._windows.setdefault(
-            key, collections.deque(maxlen=max(1, self._window_size))
-        )
         toks = [int(t) for t in tokens]
-        win.append((toks, ep))
+        rec, evicted = self.store.append(
+            key, toks, ep, response_len=response_len
+        )
         self.stats["rollouts_observed"] += 1
-        # NOTE: if the deque just evicted its oldest rollout, the live tree
-        # still contains that doc until the next begin_iteration() rebuild;
-        # in the interim it is only epoch-down-weighted. This matches the
-        # paper's "refresh the index for each iteration" semantics.
-        tree = self._trees.get(key)
-        if tree is None:
-            tree = self._rebuild(key)
-        else:
-            tree.add_document(toks, epoch=ep)
+        if self.index.tree(key) is None and len(self.store.window(key)) > 1:
+            # Warm store (e.g. just loaded from disk), cold tree: build
+            # from the full window so earlier history is not dropped.
+            self.index.rebuild(key, self.store.window(key), epoch=self.epoch)
+            return
+        self.index.add(key, rec.doc_id, toks, ep)
+        for ev in evicted:
+            self.index.evict(key, ev.doc_id)
+        if self.index.needs_compaction(key):  # O(1) gate on the hot path
+            self.index.maybe_compact(key, self.store.window(key))
+
+    def note_draft(self, problem_id, drafted: int, accepted: int) -> None:
+        """Per-problem acceptance telemetry (fed by the engine)."""
+        self.stats["toks_drafted"] += int(drafted)
+        self.stats["toks_accepted"] += int(accepted)
+        self.store.record_draft(self._key(problem_id), drafted, accepted)
 
     def _rebuild(self, key) -> SuffixTree:
-        tree = SuffixTree(epoch_decay=self.cfg.epoch_decay)
-        for toks, ep in self._windows.get(key, ()):  # oldest → newest
-            tree.add_document(toks, epoch=ep)
-        tree.current_epoch = self.epoch
-        self._trees[key] = tree
-        return tree
+        """Reference path: fresh tree from the store window.
+
+        Kept as the verified fallback for the incremental maintenance
+        (property tests assert query-equivalence) and used to warm trees
+        from persisted history.
+        """
+        return self.index.rebuild(key, self.store.window(key), epoch=self.epoch)
+
+    def warm_trees(self) -> int:
+        """Eagerly (re)build every per-problem tree from the store —
+        the warm-start path after loading persisted history."""
+        n = 0
+        for key in self.store.keys():
+            if self.store.window(key):
+                self._rebuild(key)
+                n += 1
+        return n
+
+    def load_store(self, store) -> None:
+        """Swap in a (persisted) ``RolloutHistoryStore``; live trees are
+        dropped and rebuilt lazily per key (or eagerly via
+        ``warm_trees``). The drafter's configured window size wins over
+        the persisted one: shrinking evicts immediately, growing lets
+        the window refill naturally (evicted payloads are gone)."""
+        self.store = store
+        self.index.clear()
+        self.epoch = store.epoch
+        if store.window_size != self._window_size:
+            store.set_window_size(self._window_size)
 
     def begin_iteration(
         self, epoch: int, update_norm: Optional[float] = None
     ) -> None:
-        """Advance the epoch and refresh every tree from its window.
+        """Advance the epoch cursor and reconcile windows — incremental.
 
-        If ``adapt_window_to_updates`` is set, larger optimizer updates
-        (policy moved further) shrink the window (paper §4.1.2: "larger
-        parameter updates imply shorter windows").
+        Unlike the seed (full rebuild of every tree per iteration), this
+        only (a) advances the decay reference epoch, (b) applies window
+        adaptation — larger optimizer updates shrink the window (paper
+        §4.1.2: "larger parameter updates imply shorter windows"),
+        retiring evicted docs online — and (c) compacts corpora whose
+        retired text dominates. Amortized cost is sub-linear in the
+        window size.
         """
         self.epoch = int(epoch)
+        self.store.begin_iteration(self.epoch)
         if self.cfg.adapt_window_to_updates and update_norm is not None:
             w = int(round(self.cfg.window_size / (1.0 + self.cfg.window_gamma * float(update_norm))))
             self._window_size = max(self.cfg.min_window, min(self.cfg.window_size, w))
-            for key, win in list(self._windows.items()):
-                if win.maxlen != self._window_size:
-                    self._windows[key] = collections.deque(
-                        list(win)[-self._window_size :], maxlen=self._window_size
-                    )
-        for key in list(self._windows.keys()):
-            self._rebuild(key)
+        if self.store.window_size != self._window_size:
+            for key, evs in self.store.set_window_size(self._window_size).items():
+                for ev in evs:
+                    self.index.evict(key, ev.doc_id)
+        self.index.begin_epoch(self.epoch)
+        for key in self.store.keys():
+            if self.index.needs_compaction(key):
+                self.index.maybe_compact(key, self.store.window(key))
         self.stats["iterations"] += 1
 
     # -- sessions ------------------------------------------------------------
@@ -231,7 +302,11 @@ class SuffixDrafter:
         if problem_id is None and self._trie is not None and prompt is not None:
             problem_id = self._trie.route(prompt)
         key = self._key(problem_id)
-        tree = self._trees.get(key)
+        tree = self.index.tree(key)
+        if tree is None and self.store.window(key):
+            # Warm store without a live tree yet (persisted history
+            # loaded lazily): build it on first use.
+            tree = self._rebuild(key)
         rtree = None
         if self.cfg.scope == "problem+request":
             # The request tree is fed (prompt + generation) by the session
@@ -246,8 +321,8 @@ class SuffixDrafter:
 
     # -- introspection ---------------------------------------------------
     def tree_tokens(self, problem_id=None) -> int:
-        tree = self._trees.get(self._key(problem_id))
-        return 0 if tree is None else tree.n_tokens
+        tree = self.index.tree(self._key(problem_id))
+        return 0 if tree is None else tree.n_live_tokens
 
     def n_trees(self) -> int:
-        return len(self._trees)
+        return len(self.index)

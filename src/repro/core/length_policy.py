@@ -157,3 +157,21 @@ class LengthPolicy:
         if self._all:
             return float(np.mean(self._all))
         return 256.0
+
+    # -- persistence -------------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-able snapshot (problem ids must be str/int). Per-problem
+        lists keep chronological order; ``_all`` is consumed only through
+        order-insensitive reductions (quantiles/means), so the global
+        interleaving is not preserved."""
+        return {
+            "all": [float(x) for x in self._all],
+            "hist": [[k, [float(x) for x in v]] for k, v in self._hist.items()],
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self._all = [float(x) for x in state["all"]]
+        self._hist = collections.defaultdict(list)
+        for k, v in state["hist"]:
+            self._hist[k] = [float(x) for x in v]
+        self._thresholds = None

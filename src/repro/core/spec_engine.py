@@ -445,6 +445,10 @@ class SpecEngine:
             alive &= active
             for b in np.nonzero(active)[0]:
                 rounds_per_row[b] += 1
+                if budgets_np[b] > 0:  # per-prompt acceptance telemetry
+                    self.drafter.note_draft(
+                        problem_ids[b], int(budgets_np[b]), int(accepted[b])
+                    )
                 take = cand[b, : n_take[b]].tolist()
                 outputs[b].extend(take)
                 if alive[b]:
@@ -457,7 +461,8 @@ class SpecEngine:
             if outputs[b] and outputs[b][-1] == e.eos_token:
                 outputs[b] = outputs[b][:-1]
             self.drafter.observe_rollout(
-                problem_ids[b], list(prompts[b]) + outputs[b], self.epoch
+                problem_ids[b], list(prompts[b]) + outputs[b], self.epoch,
+                response_len=len(outputs[b]),
             )
             self.length_policy.observe(problem_ids[b], len(outputs[b]))
         stats.n_toks_emitted = int(sum(len(o) for o in outputs))
@@ -620,6 +625,10 @@ class SpecEngine:
             alive &= mask
             for s in np.nonzero(mask)[0]:
                 req = sched.slots[s]
+                if budgets[s] > 0:  # per-prompt acceptance telemetry
+                    self.drafter.note_draft(
+                        pids[s], int(budgets[s]), int(accepted[s])
+                    )
                 take = cand[s, : n_take[s]].tolist()
                 req.output.extend(take)
                 emitted[s] += n_take[s]
@@ -722,7 +731,8 @@ class SpecEngine:
     def _finalize_request(self, req: Request) -> None:
         """Observe a finished rollout (drafter window + length history)."""
         self.drafter.observe_rollout(
-            req.problem_id, list(req.prompt) + req.output, self.epoch
+            req.problem_id, list(req.prompt) + req.output, self.epoch,
+            response_len=len(req.output),
         )
         self.length_policy.observe(req.problem_id, len(req.output))
 

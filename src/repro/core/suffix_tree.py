@@ -34,12 +34,13 @@ _INF = 1 << 60
 
 
 class _Node:
-    __slots__ = ("children", "link", "start", "end", "count", "wcount")
+    __slots__ = ("children", "link", "parent", "start", "end", "count", "wcount")
 
     def __init__(self, start: int, end: int) -> None:
         # Edge label = text[start:end) on the edge *into* this node.
         self.children: Dict[int, "_Node"] = {}
         self.link: Optional["_Node"] = None
+        self.parent: Optional["_Node"] = None  # maintained for removal
         self.start = start
         self.end = end  # _INF for open (leaf) edges
         self.count = 0  # occurrences (leaves below), refreshed lazily
@@ -65,10 +66,18 @@ class SuffixTree:
         self._sep = -1  # next (negative) separator token
         self.doc_epoch: List[int] = []  # epoch tag per document
         self._doc_start: List[int] = []  # corpus offset per document
+        self._doc_end: List[int] = []  # offset past the separator
+        self.doc_alive: List[bool] = []  # False once retired
         self.epoch_decay = float(epoch_decay)
         self.current_epoch = 0
         self._dirty = True
-        self.n_docs = 0
+        self.n_docs = 0  # live documents
+        self.n_live_tokens = 0  # corpus tokens owned by live docs (+seps)
+        # Leaf registry: suffix start position -> its leaf node. Every
+        # suffix becomes explicit once its document's unique separator is
+        # inserted, so between documents this covers the whole corpus;
+        # it is what makes online document retirement possible.
+        self._leaf_at: Dict[int, _Node] = {}
         # Bumped on every mutation: live MatchStates resync lazily (an
         # Ukkonen extension may split the very edge a matcher stands on).
         self.version = 0
@@ -109,6 +118,8 @@ class SuffixTree:
             if child is None:
                 # Rule 2: new leaf from active node
                 leaf = _Node(pos, _INF)
+                leaf.parent = self._active_node
+                self._leaf_at[pos - self._remainder + 1] = leaf
                 self._active_node.children[self.text[self._active_edge]] = leaf
                 if last_internal is not None:
                     last_internal.link = self._active_node
@@ -124,10 +135,14 @@ class SuffixTree:
                     break
                 # Rule 2 with split
                 split = _Node(child.start, child.start + self._active_len)
+                split.parent = self._active_node
                 self._active_node.children[self.text[self._active_edge]] = split
                 leaf = _Node(pos, _INF)
+                leaf.parent = split
+                self._leaf_at[pos - self._remainder + 1] = leaf
                 split.children[token] = leaf
                 child.start += self._active_len
+                child.parent = split
                 split.children[self.text[child.start]] = child
                 if last_internal is not None:
                     last_internal.link = split
@@ -145,13 +160,15 @@ class SuffixTree:
         self._dirty = True
         self.version += 1
 
-    def add_document(self, tokens: List[int], epoch: int = 0) -> None:
+    def add_document(self, tokens: List[int], epoch: int = 0) -> int:
         """Insert one rollout; a unique separator prevents cross-doc
-        matches. O(len(tokens)) amortized."""
+        matches. O(len(tokens)) amortized. Returns the document index
+        (pass it to ``remove_document`` to retire the rollout later)."""
         if not tokens:
-            return
+            return -1
         self._doc_start.append(len(self.text))
         self.doc_epoch.append(epoch)
+        self.doc_alive.append(True)
         self.n_docs += 1
         self.current_epoch = max(self.current_epoch, epoch)
         for t in tokens:
@@ -160,6 +177,49 @@ class SuffixTree:
             self.extend(int(t))
         self.extend(self._sep)
         self._sep -= 1
+        self._doc_end.append(len(self.text))
+        self.n_live_tokens += len(self.text) - self._doc_start[-1]
+        return len(self._doc_start) - 1
+
+    def remove_document(self, d: int) -> None:
+        """Retire one document online — the reverse of ``add_document``.
+
+        Deletes the document's suffix leaves (via the leaf registry) and
+        any ancestors left childless, in O(doc_len) dictionary
+        operations: no rebuild. Correctness rests on three separator
+        facts: (1) the Ukkonen active point is at the root between
+        documents, so the builder state never references removed nodes;
+        (2) no internal node's path spans a (unique) separator, so a
+        surviving node's suffix-link target also survives; (3) every
+        remaining node keeps >= 1 live leaf below it, so the pruned tree
+        is *structurally* the suffix tree of the live documents —
+        queries need no liveness filtering. Unary internal nodes left
+        behind are tolerated (paths and counts are unaffected).
+        """
+        if self._remainder != 0:
+            raise RuntimeError("cannot remove documents mid-extension")
+        if d < 0 or d >= len(self._doc_start):
+            raise IndexError(f"no document {d}")
+        if not self.doc_alive[d]:
+            raise ValueError(f"document {d} already removed")
+        start, end = self._doc_start[d], self._doc_end[d]
+        for i in range(start, end):
+            node: Optional[_Node] = self._leaf_at.pop(i, None)
+            while (
+                node is not None
+                and node is not self.root
+                and not node.children
+            ):
+                parent = node.parent
+                tok = self.text[node.start]
+                if parent is not None and parent.children.get(tok) is node:
+                    del parent.children[tok]
+                node = parent
+        self.doc_alive[d] = False
+        self.n_docs -= 1
+        self.n_live_tokens -= end - start
+        self._dirty = True
+        self.version += 1
 
     @property
     def n_tokens(self) -> int:
@@ -205,8 +265,19 @@ class SuffixTree:
                         d = self._doc_of(min(node.start, n - 1))
                         node.wcount = decay ** max(0, cur - self.doc_epoch[d])
                 else:
-                    node.count = sum(c.count for c in node.children.values())
-                    node.wcount = sum(c.wcount for c in node.children.values())
+                    # Sum children in sorted-token order: child dict order
+                    # depends on construction history, and float rounding
+                    # must not differ between an incrementally maintained
+                    # tree and a fresh rebuild (corresponding branch nodes
+                    # have the same child token sets — separators included,
+                    # which sort newest-document-first in both — so sorted
+                    # summation yields bit-identical weights).
+                    node.count = 0
+                    node.wcount = 0.0
+                    for t in sorted(node.children):
+                        c = node.children[t]
+                        node.count += c.count
+                        node.wcount += c.wcount
         self._dirty = False
 
     # ------------------------------------------------------------------
@@ -414,11 +485,15 @@ class MatchState:
                 continue
             if not node.children:
                 break
+            # Deterministic arg-max: highest weight, ties to the smallest
+            # token — child dict insertion order depends on construction
+            # history, and an incrementally maintained tree must propose
+            # identically to a fresh rebuild (history/incremental.py).
             best_t, best_c, best_w = None, None, -1.0
             for t, c in node.children.items():
                 if t < 0:
                     continue
-                if c.wcount > best_w:
+                if c.wcount > best_w or (c.wcount == best_w and t < best_t):
                     best_t, best_c, best_w = t, c, c.wcount
             if best_c is None:
                 break

@@ -1,0 +1,21 @@
+"""Cross-epoch rollout history subsystem.
+
+``store``       — append-only per-problem rollout log (windowed
+                  eviction, telemetry, epoch cursor).
+``incremental`` — live suffix-tree maintenance from store deltas
+                  (online extend + retire, compaction, rebuild fallback).
+``persist``     — save/load of history + drafter + length-policy state
+                  (import explicitly: ``from repro.history import
+                  persist`` — kept out of the eager exports because it
+                  reaches back into ``core.drafter``).
+"""
+
+from .incremental import IncrementalIndex, IndexStats
+from .store import RolloutHistoryStore, RolloutRecord
+
+__all__ = [
+    "IncrementalIndex",
+    "IndexStats",
+    "RolloutHistoryStore",
+    "RolloutRecord",
+]

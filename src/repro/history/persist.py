@@ -1,0 +1,196 @@
+"""Persistence for the rollout-history subsystem.
+
+Saves/loads the ``RolloutHistoryStore`` + drafter configuration +
+``LengthPolicy`` state as one JSON document, either standalone
+(``save_history``/``load_history`` — the ``--history-dir`` format used
+by ``launch/serve.py``) or embedded as a checkpoint sidecar blob next to
+the model weights (``engine_state``/``restore_engine`` — used by
+``rl/trainer.py`` through ``checkpoint.ckpt``'s sidecar channel).
+
+A resumed RL run, or a fresh serving process pointed at a history dir,
+starts with **warm trees and warm length priors**: suffix trees are
+rebuilt from the persisted windows (the verified rebuild path — query-
+equivalent to the live trees the original process maintained
+incrementally) and the length policy replays the recorded per-problem
+response lengths, so the scheduler's longest-predicted-first admission
+and the budget solver are history-aware from the first request.
+
+Every payload carries ``schema_version``; loads fail loudly on
+mismatch rather than silently mis-reading a foreign blob.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import asdict
+from typing import Any, Dict, Optional
+
+from .store import RolloutHistoryStore
+
+SCHEMA_VERSION = 1
+HISTORY_FILENAME = "history.json"
+
+
+class HistorySchemaError(RuntimeError):
+    """Raised when a persisted history blob has the wrong schema."""
+
+
+def _check_schema(state: Dict[str, Any], origin: str) -> None:
+    if not isinstance(state, dict) or "schema_version" not in state:
+        raise HistorySchemaError(
+            f"{origin}: not a history payload (missing schema_version)"
+        )
+    v = state["schema_version"]
+    if v != SCHEMA_VERSION:
+        raise HistorySchemaError(
+            f"{origin}: schema_version {v} != supported {SCHEMA_VERSION}; "
+            "re-save the history with this build or upgrade the loader"
+        )
+
+
+# -- state assembly --------------------------------------------------------
+def drafter_state(drafter) -> Dict[str, Any]:
+    return {
+        "cfg": asdict(drafter.cfg),
+        "epoch": drafter.epoch,
+        "window_size": drafter._window_size,
+        "stats": dict(drafter.stats),
+    }
+
+
+def history_state(
+    *,
+    store: Optional[RolloutHistoryStore] = None,
+    drafter=None,
+    length_policy=None,
+    meta: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Assemble one JSON-able payload. ``store`` defaults to the
+    drafter's own store when omitted."""
+    if store is None and drafter is not None:
+        store = drafter.store
+    state: Dict[str, Any] = {
+        "schema_version": SCHEMA_VERSION,
+        "meta": dict(meta or {}),
+    }
+    if store is not None:
+        state["store"] = store.state_dict()
+    if drafter is not None:
+        state["drafter"] = drafter_state(drafter)
+    if length_policy is not None:
+        state["length_policy"] = length_policy.state_dict()
+    return state
+
+
+def engine_state(engine, meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """History payload for a ``SpecEngine`` (drafter + store + lengths)."""
+    return history_state(
+        drafter=engine.drafter,
+        length_policy=engine.length_policy,
+        meta=meta,
+    )
+
+
+# -- restore ---------------------------------------------------------------
+def warm_drafter(drafter, state: Dict[str, Any], build_trees: bool = True):
+    """Load persisted history into an existing drafter.
+
+    Replaces the drafter's store, restores its epoch/window cursor and
+    (optionally) eagerly rebuilds every per-problem tree from the
+    persisted windows so the first request drafts against warm history.
+    """
+    _check_schema(state, "warm_drafter")
+    d = state.get("drafter")
+    if d is not None:
+        drafter.epoch = int(d.get("epoch", drafter.epoch))
+        # The persisted window size is transient *adaptive* state (it
+        # tracks update norms); only restore it when adaptation is on —
+        # otherwise the configured window wins, so an operator raising
+        # window_size over a persisted history actually gets it.
+        if drafter.cfg.adapt_window_to_updates:
+            drafter._window_size = int(
+                d.get("window_size", drafter._window_size)
+            )
+        drafter.stats.clear()  # replace, like every other restored field
+        drafter.stats.update(d.get("stats", {}))
+    if "store" in state:
+        drafter.load_store(RolloutHistoryStore.from_state(state["store"]))
+    if build_trees:
+        drafter.warm_trees()
+    return drafter
+
+
+def warm_length_policy(length_policy, state: Dict[str, Any]):
+    """Restore length history: explicit policy state when persisted,
+    else replayed from the store's recorded response lengths."""
+    _check_schema(state, "warm_length_policy")
+    if "length_policy" in state:
+        length_policy.load_state_dict(state["length_policy"])
+    elif "store" in state:
+        store = RolloutHistoryStore.from_state(state["store"])
+        store.warm_length_policy(length_policy)
+    return length_policy
+
+
+def restore_engine(engine, state: Dict[str, Any], build_trees: bool = True):
+    """Warm a ``SpecEngine`` (drafter store + trees + length priors)."""
+    _check_schema(state, "restore_engine")
+    warm_drafter(engine.drafter, state, build_trees=build_trees)
+    warm_length_policy(engine.length_policy, state)
+    engine.epoch = engine.drafter.epoch
+    return engine
+
+
+def restore_drafter(state: Dict[str, Any], build_trees: bool = True):
+    """Construct a fresh ``SuffixDrafter`` from a persisted payload."""
+    from repro.core.drafter import DrafterConfig, SuffixDrafter
+
+    _check_schema(state, "restore_drafter")
+    d = state.get("drafter", {})
+    cfg = DrafterConfig(**d["cfg"]) if "cfg" in d else DrafterConfig()
+    drafter = SuffixDrafter(cfg)
+    return warm_drafter(drafter, state, build_trees=build_trees)
+
+
+# -- filesystem ------------------------------------------------------------
+def history_path(dir_or_file: str) -> str:
+    if dir_or_file.endswith(".json"):
+        return dir_or_file
+    return os.path.join(dir_or_file, HISTORY_FILENAME)
+
+
+def save_history(dir_or_file: str, state: Optional[Dict] = None, **kwargs) -> str:
+    """Write a history payload to ``<dir>/history.json``.
+
+    Pass either a prebuilt payload (``state=...``) or the
+    ``history_state`` keyword arguments (store/drafter/length_policy/meta).
+    """
+    path = history_path(dir_or_file)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    if state is None:
+        state = history_state(**kwargs)
+    _check_schema(state, "save_history")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(state, f)
+    os.replace(tmp, path)  # atomic: a crashed save never corrupts history
+    return path
+
+
+def load_history(dir_or_file: str) -> Dict[str, Any]:
+    path = history_path(dir_or_file)
+    with open(path) as f:
+        state = json.load(f)
+    _check_schema(state, path)
+    return state
+
+
+def save_engine_history(
+    engine, dir_or_file: str, meta: Optional[Dict[str, Any]] = None
+) -> str:
+    return save_history(dir_or_file, state=engine_state(engine, meta))
+
+
+def load_engine_history(engine, dir_or_file: str, build_trees: bool = True):
+    return restore_engine(engine, load_history(dir_or_file), build_trees)

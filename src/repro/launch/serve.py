@@ -13,6 +13,13 @@ pool (``--slots`` device rows, longest-predicted-first admission) and
 completions are printed as they stream out — the serving shape for
 heavy traffic. ``--dry-run`` lowers+compiles the full config's serve
 step on the production mesh.
+
+``--history-dir DIR`` points the server at a persisted rollout history
+(``repro.history.persist`` format): the drafter starts with warm suffix
+trees and the length policy with warm per-problem priors, so the very
+first requests draft against cross-epoch history instead of cold
+trees. ``--save-history`` persists the (updated) history back to the
+same directory on exit — run-to-run the server keeps learning.
 """
 
 from __future__ import annotations
@@ -37,7 +44,15 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=0,
                     help="requests per round in continuous mode "
                          "(default: 2x --batch)")
+    ap.add_argument("--history-dir", default="",
+                    help="load persisted rollout history (warm trees + "
+                         "warm length priors) from this directory")
+    ap.add_argument("--save-history", action="store_true",
+                    help="persist updated rollout history back to "
+                         "--history-dir on exit")
     args = ap.parse_args()
+    if args.save_history and not args.history_dir:
+        ap.error("--save-history requires --history-dir")
 
     if args.dry_run:
         import subprocess
@@ -77,7 +92,52 @@ def main() -> None:
         drafter=SuffixDrafter(DrafterConfig(scope="problem+request",
                                             min_match=2)),
     )
+    if args.history_dir:
+        import os
+
+        from repro.history import persist
+
+        if os.path.exists(persist.history_path(args.history_dir)):
+            persist.load_engine_history(eng, args.history_dir)
+            print(
+                f"warm start: {eng.drafter.store.n_rollouts} rollouts / "
+                f"{eng.drafter.store.n_problems} problems from "
+                f"{args.history_dir} (epoch cursor "
+                f"{eng.drafter.store.epoch}, accept "
+                f"{eng.drafter.store.acceptance():.2f})"
+            )
+        else:
+            print(f"cold start: no history at {args.history_dir}")
+
+    def _persist_history() -> None:
+        if args.history_dir and args.save_history:
+            from repro.history import persist
+
+            path = persist.save_engine_history(eng, args.history_dir)
+            print(
+                f"saved history: {eng.drafter.store.n_rollouts} rollouts "
+                f"-> {path}"
+            )
+
     rng = np.random.default_rng(0)
+    try:
+        _serve_rounds(args, eng, rng)
+    finally:
+        # Persist whatever history accumulated, interrupted or not —
+        # losing a long session's rollouts defeats the warm start.
+        _persist_history()
+
+
+def _serve_rounds(args, eng, rng) -> None:
+    import time
+
+    import jax
+
+    # Continue the (possibly warm-restored) epoch cursor instead of
+    # rewinding to 1 — regressing it would weight stale history equal to
+    # fresh rollouts and persist the regressed cursor on exit.
+    base_epoch = eng.epoch
+
     if args.continuous:
         from repro.core.scheduler import Request
         from repro.core.spec_engine import RolloutStats
@@ -109,7 +169,7 @@ def main() -> None:
                 f"fwd={st.n_fwd:4d} tok/s={toks/max(dt,1e-9):7.1f} "
                 f"accept/round={st.acceptance_per_round:6.2f}"
             )
-            eng.begin_iteration(rnd + 1)
+            eng.begin_iteration(base_epoch + rnd + 1)
         return
 
     for rnd in range(args.rounds):
@@ -124,7 +184,7 @@ def main() -> None:
             f"round {rnd}: {(time.perf_counter()-t0)*1e3:8.1f} ms "
             f"fwd={st.n_fwd:4d} accept/round={st.acceptance_per_round:6.2f}"
         )
-        eng.begin_iteration(rnd + 1)
+        eng.begin_iteration(base_epoch + rnd + 1)
 
 
 if __name__ == "__main__":

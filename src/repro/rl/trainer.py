@@ -4,6 +4,14 @@ Per step: rollout (speculative or baseline) → verifiable rewards →
 group advantages → GRPO update → drafter window refresh keyed by the
 optimizer's update norm (paper §4.1.2). The drafter needs *no retraining*
 after policy updates — that is the paper's central systems claim.
+
+Checkpoints carry the full resumable state: params + optimizer pytrees
+in the .npz, and — in the versioned sidecar — the rollout-history store
+(drafter windows + telemetry), length-policy history, PRNG key, loader
+cursor and step/epoch cursor. ``load_checkpoint`` therefore resumes
+with warm suffix trees and warm length priors; at temperature 0 a
+resumed run emits rollout tokens identical to the uninterrupted one
+(tests/test_warm_start.py).
 """
 
 from __future__ import annotations
@@ -92,6 +100,14 @@ class Trainer:
             lambda p, t: compute_old_logprobs(p, cfg, t)
         )
         self.history: List[Dict[str, Any]] = []
+        # Resumable cursor (persisted in the checkpoint sidecar).
+        self._step = 0
+        self._epoch = 0
+        self._batch_idx = 0  # next batch within the current epoch
+        self._update_norm = 0.0
+        self._key = None  # training PRNG key; created lazily in run()
+        self._epoch_begun = -1  # last epoch begin_iteration ran for
+        self._epoch_batches = None  # (epoch, [batches]) shuffle cache
 
     def sft_warmup(self, steps: Optional[int] = None) -> float:
         """Supervised warmup on task target responses (pretraining
@@ -133,18 +149,42 @@ class Trainer:
     def run(self, steps: Optional[int] = None) -> List[Dict[str, Any]]:
         tcfg = self.tcfg
         n_steps = steps or tcfg.steps
-        if tcfg.sft_warmup_steps > 0 and not self.history:
+        if tcfg.sft_warmup_steps > 0 and not self.history and self._step == 0:
             self.sft_warmup()
-        key = jax.random.key(tcfg.seed + 1)
-        step = 0
-        epoch = 0
-        update_norm = 0.0
-        while step < n_steps:
-            self.engine.begin_iteration(epoch, update_norm)
-            for problems in self.loader.epoch_batches(epoch):
-                if step >= n_steps:
+        if self._key is None:
+            self._key = jax.random.key(tcfg.seed + 1)
+        while self._step < n_steps:
+            if self._epoch_begun != self._epoch:
+                # Once per epoch — a mid-epoch resume must not re-run
+                # the refresh the uninterrupted run did once (the
+                # checkpointed store already reflects it; re-running
+                # with the mid-epoch update norm would adapt the window
+                # differently and diverge from the uninterrupted run).
+                self.engine.begin_iteration(self._epoch, self._update_norm)
+                self._epoch_begun = self._epoch
+            resume_at = self._batch_idx
+            epoch_done = True
+            # One shuffle per epoch: a mid-epoch re-entry (run() called
+            # again on the same trainer) must fast-forward over the SAME
+            # permutation, not a freshly drawn one — epoch_batches()
+            # advances the loader RNG on every call. The cross-process
+            # path (load_checkpoint) instead clears this cache and
+            # relies on loader.seek() reproducing the draw.
+            if (
+                self._epoch_batches is None
+                or self._epoch_batches[0] != self._epoch
+            ):
+                self._epoch_batches = (
+                    self._epoch,
+                    list(self.loader.epoch_batches(self._epoch)),
+                )
+            for bi, problems in enumerate(self._epoch_batches[1]):
+                if bi < resume_at:
+                    continue  # fast-forward after a mid-epoch resume
+                if self._step >= n_steps:
+                    epoch_done = False
                     break
-                key, kr = jax.random.split(key)
+                self._key, kr = jax.random.split(self._key)
                 batch = self.worker.rollout(
                     problems, key=kr, max_new_tokens=tcfg.max_new_tokens
                 )
@@ -161,11 +201,11 @@ class Trainer:
                 )
                 jax.block_until_ready(metrics["loss"])
                 train_time = time.perf_counter() - t0
-                update_norm = float(metrics["update_norm"])
+                self._update_norm = float(metrics["update_norm"])
                 self.engine.set_params(self.params)
                 rec = {
-                    "step": step,
-                    "epoch": epoch,
+                    "step": self._step,
+                    "epoch": self._epoch,
                     "reward_mean": float(batch.rewards.mean()),
                     "reward_max": float(batch.rewards.max()),
                     "gen_time_s": batch.gen_time_s,
@@ -178,14 +218,85 @@ class Trainer:
                     "grad_norm": float(metrics["grad_norm"]),
                 }
                 self.history.append(rec)
-                if tcfg.ckpt_every and (step + 1) % tcfg.ckpt_every == 0 and tcfg.ckpt_path:
-                    from repro.checkpoint import save
-
-                    save(
-                        f"{tcfg.ckpt_path}/step{step+1}.npz",
-                        {"params": self.params},
-                        {"step": step + 1},
+                self._step += 1
+                self._batch_idx = bi + 1
+                if (
+                    tcfg.ckpt_every
+                    and self._step % tcfg.ckpt_every == 0
+                    and tcfg.ckpt_path
+                ):
+                    self.save_checkpoint(
+                        f"{tcfg.ckpt_path}/step{self._step}.npz"
                     )
-                step += 1
-            epoch += 1
+            if epoch_done:
+                self._epoch += 1
+                self._batch_idx = 0
         return self.history
+
+    # -- persistence -------------------------------------------------------
+    def save_checkpoint(self, path: str) -> str:
+        """Full resumable checkpoint: weights + optimizer in the npz,
+        rollout history / length policy / PRNG / cursor in the sidecar."""
+        from repro.checkpoint import save
+        from repro.history import persist
+
+        sidecar = {
+            "history": persist.engine_state(self.engine),
+            "cursor": {
+                "step": self._step,
+                "epoch": self._epoch,
+                "batch_idx": self._batch_idx,
+                "update_norm": self._update_norm,
+                # Draws made *before* the current epoch's shuffle: the
+                # resumed run() re-draws the current epoch itself, so a
+                # mid-epoch checkpoint (batch_idx > 0) excludes it.
+                "loader_draws": self.loader._draws
+                - (1 if self._batch_idx > 0 else 0),
+            },
+            "rng": (
+                None if self._key is None
+                else np.asarray(jax.random.key_data(self._key)).tolist()
+            ),
+            "metrics": self.history,
+        }
+        save(
+            path,
+            {"params": self.params, "opt": self.opt_state},
+            metadata={"step": self._step, "epoch": self._epoch},
+            sidecar=sidecar,
+        )
+        return path
+
+    def load_checkpoint(self, path: str) -> None:
+        """Resume from ``save_checkpoint`` output: restores weights,
+        optimizer, rollout-history store (suffix trees are rebuilt warm
+        from the persisted windows), length priors, PRNG key and the
+        step/epoch/loader cursor. At temperature 0 the resumed run's
+        rollouts are token-identical to an uninterrupted run."""
+        from repro.checkpoint import load, load_sidecar
+        from repro.history import persist
+
+        tree, _ = load(path, {"params": self.params, "opt": self.opt_state})
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.engine.set_params(self.params)
+        sc = load_sidecar(path)
+        persist.restore_engine(self.engine, sc["history"])
+        cur = sc["cursor"]
+        self._step = int(cur["step"])
+        self._epoch = int(cur["epoch"])
+        self._batch_idx = int(cur["batch_idx"])
+        # Mid-epoch checkpoint: the epoch's begin_iteration already ran
+        # before the save (its effects are in the restored store) — the
+        # resumed run must not repeat it.
+        self._epoch_begun = self._epoch if self._batch_idx > 0 else -1
+        self._epoch_batches = None  # loader.seek() reproduces the shuffle
+        self._update_norm = float(cur["update_norm"])
+        self.loader.seek(int(cur["loader_draws"]))
+        self._key = (
+            None if sc["rng"] is None
+            else jax.random.wrap_key_data(
+                jnp.asarray(np.asarray(sc["rng"], np.uint32))
+            )
+        )
+        self.history = list(sc["metrics"])

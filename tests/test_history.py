@@ -1,0 +1,303 @@
+"""Cross-epoch rollout history: store, incremental index, persistence.
+
+The load-bearing property: a suffix tree maintained *incrementally*
+(online extends + online document retirement, no rebuild) is
+query-equivalent — same longest suffix match, same continuation walk —
+to a tree rebuilt from scratch over the live documents.
+"""
+
+import json
+import random
+
+import pytest
+from conftest import hypothesis_or_stub
+
+# Property-based tests are skipped when hypothesis is unavailable
+# (offline CI image); the plain tests below still run.
+given, settings, st = hypothesis_or_stub()
+
+from repro.core.drafter import DrafterConfig, SuffixDrafter
+from repro.core.length_policy import LengthPolicy
+from repro.core.suffix_tree import SuffixTree
+from repro.history import persist
+from repro.history.incremental import IncrementalIndex
+from repro.history.store import RolloutHistoryStore
+
+
+# ---------------------------------------------------------------------------
+# store
+# ---------------------------------------------------------------------------
+def test_store_append_evict_and_cursor():
+    s = RolloutHistoryStore(window_size=2)
+    r0, ev = s.append("p", [1, 2, 3], epoch=0, response_len=3)
+    assert (r0.doc_id, ev) == (0, [])
+    r1, ev = s.append("p", [4, 5], epoch=0, response_len=2)
+    assert (r1.doc_id, ev) == (1, [])
+    r2, ev = s.append("p", [6], epoch=1, response_len=1)
+    assert r2.doc_id == 2  # stable, monotone cursor
+    assert [e.doc_id for e in ev] == [0]
+    assert ev[0].tokens is None  # payload dropped on eviction
+    assert [r.doc_id for r in s.window("p")] == [1, 2]
+    # telemetry survives eviction
+    assert s.lengths("p") == [3, 2, 1]
+    assert s.telemetry("p")["evicted"] == 1
+    s.begin_iteration(epoch=5)
+    assert (s.epoch, s.iteration) == (5, 1)
+
+
+def test_store_window_resize_and_telemetry():
+    s = RolloutHistoryStore(window_size=4)
+    for i in range(4):
+        s.append("p", [i], epoch=0)
+    evicted = s.set_window_size(2)
+    assert [e.doc_id for e in evicted["p"]] == [0, 1]
+    s.record_draft("p", drafted=10, accepted=7)
+    assert s.acceptance("p") == pytest.approx(0.7)
+    assert s.acceptance() == pytest.approx(0.7)
+
+
+def test_store_state_roundtrip():
+    s = RolloutHistoryStore(window_size=3)
+    for i in range(5):
+        s.append("p", [1, 2, i], epoch=i // 2, response_len=i)
+    s.append(7, [9, 9], epoch=2, response_len=2)  # int keys too
+    s.record_draft("p", 8, 5)
+    s.begin_iteration(3)
+    blob = json.dumps(s.state_dict())  # must be JSON-able
+    s2 = RolloutHistoryStore.from_state(json.loads(blob))
+    assert s2.window_size == 3 and s2.epoch == 3 and s2.iteration == 1
+    assert [r.doc_id for r in s2.window("p")] == [r.doc_id for r in s.window("p")]
+    assert [r.tokens for r in s2.window("p")] == [r.tokens for r in s.window("p")]
+    assert s2.lengths("p") == s.lengths("p")
+    assert s2.telemetry("p") == s.telemetry("p")
+    assert s2.window(7)[0].tokens == [9, 9]
+    # appending after restore continues the cursor, never reuses ids
+    r, _ = s2.append("p", [0], epoch=3)
+    assert r.doc_id == 5
+
+
+def test_store_warms_length_policy():
+    s = RolloutHistoryStore()
+    for L in (10, 12, 30, 50, 11, 28):
+        s.append("p", list(range(L)), epoch=0, response_len=L)
+    lp = LengthPolicy()
+    assert s.warm_length_policy(lp) == 6
+    assert lp.history_size("p") == 6
+    assert lp.expected_length("p") == pytest.approx(
+        sum(s.lengths("p")) / len(s.lengths("p"))
+    )
+
+
+# ---------------------------------------------------------------------------
+# incremental index vs rebuild (the tentpole property)
+# ---------------------------------------------------------------------------
+def _probe_equivalent(t_inc: SuffixTree, t_ref: SuffixTree, probes, budget=8):
+    for ctx in probes:
+        s1, s2 = t_inc.match_state(), t_ref.match_state()
+        s1.feed_many(ctx)
+        s2.feed_many(ctx)
+        assert s1.match_len == s2.match_len, (ctx,)
+        assert s1.propose(budget) == s2.propose(budget), (ctx,)
+
+
+def _run_interleaving(ops, probes, window, decay=1.0):
+    """Apply (add tokens) ops through store+index, mirror with rebuild."""
+    store = RolloutHistoryStore(window_size=window)
+    idx = IncrementalIndex(epoch_decay=decay)
+    for i, toks in enumerate(ops):
+        rec, evicted = store.append("k", toks, epoch=i)
+        idx.add("k", rec.doc_id, toks, i)
+        for ev in evicted:
+            idx.evict("k", ev.doc_id)
+        tree = idx.tree("k")
+        ref = IncrementalIndex(epoch_decay=decay).rebuild(
+            "ref", store.window("k"), epoch=i
+        )
+        assert tree.n_docs == ref.n_docs == len(store.window("k"))
+        _probe_equivalent(tree, ref, probes)
+
+
+tokens = st.integers(min_value=0, max_value=4)
+doc = st.lists(tokens, min_size=1, max_size=24)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    docs=st.lists(doc, min_size=1, max_size=10),
+    probes=st.lists(st.lists(tokens, min_size=1, max_size=12),
+                    min_size=1, max_size=4),
+    window=st.integers(min_value=1, max_value=4),
+    decay=st.sampled_from([1.0, 0.9, 0.5]),
+)
+def test_incremental_equals_rebuild_property(docs, probes, window, decay):
+    """Extends and evictions interleaved: longest match + continuation
+    path of the live tree must equal a full rebuild at every step —
+    exactly, including decayed weights (refresh_counts sums children in
+    sorted-token order precisely so rounding cannot differ)."""
+    _run_interleaving(docs, probes, window, decay)
+
+
+def test_incremental_equals_rebuild_randomized():
+    """Deterministic (offline-CI) version of the property test."""
+    rng = random.Random(7)
+    for trial in range(25):
+        n = rng.randrange(2, 14)
+        docs = [
+            [rng.randrange(5) for _ in range(rng.randrange(1, 30))]
+            for _ in range(n)
+        ]
+        probes = [
+            [rng.randrange(5) for _ in range(rng.randrange(1, 14))]
+            for _ in range(6)
+        ]
+        _run_interleaving(docs, probes, window=rng.randrange(1, 5),
+                          decay=(1.0, 0.9, 0.5)[trial % 3])
+
+
+def test_remove_document_mid_extension_rejected():
+    t = SuffixTree()
+    d = t.add_document([1, 2, 3], epoch=0)
+    t.extend(1)  # repeated token -> rule-3 showstopper: remainder > 0
+    assert t._remainder != 0
+    with pytest.raises(RuntimeError):
+        t.remove_document(d)
+
+
+def test_compaction_preserves_queries():
+    idx = IncrementalIndex(epoch_decay=1.0, compact_ratio=1.5,
+                           compact_min_tokens=64)
+    store = RolloutHistoryStore(window_size=2)
+    rng = random.Random(0)
+    compacted = False
+    for i in range(40):
+        toks = [rng.randrange(6) for _ in range(20)]
+        rec, ev = store.append("k", toks, epoch=i)
+        idx.add("k", rec.doc_id, toks, i)
+        for e in ev:
+            idx.evict("k", e.doc_id)
+        compacted |= idx.maybe_compact("k", store.window("k"))
+        ref = IncrementalIndex(epoch_decay=1.0).rebuild(
+            "r", store.window("k"), epoch=i
+        )
+        _probe_equivalent(idx.tree("k"), ref, [toks[-6:], toks[:4]])
+    assert compacted, "dead text must eventually trigger compaction"
+    assert idx.stats.compactions >= 1
+    # compaction bounds memory: corpus within ratio of the live window
+    t = idx.tree("k")
+    assert t.n_tokens <= 1.5 * t.n_live_tokens + 64
+
+
+def test_drafter_incremental_matches_reference_rebuild():
+    cfg = DrafterConfig(scope="problem", window_size=3, min_match=1,
+                        epoch_decay=1.0)
+    d = SuffixDrafter(cfg)
+    rng = random.Random(3)
+    for i in range(10):
+        d.observe_rollout("p", [rng.randrange(4) for _ in range(15)], i)
+        d.begin_iteration(i + 1)
+    live = d.index.tree(d._key("p"))
+    probes = [[rng.randrange(4) for _ in range(8)] for _ in range(8)]
+    snap = [(live.longest_suffix_match(c), live.propose(c, 6)) for c in probes]
+    ref = d._rebuild(d._key("p"))  # reference path replaces the tree
+    assert snap == [
+        (ref.longest_suffix_match(c), ref.propose(c, 6)) for c in probes
+    ]
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+def test_history_save_load_roundtrip(tmp_path):
+    cfg = DrafterConfig(scope="problem", window_size=4, min_match=1,
+                        epoch_decay=1.0)
+    d = SuffixDrafter(cfg)
+    lp = LengthPolicy()
+    rng = random.Random(5)
+    for e in range(3):
+        d.begin_iteration(e)
+        for pid in ("a", "b"):
+            toks = [rng.randrange(6) for _ in range(12)]
+            d.observe_rollout(pid, toks, e, response_len=len(toks))
+            lp.observe(pid, len(toks))
+    d.note_draft("a", 20, 13)
+    path = persist.save_history(
+        str(tmp_path), drafter=d, length_policy=lp, meta={"run": "t"}
+    )
+    state = persist.load_history(str(tmp_path))
+    assert state["meta"]["run"] == "t"
+    d2 = persist.restore_drafter(state)
+    assert d2.epoch == d.epoch
+    assert d2.store.n_rollouts == d.store.n_rollouts
+    assert d2.store.telemetry("a")["accepted"] == 13
+    # warm trees answer identically to the original live trees
+    for pid in ("a", "b"):
+        t1, t2 = d.index.tree(pid), d2.index.tree(pid)
+        assert t2 is not None and t2.n_docs == t1.n_docs
+        for _ in range(6):
+            ctx = [rng.randrange(6) for _ in range(7)]
+            assert t1.longest_suffix_match(ctx) == t2.longest_suffix_match(ctx)
+            assert t1.propose(ctx, 6) == t2.propose(ctx, 6)
+    lp2 = persist.warm_length_policy(LengthPolicy(), state)
+    assert lp2.expected_length("a") == pytest.approx(lp.expected_length("a"))
+    assert lp2.thresholds() == lp.thresholds()
+    assert path.endswith("history.json")
+
+
+def test_history_schema_mismatch_rejected(tmp_path):
+    p = tmp_path / "history.json"
+    p.write_text(json.dumps({"schema_version": 999, "store": {}}))
+    with pytest.raises(persist.HistorySchemaError, match="schema_version"):
+        persist.load_history(str(tmp_path))
+    p.write_text(json.dumps({"no": "version"}))
+    with pytest.raises(persist.HistorySchemaError):
+        persist.load_history(str(tmp_path))
+
+
+def test_warm_store_cold_tree_rebuilds_on_observe():
+    """A drafter given a persisted store must not drop old history when
+    the first new rollout arrives before any session touched the key."""
+    d1 = SuffixDrafter(DrafterConfig(window_size=4, min_match=1,
+                                     epoch_decay=1.0))
+    d1.observe_rollout("p", [1, 2, 3, 4], 0)
+    d1.observe_rollout("p", [1, 2, 3, 4], 0)
+    state = persist.history_state(drafter=d1)
+    d2 = persist.restore_drafter(state, build_trees=False)
+    assert d2.index.tree("p") is None
+    d2.observe_rollout("p", [1, 2, 3, 9], 1)
+    tree = d2.index.tree("p")
+    assert tree is not None and tree.n_docs == 3
+    s = d2.new_session("p", [1, 2, 3])
+    assert s.propose(1) == [4]  # majority from the *persisted* rollouts
+
+
+# ---------------------------------------------------------------------------
+# checkpoint sidecar
+# ---------------------------------------------------------------------------
+def test_ckpt_sidecar_roundtrip(tmp_path):
+    import numpy as np
+
+    from repro.checkpoint import load, load_sidecar, save
+
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    blobs = {"history": {"x": [1, 2, 3]}, "note": "warm"}
+    path = str(tmp_path / "ck.npz")
+    save(path, tree, metadata={"step": 3}, sidecar=blobs)
+    restored, meta = load(path, tree)  # sidecar must not break pytree load
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+    assert meta["step"] == 3
+    assert load_sidecar(path) == blobs
+
+
+def test_ckpt_sidecar_version_check(tmp_path):
+    import numpy as np
+
+    from repro.checkpoint import load_sidecar, save
+
+    path = str(tmp_path / "ck.npz")
+    save(path, {"w": np.zeros(2)}, sidecar={"a": 1})
+    with pytest.raises(ValueError, match="schema_version"):
+        load_sidecar(path, expected_version=2)
+    path2 = str(tmp_path / "bare.npz")
+    save(path2, {"w": np.zeros(2)})
+    with pytest.raises(KeyError, match="no sidecar"):
+        load_sidecar(path2)
