@@ -13,6 +13,7 @@ import time
 import traceback
 
 MODULES = [
+    "bench_draft",
     "bench_history",
     "bench_rollout",
     "fig01_batch_collapse",

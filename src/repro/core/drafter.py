@@ -34,6 +34,8 @@ import collections
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
+import numpy as np
+
 from .suffix_tree import MatchState, SuffixTree
 
 # NOTE: repro.history imports repro.core (suffix_tree); the drafter's
@@ -53,6 +55,16 @@ class DrafterConfig:
     adapt_window_to_updates: bool = False
     window_gamma: float = 1.0
     min_window: int = 4
+    # Context-tail length fed to the device matcher (batched sessions):
+    # the usable match depth is capped at this many tokens. Chosen to
+    # equal MatchState's resync_cap, which imposes the same cap on host
+    # sessions whenever the tree mutated since their last round — the
+    # continuous-serving regime. In mutation-free stretches (lock-step
+    # generate within one batch) a persistent host session could hold
+    # matches deeper than the tail; the device path deliberately trades
+    # that tail-risk depth for bounded per-round state (acceptance-only
+    # effect — T=0 verification is lossless either way).
+    device_tail: int = 64
 
     def __post_init__(self) -> None:
         if self.scope not in ("problem", "problem+request", "global"):
@@ -154,6 +166,232 @@ class DraftSession:
         m = self._pstate.match_len if self._pstate is not None else 0
         r = self._rstate.match_len if self._rstate is not None else 0
         return max(m, r)
+
+
+class BatchedDraftSessions:
+    """B-row draft state issuing ONE batched device propose per round.
+
+    The per-row ``DraftSession`` walks the suffix tree in Python once
+    per row per verify round; at large batch that host round-trip — not
+    the model — bounds the round rate. This class keeps only a bounded
+    context tail per row (cheap list bookkeeping on ``feed``) and
+    resolves the whole batch's longest-suffix matches + greedy
+    continuations in a single ``kernels/suffix_match`` device call over
+    the packed forest of the rows' per-problem trees
+    (``SuffixTree.pack()``, version-gated so the flat export is reused
+    until the index mutates).
+
+    ``dispatch``/``consume`` split the round so the engine can overlap
+    the device propose with other host/device work (slot-recycling
+    prefills, round bookkeeping); ``propose_batch`` is the synchronous
+    convenience wrapper. Proposals are bit-identical to a host
+    ``MatchState`` fed the same tail (property-tested), and the tail
+    bound equals ``MatchState``'s resync cap — the depth the host path
+    itself is limited to whenever trees mutate between rounds.
+
+    Scope ``problem+request`` needs the per-request tree (built online
+    from the row's own generation, never document-complete) and falls
+    back to per-row host sessions transparently.
+    """
+
+    def __init__(
+        self, drafter: "SuffixDrafter", n_rows: int, device: bool = True
+    ) -> None:
+        self.drafter = drafter
+        self.cfg = drafter.cfg
+        self.n_rows = int(n_rows)
+        self.device = bool(device) and self.cfg.scope != "problem+request"
+        self.tail_len = int(self.cfg.device_tail)
+        self._sessions: List[Optional[DraftSession]] = [None] * self.n_rows
+        self._keys: List[object] = [None] * self.n_rows
+        # per-row context tails as flat ring-ish buffers (numpy slice
+        # writes; a deque would cost a python-level copy per dispatch)
+        self._tails = np.full((self.n_rows, 4 * self.tail_len), -1, np.int32)
+        self._tlen = np.zeros(self.n_rows, np.int64)
+        self._open = [False] * self.n_rows
+        # forest cache: packed trees by key + their combined device form
+        self._packed_by_key: Dict[object, object] = {}
+        self._forest = None
+        self._roots_by_key: Dict[object, int] = {}
+        # monotone bucket floors: a sliding window makes tree sizes
+        # oscillate, and a pow2 bucket flipping back and forth would
+        # recompile the kernel every few rounds — buckets only grow.
+        self._min_nodes = 0
+        self._min_edges = 0
+        self._min_corpus = 0
+
+    # -- row lifecycle -----------------------------------------------------
+    def open(self, row: int, problem_id, prompt: Optional[Sequence[int]] = None) -> None:
+        if not self.device:
+            self._sessions[row] = self.drafter.new_session(problem_id, prompt)
+            self._open[row] = True
+            return
+        self._keys[row] = self.drafter._key(problem_id)
+        self._tlen[row] = 0
+        self._open[row] = True
+        if prompt is not None:
+            self.feed(row, prompt)
+        self.drafter.stats["sessions"] += 1
+
+    def feed(self, row: int, tokens: Sequence[int]) -> None:
+        if not self.device:
+            if self._sessions[row] is not None:
+                self._sessions[row].feed(tokens)
+            return
+        arr = np.asarray(tokens, np.int64)
+        m = self.tail_len
+        k = len(arr)
+        if k >= m:
+            arr = arr[-m:]
+            k = m
+        cur = int(self._tlen[row])
+        buf = self._tails[row]
+        if cur + k > buf.shape[0]:
+            buf[:m] = buf[cur - m:cur]  # compact: keep the live tail
+            cur = m
+        buf[cur:cur + k] = arr
+        self._tlen[row] = cur + k
+
+    def close(self, row: int) -> None:
+        self._sessions[row] = None
+        self._tlen[row] = 0
+        self._keys[row] = None
+        self._open[row] = False
+
+    # -- batched propose ---------------------------------------------------
+    def _refresh_forest(self, need_keys) -> None:
+        """(Re)pack the device forest iff any needed tree's flat export
+        changed — ``SuffixTree.pack()`` is version-gated, so identity of
+        the returned pack is the change signal."""
+        from repro.kernels.suffix_match import ops as sm_ops
+
+        drafter = self.drafter
+        changed = False
+        for key in need_keys:
+            tree = drafter.index.tree(key)
+            if tree is None and drafter.store.window(key):
+                # warm store, cold tree (persisted history): build lazily
+                tree = drafter._rebuild(key)
+            if tree is None:
+                continue
+            pk = tree.pack()
+            if self._packed_by_key.get(key) is not pk:
+                self._packed_by_key[key] = pk
+                changed = True
+        if changed or (self._forest is None and self._packed_by_key):
+            open_keys = {self._keys[b] for b in range(self.n_rows)
+                         if self._open[b]}
+            for key in [k for k in self._packed_by_key
+                        if k not in open_keys]:
+                del self._packed_by_key[key]  # row recycled away
+            keys = list(self._packed_by_key.keys())
+            # The packed corpus carries retired text (and the node table
+            # retired unary internals) until the index compacts at
+            # compact_ratio x live, so sizes cycle between ~live and
+            # ~ratio x live: floor every bucket at the cycle's maximum
+            # (nodes <= 2 x corpus tokens), rounded to a power of two,
+            # so steady-state serving never recompiles the kernel.
+            live = sum(
+                t.n_live_tokens
+                for t in (drafter.index.tree(k) for k in keys)
+                if t is not None
+            )
+            floor_c = int((drafter.index.compact_ratio + 1.0) * live)
+            p2 = sm_ops._bucket(max(floor_c, sm_ops._MIN_CORPUS), 1)
+            self._forest, roots = sm_ops.pack_forest(
+                [self._packed_by_key[k] for k in keys],
+                min_nodes=max(self._min_nodes, 2 * p2, sm_ops._MIN_NODES),
+                min_edges=max(self._min_edges, 2 * p2, sm_ops._MIN_EDGES),
+                min_corpus=max(self._min_corpus, p2),
+            )
+            self._min_nodes = int(self._forest.suffix_link.shape[0])
+            self._min_edges = int(self._forest.edge_node.shape[0])
+            self._min_corpus = int(self._forest.corpus.shape[0])
+            self._roots_by_key = {k: int(r) for k, r in zip(keys, roots)}
+            self.drafter.stats["forest_repacks"] += 1
+
+    def prewarm(self) -> None:
+        """Refresh packs/forest for every open row's tree NOW.
+
+        The engine calls this in the verify-overlap window, right after
+        finished rollouts are observed: the O(corpus) repack of a
+        mutated tree then runs while the device executes the in-flight
+        verify, keeping the round's propose dispatch cache-hit — the
+        repack amortizes against ``observe_rollout``, exactly like the
+        incremental index maintenance it follows.
+        """
+        if not self.device:
+            return
+        keys = {self._keys[b] for b in range(self.n_rows) if self._open[b]}
+        if keys:
+            self._refresh_forest(keys)
+
+    def dispatch(self, budgets) -> Optional[tuple]:
+        """Issue the round's batched propose; returns an opaque handle
+        for ``consume`` (device arrays still in flight)."""
+        budgets = np.asarray(budgets)
+        if not self.device:
+            out = [[] for _ in range(self.n_rows)]
+            for b in range(self.n_rows):
+                if self._open[b] and self._sessions[b] is not None \
+                        and budgets[b] > 0:
+                    out[b] = self._sessions[b].propose(int(budgets[b]))
+            return ("host", out)
+        need = [b for b in range(self.n_rows)
+                if self._open[b] and budgets[b] > 0]
+        if not need:
+            return None
+        self._refresh_forest({self._keys[b] for b in need})
+        if self._forest is None:
+            return None
+        from repro.kernels.suffix_match import ops as sm_ops
+
+        m = self.tail_len
+        B = -(-self.n_rows // 8) * 8  # row bucket: bounded jit variants
+        query = np.full((B, m + 2), -1, np.int32)
+        query[:, -1] = 0  # budgets
+        rows = []
+        for b in need:
+            root = self._roots_by_key.get(self._keys[b], -1)
+            if root < 0:
+                continue
+            cur = int(self._tlen[b])
+            n = min(cur, m)
+            if n:
+                query[b, m - n:m] = self._tails[b, cur - n:cur]
+            query[b, -2] = root
+            query[b, -1] = min(int(budgets[b]), self.cfg.max_draft)
+            rows.append(b)
+        if not rows:
+            return None
+        res = sm_ops.suffix_match_propose(
+            self._forest, None, None, None,
+            n_prop_max=self.cfg.max_draft,
+            min_match=self.cfg.min_match,
+            query=query,
+        )
+        self.drafter.stats["batched_proposes"] += 1
+        return ("device", rows, res)
+
+    def consume(self, handle) -> List[List[int]]:
+        """Materialize a ``dispatch`` handle into per-row proposals."""
+        out = [[] for _ in range(self.n_rows)]
+        if handle is None:
+            return out
+        if handle[0] == "host":
+            return handle[1]
+        _, rows, (_, n_prop, props) = handle
+        n_prop = np.asarray(n_prop)
+        props = np.asarray(props)
+        for b in rows:
+            n = int(n_prop[b])
+            if n > 0:
+                out[b] = props[b, :n].tolist()
+        return out
+
+    def propose_batch(self, budgets) -> List[List[int]]:
+        """One batched propose for the round (synchronous wrapper)."""
+        return self.consume(self.dispatch(budgets))
 
 
 _GLOBAL_KEY = "__global__"
@@ -318,6 +556,20 @@ class SuffixDrafter:
             sess.feed(prompt)
         self.stats["sessions"] += 1
         return sess
+
+    def batched_sessions(
+        self, n_rows: int, device: Optional[bool] = None
+    ) -> BatchedDraftSessions:
+        """B-row draft state with one batched device propose per round.
+
+        ``device=None`` auto-selects: the device path for tree-only
+        scopes (problem / global), per-row host sessions for
+        ``problem+request`` (the request tree is never document-complete
+        and stays host-side).
+        """
+        if device is None:
+            device = self.cfg.scope != "problem+request"
+        return BatchedDraftSessions(self, n_rows, device=device)
 
     # -- introspection ---------------------------------------------------
     def tree_tokens(self, problem_id=None) -> int:

@@ -76,6 +76,12 @@ class LengthPolicy:
         # Strict lower boundary so tied quantiles (many equal-length
         # rollouts) degrade to MEDIUM rather than disabling speculation.
         t_s, t_l = self.thresholds()
+        if t_s == float("inf"):
+            # No thresholds yet (history < min_history): every length
+            # would compare below +inf and classify SHORT — budget 0,
+            # silently disabling speculation for direct callers. Stay
+            # MEDIUM until real quantiles exist.
+            return MEDIUM
         if length < t_s:
             return SHORT
         if length <= t_l:
@@ -105,22 +111,41 @@ class LengthPolicy:
         return prior
 
     # -- runtime update -----------------------------------------------------
-    def posterior(self, problem_id, partial_length: float) -> np.ndarray:
-        """P(c | l, Init): empirical class distribution among historical
-        rollouts with final length >= l, blended with the init prior."""
-        prior = self.init_prior(problem_id)
-        pool = self._hist.get(problem_id) or self._all
-        if len(self._all) < self.cfg.min_history:
-            return prior
+    def _survivor_likelihood(self, pool, partial_length: float) -> np.ndarray:
+        """Class distribution among rollouts of `pool` with final length
+        >= l; [0, 0, 1] when l exceeds everything seen (definitely Long)."""
         surv = [L for L in pool if L >= partial_length]
         if not surv:
-            # Already longer than anything seen: definitely Long.
-            like = np.array([0.0, 0.0, 1.0])
+            return np.array([0.0, 0.0, 1.0])
+        counts = np.full(3, 1e-3)
+        for L in surv:
+            counts[self.classify_length(L)] += 1
+        return counts / counts.sum()
+
+    def posterior(self, problem_id, partial_length: float) -> np.ndarray:
+        """P(c | l, Init): empirical class distribution among historical
+        rollouts with final length >= l, blended with the init prior.
+
+        With thin per-problem history (1-3 samples) the per-problem
+        survivor pool alone yields a degenerate likelihood, so it is
+        blended with the global survivor pool, weighted by how much
+        per-problem evidence exists, until per-problem history reaches
+        ``min_history``.
+        """
+        prior = self.init_prior(problem_id)
+        if len(self._all) < self.cfg.min_history:
+            return prior
+        h = self._hist.get(problem_id, ())
+        if len(h) >= self.cfg.min_history:
+            like = self._survivor_likelihood(h, partial_length)
         else:
-            counts = np.full(3, 1e-3)
-            for L in surv:
-                counts[self.classify_length(L)] += 1
-            like = counts / counts.sum()
+            like = self._survivor_likelihood(self._all, partial_length)
+            if h:
+                lam = len(h) / float(self.cfg.min_history)
+                like = (
+                    lam * self._survivor_likelihood(h, partial_length)
+                    + (1.0 - lam) * like
+                )
         w = self.cfg.prior_weight
         post = w * prior + (1.0 - w) * like
         # A partial length already above a threshold rules classes out.

@@ -1,13 +1,17 @@
 """Speculative-decoding rollout engine (paper Fig. 3) — lock-step and
 continuous-batching modes.
 
-Host side: per-request suffix-tree draft sessions (drafter.py), the
-length-aware budget policy (length_policy.py + budget.py), vectorized
-EOS/emit bookkeeping, and rollout statistics. Device side: jitted
-prefill and verify steps (models/model.py + verify.py).
+Host side: the length-aware budget policy (length_policy.py +
+budget.py), per-row context-tail bookkeeping, vectorized EOS/emit
+bookkeeping, and rollout statistics. Device side: jitted prefill and
+verify steps (models/model.py + verify.py) plus ONE batched
+draft-proposal call per round (`SuffixDrafter.batched_sessions` over
+the `kernels/suffix_match` packed-tree kernel — per-row host tree
+walks only remain for the `problem+request` scope or
+``device_draft="off"``).
 
 Two serving modes share the same stepwise primitives (budget solve →
-host draft → device verify → vectorized consume):
+batched draft propose → device verify → vectorized consume):
 
 * ``generate``            — lock-step batched rollout: one fixed batch,
   every row steps together; finished rows ride along as dead padded
@@ -66,6 +70,19 @@ class EngineConfig:
     unlimited_budget: bool = False  # ablation: always max_draft
     attn_impl: str = "xla"
     cache_headroom: int = 64
+    # Batched device drafting (kernels/suffix_match): "auto" uses the
+    # device path whenever the drafter scope supports it (problem /
+    # global; problem+request keeps per-row host sessions), "on"/"off"
+    # force it. One batched propose per round replaces B per-row Python
+    # tree walks; proposals stay host-oracle-identical on the same tail.
+    device_draft: str = "auto"
+
+    def __post_init__(self) -> None:
+        if self.device_draft not in ("auto", "on", "off"):
+            raise ValueError(
+                f"device_draft must be 'auto'|'on'|'off', "
+                f"got {self.device_draft!r}"
+            )
 
 
 @dataclass
@@ -258,6 +275,13 @@ class SpecEngine:
                 return b
         return self.engine.max_draft
 
+    def _batched_sessions(self, n_rows: int):
+        """Per-round draft state: one batched device propose per round
+        (``EngineConfig.device_draft``), host per-row sessions otherwise."""
+        e = self.engine
+        device = None if e.device_draft == "auto" else e.device_draft == "on"
+        return self.drafter.batched_sessions(n_rows, device=device)
+
     # -- budgets --------------------------------------------------------------
     def _round_budgets(
         self, problem_ids, emitted_lens, active, remaining
@@ -371,11 +395,10 @@ class SpecEngine:
                 temperature=e.temperature, key=k0,
             )
         ).astype(np.int32)
-        # ---- draft sessions ----
-        sessions = [
-            self.drafter.new_session(problem_ids[b], list(prompts[b]))
-            for b in range(B)
-        ]
+        # ---- draft sessions (batched: one device propose per round) ----
+        bds = self._batched_sessions(B)
+        for b in range(B):
+            bds.open(b, problem_ids[b], list(prompts[b]))
         outputs: List[List[int]] = [[] for _ in range(B)]
         active = np.ones(B, bool)
         emitted = np.zeros(B, np.int64)
@@ -394,7 +417,7 @@ class SpecEngine:
                 if max_new_arr[b] <= 1:  # head token already fills the limit
                     active[b] = False
                 else:
-                    sessions[b].feed([tok])
+                    bds.feed(b, [tok])
         # account the prefill pass
         stats.n_fwd += 1
         stats.n_toks_proposed += int(mask.sum())
@@ -406,14 +429,14 @@ class SpecEngine:
             )
             kmax = int(budgets_np.max()) if active.any() else 0
             K = self._bucket(kmax)
-            # ---- host drafting ----
+            # ---- drafting: one batched propose for all active rows;
+            # the device walk overlaps the block assembly below ----
+            prop_handle = bds.dispatch(budgets_np)
             block = np.zeros((B, K + 1), np.int32)
             block[:, 0] = head
+            props = bds.consume(prop_handle)
             for b in np.nonzero(active)[0]:
-                if budgets_np[b] <= 0:
-                    budgets_np[b] = 0
-                    continue
-                prop = sessions[b].propose(int(budgets_np[b]))
+                prop = props[b]
                 budgets_np[b] = len(prop)
                 if prop:
                     block[b, 1 : 1 + len(prop)] = prop
@@ -452,7 +475,9 @@ class SpecEngine:
                 take = cand[b, : n_take[b]].tolist()
                 outputs[b].extend(take)
                 if alive[b]:
-                    sessions[b].feed(take)
+                    bds.feed(b, take)
+                else:
+                    bds.close(b)
             emitted[active] += n_take[active]
             head = np.where(alive, next_tok, head)
             active = alive
@@ -492,11 +517,16 @@ class SpecEngine:
         Rounds are double-buffered: after the jitted verify for round
         *t* is dispatched, the host (a) observes rollouts that finished
         in earlier rounds — the drafter/length-policy updates benefit
-        still-running stragglers mid-serve — and (b) pre-solves round
-        *t+1* budgets from bounded-staleness emitted counts (re-clamped
-        against fresh limits before dispatch). ``res.accepted`` is only
-        materialized when the next dispatch actually needs the head
-        tokens, so the device verify overlaps all of that host work.
+        still-running stragglers mid-serve — repacking any mutated
+        suffix trees for the device drafter (``bds.prewarm``), and (b)
+        pre-solves round *t+1* budgets from bounded-staleness emitted
+        counts (re-clamped against fresh limits before dispatch).
+        ``res.accepted`` is only materialized when the next dispatch
+        actually needs the head tokens, so the device verify overlaps
+        all of that host work. The round's batched draft propose is
+        itself dispatched before slot admissions, overlapping the
+        device suffix walk with the admissions' B=1 prefills (rows
+        admitted in round *t* draft from round *t+1* on).
 
         Greedy verification is lossless, so per-request outputs are
         token-identical to ``generate`` at temperature 0.
@@ -533,7 +563,7 @@ class SpecEngine:
         max_new_arr = np.ones(n_slots, np.int64)
         active = np.zeros(n_slots, bool)
         pids: List[Any] = [None] * n_slots
-        sessions: List[Any] = [None] * n_slots
+        bds = self._batched_sessions(n_slots)
 
         pending = None  # in-flight round: (res<device>, block, budgets, mask)
         finalize_q: List[Request] = []  # finished; observation deferred
@@ -591,11 +621,8 @@ class SpecEngine:
                     if req.max_new_tokens <= 1:  # head fills the limit
                         finish(req)
                         continue
-                    req.session = self.drafter.new_session(
-                        req.problem_id, req.prompt
-                    )
-                    req.session.feed([tok])
-                    sessions[s] = req.session
+                    bds.open(s, req.problem_id, req.prompt)
+                    bds.feed(s, [tok])
                     pids[s] = req.problem_id
                     head[s] = tok
                     emitted[s] = 1
@@ -633,11 +660,11 @@ class SpecEngine:
                 req.output.extend(take)
                 emitted[s] += n_take[s]
                 if alive[s]:
-                    sessions[s].feed(take)
+                    bds.feed(s, take)
                     head[s] = next_tok[s]
                 else:
                     active[s] = False
-                    sessions[s] = None
+                    bds.close(s)
                     pids[s] = None
                     finish(req)
 
@@ -656,8 +683,11 @@ class SpecEngine:
                 list(sched.slots),
             )
 
-        def dispatch(pre) -> None:
-            nonlocal pending, cache, key, round_no
+        def solve_budgets(pre) -> np.ndarray:
+            """Round budgets for currently-active rows (post-consume):
+            merge the overlap-window precompute where the slot occupant
+            is unchanged, solve fresh for the rest, clamp against fresh
+            emission limits."""
             remaining = max_new_arr - emitted
             budgets = np.zeros(n_slots, np.int64)
             if pre is not None:
@@ -671,21 +701,21 @@ class SpecEngine:
                 fresh_rows = active & ~use
             else:
                 fresh_rows = active.copy()
-            if fresh_rows.any():  # rows admitted/recycled since precompute
+            if fresh_rows.any():  # rows recycled since the precompute
                 fb = self._round_budgets(pids, emitted, fresh_rows, remaining)
                 budgets[fresh_rows] = fb[fresh_rows]
-            # re-clamp stale budgets against fresh limits
-            budgets = np.where(
+            return np.where(
                 active, np.minimum(budgets, np.maximum(remaining - 1, 0)), 0
             )
+
+        def dispatch(budgets, prop_handle) -> None:
+            nonlocal pending, cache, key, round_no
             K = self._bucket(int(budgets.max(initial=0)))
             block = np.zeros((n_slots, K + 1), np.int32)
             block[:, 0] = head
+            props = bds.consume(prop_handle)
             for s in np.nonzero(active)[0]:
-                if budgets[s] <= 0:
-                    budgets[s] = 0
-                    continue
-                prop = sessions[s].propose(int(budgets[s]))
+                prop = props[s]
                 budgets[s] = len(prop)
                 if prop:
                     block[s, 1 : 1 + len(prop)] = prop
@@ -711,15 +741,36 @@ class SpecEngine:
             # verify; the host observes finished rollouts (their drafts
             # immediately help still-running stragglers) and pre-solves
             # the next round's budgets.
-            while finalize_q:
-                req = finalize_q.pop(0)
-                self._finalize_request(req)
-                done_q.append(req)
+            if finalize_q:
+                while finalize_q:
+                    req = finalize_q.pop(0)
+                    self._finalize_request(req)
+                    done_q.append(req)
+                # repack mutated trees while the verify is in flight so
+                # the round's propose dispatch stays cache-hit (once,
+                # after ALL of the round's observations mutated trees)
+                bds.prewarm()
             pre = precompute_budgets() if pending is not None else None
             consume()  # device sync: the next dispatch needs the heads
+            # ---- batched draft propose for the rows that survived the
+            # round, dispatched BEFORE admissions: the device suffix
+            # walk overlaps the admissions' B=1 prefills. Rows admitted
+            # below draft from their next round on (one draft-free
+            # warmup round per admission).
+            budgets = prop_handle = None
+            if active.any():
+                budgets = solve_budgets(pre)
+                prop_handle = bds.dispatch(budgets)
             admit()  # recycle freed slots before the next round
             if active.any():
-                dispatch(pre)
+                if budgets is None:
+                    # The pool was empty before admissions (startup or
+                    # full drain): nothing was in flight to overlap
+                    # with, so solve + propose for the freshly admitted
+                    # batch now — warm history drafts from round one.
+                    budgets = solve_budgets(None)
+                    prop_handle = bds.dispatch(budgets)
+                dispatch(budgets, prop_handle)
             while done_q:
                 yield done_q.pop(0)
         while finalize_q:  # tail: rows that finished in the last round

@@ -30,7 +30,7 @@ class SuffixArray:
         arr = np.asarray(list(tokens) + [self._sep], dtype=np.int64)
         self._sep -= 1
         self._docs.append(arr)
-        self.text = np.concatenate(self._docs) if self._docs else arr
+        self.text = np.concatenate(self._docs)
         self._build()
 
     def _build(self) -> None:
@@ -103,15 +103,24 @@ class SuffixArray:
         return start, lo
 
     def longest_suffix_match(self, context: List[int], cap: int = 64) -> int:
-        """Longest suffix of context present as a substring; O(cap·m log n)
-        — the paper's point is that this is slower than the tree."""
-        best = 0
-        for L in range(min(cap, len(context)), 0, -1):
-            lo, hi = self.find_range(context[-L:])
-            if hi > lo:
-                best = L
-                break
-        return best
+        """Longest suffix of context present as a substring.
+
+        Occurrence is monotone in the suffix length (every substring of
+        an occurring string occurs), so the match length is binary
+        searched: O(log cap) range lookups, O(m log cap log n) overall —
+        not the O(cap · m log n) descending scan the seed used. Still
+        slower than the tree's O(m): that gap is the paper's Fig. 5
+        point and is what `benchmarks/fig05_tree_vs_array.py` measures.
+        """
+        lo, hi = 0, min(cap, len(context))
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            a, b = self.find_range(context[-mid:])
+            if b > a:
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo
 
     def propose(self, context: List[int], budget: int, cap: int = 64) -> List[int]:
         """Draft via the most frequent continuation among matched suffixes."""

@@ -28,9 +28,72 @@ Design notes
 
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 _INF = 1 << 60
+
+
+@dataclass
+class PackedSuffixTree:
+    """Flat, device-shippable export of one suffix tree.
+
+    Node table in first-child/next-sibling form (children in ascending
+    token order), edge spans into the packed corpus, per-node suffix
+    links and precomputed greedy continuation children. This is the
+    host-side contract of the ``kernels/suffix_match`` pallas kernel:
+    the kernel never touches Python objects, only these arrays.
+
+    Conventions (all int32, root = node 0):
+    * ``first_child[v]`` / ``next_sibling[v]`` — child linked list,
+      -1 terminated, siblings sorted by first edge token (host-side
+      introspection/debugging view of the topology).
+    * ``edge_node`` / ``edge_tok`` / ``edge_child`` — the same topology
+      as a (node, token) → child table, lexicographically sorted and
+      with separator edges excluded: this is what the kernel binary
+      searches for child lookup (a context token can never match a
+      separator edge, and re-descents only probe already-matched — i.e.
+      separator-free — text).
+    * ``edge_start[v]`` / ``edge_len[v]`` — label of the edge *into*
+      ``v`` as a span of ``corpus`` (leaf edges frozen at pack time).
+    * ``first_tok[v]`` — first token of the incoming edge (-1 for the
+      root and for separator edges, which can never match a context
+      token).
+    * ``suffix_link[v]`` — valid for the root (self) and every internal
+      node; Ukkonen's occasionally-missing last link is recomputed at
+      pack time, so the kernel needs no re-descend fallback. Leaves
+      carry the root (a matcher can never sit exactly on a leaf: the
+      corpus ends with a separator, so every leaf edge ends in a token
+      that cannot be matched).
+    * ``best_child[v]`` — the child the greedy highest-weight
+      continuation walk takes from ``v`` (ties to the smallest token,
+      separator edges excluded; -1 when no continuation exists). Baked
+      from the epoch-decayed ``wcount`` at pack time so the device walk
+      is pure pointer-chasing.
+    * ``corpus`` — the token text with every (unique, negative)
+      document separator collapsed to -1.
+    """
+
+    first_child: np.ndarray
+    next_sibling: np.ndarray
+    edge_node: np.ndarray
+    edge_tok: np.ndarray
+    edge_child: np.ndarray
+    suffix_link: np.ndarray
+    edge_start: np.ndarray
+    edge_len: np.ndarray
+    first_tok: np.ndarray
+    best_child: np.ndarray
+    corpus: np.ndarray
+    n_nodes: int
+    version: int
+    epoch: int
+
+    @property
+    def n_edges(self) -> int:
+        return int(len(self.edge_node))
 
 
 class _Node:
@@ -81,6 +144,11 @@ class SuffixTree:
         # Bumped on every mutation: live MatchStates resync lazily (an
         # Ukkonen extension may split the very edge a matcher stands on).
         self.version = 0
+        # pack() cache, keyed on (version, current_epoch): the flat
+        # export is reused until the index mutates or the decay epoch
+        # moves, amortizing the O(n) repack against observe_rollout.
+        self._packed: Optional[PackedSuffixTree] = None
+        self._packed_key: Optional[Tuple[int, int]] = None
 
     # ------------------------------------------------------------------
     # Construction (Ukkonen)
@@ -279,6 +347,132 @@ class SuffixTree:
                         node.count += c.count
                         node.wcount += c.wcount
         self._dirty = False
+
+    # ------------------------------------------------------------------
+    # Flat export for the device kernel
+    # ------------------------------------------------------------------
+    def pack(self) -> PackedSuffixTree:
+        """Export the tree as flat arrays (see ``PackedSuffixTree``).
+
+        Version-gated: the packed form is cached and reused until the
+        tree mutates (``version``) or the decay reference epoch moves
+        (``current_epoch``), so between rollout observations every
+        verify round hits the cache. Only document-complete trees pack
+        (corpus ends with a separator) — this is what guarantees a
+        matcher can never sit exactly on a leaf, which lets leaves skip
+        real suffix links.
+        """
+        if self._remainder != 0:
+            raise RuntimeError("cannot pack mid-extension")
+        if self.text and self.text[-1] >= 0:
+            raise RuntimeError(
+                "pack() requires a document-complete tree (corpus must "
+                "end with a separator); request-scoped trees stay host-side"
+            )
+        self.refresh_counts()
+        key = (self.version, self.current_epoch)
+        if self._packed is not None and self._packed_key == key:
+            return self._packed
+        n = len(self.text)
+        text = self.text
+        # DFS indexing, children in ascending-token order; parents come
+        # before children so depths resolve in one pass. All per-node
+        # fields accumulate in Python lists (per-element numpy stores
+        # are ~5x slower) and convert to arrays once at the end.
+        idx: Dict[int, int] = {id(self.root): 0}
+        nodes: List[_Node] = [self.root]
+        depth: List[int] = [0]
+        stack: List[Tuple[_Node, int]] = [(self.root, 0)]
+        while stack:
+            nd, i = stack.pop()
+            d = depth[i]
+            for t in sorted(nd.children):
+                ch = nd.children[t]
+                ci = len(nodes)
+                idx[id(ch)] = ci
+                nodes.append(ch)
+                depth.append(d + min(ch.end, n) - ch.start)
+                stack.append((ch, ci))
+        N = len(nodes)
+        first_child = [-1] * N
+        next_sibling = [-1] * N
+        suffix_link = [0] * N
+        edge_start = [0] * N
+        edge_len = [0] * N
+        first_tok = [-1] * N
+        best_child = [-1] * N
+        e_node: List[int] = []
+        e_tok: List[int] = []
+        e_child: List[int] = []
+        for i, nd in enumerate(nodes):
+            if i > 0:
+                edge_start[i] = nd.start
+                edge_len[i] = min(nd.end, n) - nd.start
+                t0 = text[nd.start]
+                first_tok[i] = t0 if t0 >= 0 else -1
+            children = nd.children
+            prev = -1
+            best_t, best_c, best_w = None, None, -1.0
+            for t in sorted(children):  # ascending token order
+                c = children[t]
+                ci = idx[id(c)]
+                if prev < 0:
+                    first_child[i] = ci
+                else:
+                    next_sibling[prev] = ci
+                prev = ci
+                if t >= 0:
+                    # node index grows with `i` and tokens are visited
+                    # sorted, so the edge table is lexicographic by
+                    # construction
+                    e_node.append(i)
+                    e_tok.append(t)
+                    e_child.append(ci)
+                    # Greedy continuation child: exact replica of the
+                    # host `_walk_continuation` arg-max (highest wcount,
+                    # ties to the smallest token, separators excluded).
+                    if c.wcount > best_w or (
+                        c.wcount == best_w and t < best_t
+                    ):
+                        best_t, best_c, best_w = t, c, c.wcount
+            if best_c is not None:
+                best_child[i] = idx[id(best_c)]
+            if i > 0 and children:
+                ln = nd.link
+                if ln is not None and id(ln) in idx:
+                    suffix_link[i] = idx[id(ln)]
+                else:
+                    # Ukkonen can leave the last-created internal node
+                    # of a document unlinked; its suffix is a branching
+                    # string, hence an explicit node — recover it by
+                    # skip/count descent of path[1:] from the root.
+                    end = min(nd.end, n)
+                    rem = depth[i] - 1
+                    pos = end - rem
+                    node = self.root
+                    while rem > 0:
+                        ch = node.children[text[pos]]
+                        el = min(ch.end, n) - ch.start
+                        assert rem >= el, "suffix-link target must be a node"
+                        node, pos, rem = ch, pos + el, rem - el
+                    suffix_link[i] = idx[id(node)]
+        corpus = np.asarray(text, np.int64).clip(min=-1).astype(np.int32)
+        self._packed = PackedSuffixTree(
+            first_child=np.asarray(first_child, np.int32),
+            next_sibling=np.asarray(next_sibling, np.int32),
+            edge_node=np.asarray(e_node, np.int32),
+            edge_tok=np.asarray(e_tok, np.int32),
+            edge_child=np.asarray(e_child, np.int32),
+            suffix_link=np.asarray(suffix_link, np.int32),
+            edge_start=np.asarray(edge_start, np.int32),
+            edge_len=np.asarray(edge_len, np.int32),
+            first_tok=np.asarray(first_tok, np.int32),
+            best_child=np.asarray(best_child, np.int32),
+            corpus=corpus, n_nodes=N, version=self.version,
+            epoch=self.current_epoch,
+        )
+        self._packed_key = key
+        return self._packed
 
     # ------------------------------------------------------------------
     # Queries

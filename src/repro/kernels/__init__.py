@@ -5,6 +5,13 @@
   KV cache, GQA, sliding window, online softmax over VMEM-streamed
   chunks. kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
   ref.py (pure-jnp oracle).
+- suffix_match/: batched longest-suffix-match drafting over packed
+  suffix trees (the DAS host hot-spot moved on-device): grid over batch
+  rows, Chang-Lawler suffix-link descent + greedy continuation walk
+  over the flat export of ``SuffixTree.pack()``, one device call per
+  verify round instead of B per-row Python walks. kernel.py
+  (pl.pallas_call + the shared scalar core), ops.py (forest packing +
+  jit wrapper), ref.py (vmapped reference = the compiled CPU fallback).
 - rglru/: blocked RG-LRU linear-recurrence scan (RecurrentGemma's
   recurrent half) with VMEM carry across sequence chunks.
 

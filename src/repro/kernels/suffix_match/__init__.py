@@ -1,0 +1,12 @@
+from . import ops, ref
+from .ops import PackedForest, pack_forest, suffix_match_propose
+from .ref import suffix_match_propose_ref
+
+__all__ = [
+    "ops",
+    "ref",
+    "PackedForest",
+    "pack_forest",
+    "suffix_match_propose",
+    "suffix_match_propose_ref",
+]

@@ -1,0 +1,186 @@
+"""Public wrapper for the suffix-match drafting kernel.
+
+Handles the host-side plumbing between the drafter's per-problem
+``PackedSuffixTree`` exports and the kernel's flat batched layout:
+
+* ``pack_forest`` — concatenate the distinct per-problem packed trees of
+  one batch into a single node table + corpus (indices offset per tree,
+  sizes padded to power-of-two buckets so jit recompiles stay rare as
+  windows grow), returning the per-tree root indices;
+* ``suffix_match_propose`` — one device call for a ``(B, m)`` batch of
+  context tails: longest-suffix match length + up to ``n_prop_max``
+  greedy continuation tokens per row. Dispatches the pallas kernel on
+  TPU, the jitted pure-jnp reference on CPU (identical semantics;
+  ``impl="pallas"`` with ``interpret=True`` validates the kernel in CI).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import suffix_match_propose_kernel
+from .ref import suffix_match_propose_ref
+
+_MIN_NODES = 1024
+_MIN_EDGES = 1024
+_MIN_CORPUS = 2048
+_SENTINEL = np.int32(np.iinfo(np.int32).max)  # sorts past every real edge
+
+
+class PackedForest(NamedTuple):
+    """Concatenated ``PackedSuffixTree`` exports, ready for the device."""
+
+    edge_node: jnp.ndarray
+    edge_tok: jnp.ndarray
+    edge_child: jnp.ndarray
+    suffix_link: jnp.ndarray
+    edge_start: jnp.ndarray
+    edge_len: jnp.ndarray
+    first_tok: jnp.ndarray
+    best_child: jnp.ndarray
+    corpus: jnp.ndarray
+
+
+def _bucket(n: int, floor: int) -> int:
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def pack_forest(
+    packs: Sequence, *, min_nodes: int = _MIN_NODES,
+    min_edges: int = _MIN_EDGES, min_corpus: int = _MIN_CORPUS,
+) -> Tuple[PackedForest, np.ndarray]:
+    """Concatenate packed trees; returns (forest, root index per tree).
+
+    Node indices (edge-table children / links / best children) are
+    shifted by each tree's node offset and edge spans by its corpus
+    offset, so every tree keeps its exact host semantics — including
+    ``suffix_link[root] == root``, which the kernel's root-edge hop
+    relies on. The per-tree edge tables are lexicographic in (node,
+    token) and node ranges are disjoint and increasing, so the
+    concatenation stays globally sorted. Padding slots are inert (edge
+    sentinels sort last, padding nodes have no edges and self-link), and
+    array lengths are padded to power-of-two buckets with generous
+    floors: growing windows then cross a bucket (and recompile) only on
+    doublings.
+    """
+    n_total = sum(p.n_nodes for p in packs)
+    e_total = sum(p.n_edges for p in packs)
+    c_total = sum(len(p.corpus) for p in packs)
+    # 25% headroom before bucketing: a sliding window fluctuates a few
+    # percent per refresh, which must not straddle a bucket boundary
+    # (every new bucket is a kernel recompile)
+    N = _bucket(max(n_total + n_total // 4, 1), min_nodes)
+    E = _bucket(max(e_total + e_total // 4, 1), min_edges)
+    C = _bucket(max(c_total + c_total // 4, 1), min_corpus)
+    en = np.full(E, _SENTINEL, np.int32)
+    et = np.full(E, _SENTINEL, np.int32)
+    ec = np.full(E, -1, np.int32)
+    sl = np.zeros(N, np.int32)
+    es = np.zeros(N, np.int32)
+    el = np.zeros(N, np.int32)
+    ft = np.full(N, -1, np.int32)
+    bc = np.full(N, -1, np.int32)
+    corpus = np.full(C, -1, np.int32)
+    roots = np.zeros(len(packs), np.int32)
+    noff = eoff = coff = 0
+    for i, p in enumerate(packs):
+        n, e, c = p.n_nodes, p.n_edges, len(p.corpus)
+        roots[i] = noff
+        en[eoff:eoff + e] = p.edge_node + noff
+        et[eoff:eoff + e] = p.edge_tok
+        ec[eoff:eoff + e] = p.edge_child + noff
+        bc[noff:noff + n] = np.where(p.best_child >= 0,
+                                     p.best_child + noff, -1)
+        sl[noff:noff + n] = p.suffix_link + noff
+        es[noff:noff + n] = p.edge_start + coff
+        el[noff:noff + n] = p.edge_len
+        ft[noff:noff + n] = p.first_tok
+        corpus[coff:coff + c] = p.corpus
+        noff += n
+        eoff += e
+        coff += c
+    # Inert padding nodes self-link so a (masked) hop can never escape.
+    sl[noff:] = np.arange(noff, N, dtype=np.int32)
+    forest = PackedForest(
+        edge_node=jnp.asarray(en), edge_tok=jnp.asarray(et),
+        edge_child=jnp.asarray(ec),
+        suffix_link=jnp.asarray(sl), edge_start=jnp.asarray(es),
+        edge_len=jnp.asarray(el), first_tok=jnp.asarray(ft),
+        best_child=jnp.asarray(bc), corpus=jnp.asarray(corpus),
+    )
+    return forest, roots
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_prop_max", "min_match", "impl", "interpret"),
+)
+def _dispatch(query, forest, *, n_prop_max, min_match, impl, interpret):
+    # `query` packs (tails | roots | budgets) into one (B, m+2) array so
+    # the per-round host cost is a single host->device transfer.
+    tails = query[:, :-2]
+    roots = query[:, -2]
+    budgets = query[:, -1]
+    if impl == "ref":
+        return suffix_match_propose_ref(
+            tails, roots, budgets, *forest,
+            n_prop_max=n_prop_max, min_match=min_match,
+        )
+    return suffix_match_propose_kernel(
+        tails, roots, budgets, *forest,
+        n_prop_max=n_prop_max, min_match=min_match, interpret=interpret,
+    )
+
+
+def pack_query(tails, roots, budgets) -> np.ndarray:
+    """Fuse per-round inputs into the single (B, m+2) transfer array."""
+    return np.concatenate(
+        [
+            np.asarray(tails, np.int32),
+            np.asarray(roots, np.int32)[:, None],
+            np.asarray(budgets, np.int32)[:, None],
+        ],
+        axis=1,
+    )
+
+
+def suffix_match_propose(
+    forest: PackedForest,
+    tails,  # (B, m) int context tails, -1 = padding/reset
+    roots,  # (B,) int per-row root node index (< 0 = inactive row)
+    budgets,  # (B,) int per-row draft budget
+    *,
+    n_prop_max: int,
+    min_match: int = 1,
+    impl: str | None = None,
+    interpret: bool | None = None,
+    query: np.ndarray | None = None,  # pre-packed (B, m+2) override
+):
+    """Batched longest-suffix match + greedy continuation proposal.
+
+    Returns ``(match_len (B,), n_prop (B,), props (B, n_prop_max))`` as
+    device arrays (callers keep the dispatch/consume split to overlap
+    with the in-flight verify). ``impl``: "pallas" | "ref" | None
+    (auto: pallas on TPU, the jitted jnp reference elsewhere).
+    """
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if query is None:
+        query = pack_query(tails, roots, budgets)
+    # the numpy query crosses into jax inside the jitted call (the C++
+    # conversion path is ~5x cheaper than a python-level jnp.asarray)
+    return _dispatch(
+        query, forest,
+        n_prop_max=int(n_prop_max), min_match=int(min_match),
+        impl=str(impl), interpret=bool(interpret),
+    )
