@@ -58,6 +58,7 @@ def make_engine(
     use_solver: bool = False,
     temperature: float = 0.0,
     epoch_decay: float = 0.9,
+    fuse_rounds: str = "auto",
 ) -> SpecEngine:
     return SpecEngine(
         params, cfg,
@@ -65,7 +66,7 @@ def make_engine(
             spec_enabled=spec, max_new_tokens=max_new, eos_token=1,
             max_draft=max_draft, block_buckets=(0, 4, max_draft),
             unlimited_budget=unlimited, use_budget_solver=use_solver,
-            temperature=temperature,
+            temperature=temperature, fuse_rounds=fuse_rounds,
         ),
         drafter=SuffixDrafter(
             DrafterConfig(

@@ -65,10 +65,25 @@ class DrafterConfig:
     # that tail-risk depth for bounded per-round state (acceptance-only
     # effect — T=0 verification is lossless either way).
     device_tail: int = 64
+    # Packed-forest device layout. "flat" shares the whole concatenated
+    # forest with every kernel grid step (one VMEM residency, fastest
+    # while it fits); "chunked" packs per-tree rows and streams one
+    # tree's chunk HBM->VMEM per row via scalar-prefetch index maps, so
+    # the forest may exceed VMEM as long as the largest single tree
+    # fits. "auto" stays flat on CPU (no VMEM) and on TPU switches to
+    # chunked once the flat estimate passes ``vmem_budget_bytes``
+    # (sticky: it never flips back, to avoid recompile churn).
+    forest_layout: str = "auto"  # auto | flat | chunked
+    vmem_budget_bytes: int = 6 << 20
 
     def __post_init__(self) -> None:
         if self.scope not in ("problem", "problem+request", "global"):
             raise ValueError(f"unknown drafter scope: {self.scope}")
+        if self.forest_layout not in ("auto", "flat", "chunked"):
+            raise ValueError(
+                f"forest_layout must be 'auto'|'flat'|'chunked', "
+                f"got {self.forest_layout!r}"
+            )
 
 
 class PrefixTrie:
@@ -212,6 +227,7 @@ class BatchedDraftSessions:
         # forest cache: packed trees by key + their combined device form
         self._packed_by_key: Dict[object, object] = {}
         self._forest = None
+        self._empty_forest = None
         self._roots_by_key: Dict[object, int] = {}
         # monotone bucket floors: a sliding window makes tree sizes
         # oscillate, and a pow2 bucket flipping back and forth would
@@ -219,6 +235,17 @@ class BatchedDraftSessions:
         self._min_nodes = 0
         self._min_edges = 0
         self._min_corpus = 0
+        # chunked-layout floors (per-tree strides + tree count)
+        self._min_stride_n = 0
+        self._min_stride_e = 0
+        self._min_stride_c = 0
+        self._min_trees = 0
+        self._layout: Optional[str] = None
+        # Bumped on every repack: the engine's fused path keys its
+        # device roots/forest uploads on this.
+        self.repack_version = 0
+        # host<->device transfer tally for the engine's round accounting
+        self.xfers = collections.Counter()
 
     # -- row lifecycle -----------------------------------------------------
     def open(self, row: int, problem_id, prompt: Optional[Sequence[int]] = None) -> None:
@@ -281,34 +308,92 @@ class BatchedDraftSessions:
         if changed or (self._forest is None and self._packed_by_key):
             open_keys = {self._keys[b] for b in range(self.n_rows)
                          if self._open[b]}
-            for key in [k for k in self._packed_by_key
-                        if k not in open_keys]:
-                del self._packed_by_key[key]  # row recycled away
+            # Prune packs of recycled-away problems LAZILY: slot churn
+            # cycles the same problems in and out of the pool, and an
+            # eager prune forced a full tree repack + forest rebuild on
+            # every re-admission (measured as the dominant fused-round
+            # host cost). Idle packs are cheap to keep; drop them only
+            # once they clearly dominate the forest.
+            if len(self._packed_by_key) > max(2 * len(open_keys), 8):
+                for key in [k for k in self._packed_by_key
+                            if k not in open_keys]:
+                    del self._packed_by_key[key]  # row recycled away
             keys = list(self._packed_by_key.keys())
-            # The packed corpus carries retired text (and the node table
-            # retired unary internals) until the index compacts at
-            # compact_ratio x live, so sizes cycle between ~live and
-            # ~ratio x live: floor every bucket at the cycle's maximum
-            # (nodes <= 2 x corpus tokens), rounded to a power of two,
-            # so steady-state serving never recompiles the kernel.
-            live = sum(
-                t.n_live_tokens
-                for t in (drafter.index.tree(k) for k in keys)
-                if t is not None
-            )
-            floor_c = int((drafter.index.compact_ratio + 1.0) * live)
-            p2 = sm_ops._bucket(max(floor_c, sm_ops._MIN_CORPUS), 1)
-            self._forest, roots = sm_ops.pack_forest(
-                [self._packed_by_key[k] for k in keys],
-                min_nodes=max(self._min_nodes, 2 * p2, sm_ops._MIN_NODES),
-                min_edges=max(self._min_edges, 2 * p2, sm_ops._MIN_EDGES),
-                min_corpus=max(self._min_corpus, p2),
-            )
-            self._min_nodes = int(self._forest.suffix_link.shape[0])
-            self._min_edges = int(self._forest.edge_node.shape[0])
-            self._min_corpus = int(self._forest.corpus.shape[0])
+            packs = [self._packed_by_key[k] for k in keys]
+            if self._pick_layout(packs) == "chunked":
+                # Per-tree strides floor at the cycle maximum of the
+                # LARGEST tree (same compaction-cycle argument as the
+                # flat floors below, applied per chunk).
+                live_max = max(
+                    (t.n_live_tokens
+                     for t in (drafter.index.tree(k) for k in keys)
+                     if t is not None),
+                    default=0,
+                )
+                floor_c = int(
+                    (drafter.index.compact_ratio + 1.0) * live_max
+                )
+                p2 = sm_ops._bucket(max(floor_c, sm_ops._MIN_STRIDE), 1)
+                self._forest, roots = sm_ops.pack_forest_chunked(
+                    packs,
+                    min_stride_nodes=max(self._min_stride_n, 2 * p2),
+                    min_stride_edges=max(self._min_stride_e, 2 * p2),
+                    min_stride_corpus=max(self._min_stride_c, p2),
+                    min_trees=max(self._min_trees, 1),
+                )
+                self._min_trees = int(self._forest.corpus.shape[0])
+                self._min_stride_n = int(self._forest.suffix_link.shape[1])
+                self._min_stride_e = int(self._forest.edge_node.shape[1])
+                self._min_stride_c = int(self._forest.corpus.shape[1])
+            else:
+                # The packed corpus carries retired text (and the node
+                # table retired unary internals) until the index
+                # compacts at compact_ratio x live, so sizes cycle
+                # between ~live and ~ratio x live: floor every bucket at
+                # the cycle's maximum (nodes <= 2 x corpus tokens),
+                # rounded to a power of two, so steady-state serving
+                # never recompiles the kernel.
+                live = sum(
+                    t.n_live_tokens
+                    for t in (drafter.index.tree(k) for k in keys)
+                    if t is not None
+                )
+                floor_c = int((drafter.index.compact_ratio + 1.0) * live)
+                p2 = sm_ops._bucket(max(floor_c, sm_ops._MIN_CORPUS), 1)
+                self._forest, roots = sm_ops.pack_forest(
+                    packs,
+                    min_nodes=max(self._min_nodes, 2 * p2,
+                                  sm_ops._MIN_NODES),
+                    min_edges=max(self._min_edges, 2 * p2,
+                                  sm_ops._MIN_EDGES),
+                    min_corpus=max(self._min_corpus, p2),
+                )
+                self._min_nodes = int(self._forest.suffix_link.shape[0])
+                self._min_edges = int(self._forest.edge_node.shape[0])
+                self._min_corpus = int(self._forest.corpus.shape[0])
             self._roots_by_key = {k: int(r) for k, r in zip(keys, roots)}
+            self.repack_version += 1
             self.drafter.stats["forest_repacks"] += 1
+
+    def _pick_layout(self, packs) -> str:
+        """Flat vs chunked forest layout (sticky once chunked)."""
+        from repro.kernels.suffix_match import ops as sm_ops
+
+        cfg_layout = self.cfg.forest_layout
+        if cfg_layout != "auto":
+            return cfg_layout
+        if self._layout == "chunked":
+            return "chunked"  # never flip back (recompile churn)
+        import jax
+
+        if (
+            jax.default_backend() == "tpu"
+            and sm_ops.forest_nbytes(packs) > self.cfg.vmem_budget_bytes
+        ):
+            self._layout = "chunked"
+            return "chunked"
+        self._layout = "flat"
+        return "flat"
 
     def prewarm(self) -> None:
         """Refresh packs/forest for every open row's tree NOW.
@@ -325,6 +410,69 @@ class BatchedDraftSessions:
         keys = {self._keys[b] for b in range(self.n_rows) if self._open[b]}
         if keys:
             self._refresh_forest(keys)
+
+    def refresh_for(self, rows) -> None:
+        """Refresh packs/forest for the given rows' trees (the fused
+        engine's pre-dispatch hook — version-gated, cheap when warm)."""
+        if not self.device:
+            return
+        keys = {self._keys[b] for b in rows if self._open[b]}
+        if keys:
+            self._refresh_forest(keys)
+
+    def forest_arrays(self):
+        """Current packed forest for the fused round program. Falls back
+        to a cached empty flat forest when no tree is packed yet (cold
+        start: every row proposes nothing, root -1)."""
+        if self._forest is not None:
+            return self._forest
+        if self._empty_forest is None:
+            from repro.kernels.suffix_match import ops as sm_ops
+
+            self._empty_forest, _ = sm_ops.pack_forest([])
+        return self._empty_forest
+
+    def roots_array(self) -> np.ndarray:
+        """(n_rows,) per-row root handle into the current forest (node
+        id for the flat layout, tree ordinal for chunked); -1 for closed
+        rows and rows whose tree is not packed yet."""
+        roots = np.full(self.n_rows, -1, np.int32)
+        for b in range(self.n_rows):
+            if self._open[b]:
+                roots[b] = self._roots_by_key.get(self._keys[b], -1)
+        return roots
+
+    def tails_matrix(self) -> np.ndarray:
+        """(n_rows, tail_len) left-padded context tails — the one-time
+        host→device seed of the fused round state. Rows fed afterwards
+        by the device shift register go stale here by design."""
+        m = self.tail_len
+        out = np.full((self.n_rows, m), -1, np.int32)
+        for b in range(self.n_rows):
+            cur = int(self._tlen[b])
+            n = min(cur, m)
+            if n:
+                out[b, m - n:] = self._tails[b, cur - n:cur]
+        return out
+
+    def tail_row(self, row: int) -> np.ndarray:
+        """(tail_len,) left-padded tail of one row (fused admissions)."""
+        m = self.tail_len
+        out = np.full(m, -1, np.int32)
+        cur = int(self._tlen[row])
+        n = min(cur, m)
+        if n:
+            out[m - n:] = self._tails[row, cur - n:cur]
+        return out
+
+    def feed_rows(self, rows, cand: np.ndarray, n_take) -> None:
+        """Feed each row its accepted tokens ``cand[b, :n_take[b]]`` —
+        the unfused consume path, hoisted out of the engine's round
+        loop."""
+        for b in rows:
+            k = int(n_take[b])
+            if k:
+                self.feed(b, cand[b, :k])
 
     def dispatch(self, budgets) -> Optional[tuple]:
         """Issue the round's batched propose; returns an opaque handle
@@ -370,6 +518,7 @@ class BatchedDraftSessions:
             min_match=self.cfg.min_match,
             query=query,
         )
+        self.xfers["h2d"] += 1  # the packed (B, m+2) query upload
         self.drafter.stats["batched_proposes"] += 1
         return ("device", rows, res)
 
@@ -383,6 +532,7 @@ class BatchedDraftSessions:
         _, rows, (_, n_prop, props) = handle
         n_prop = np.asarray(n_prop)
         props = np.asarray(props)
+        self.xfers["d2h"] += 2  # n_prop + props materialization
         for b in rows:
             n = int(n_prop[b])
             if n > 0:
@@ -472,6 +622,25 @@ class SuffixDrafter:
         self.stats["toks_drafted"] += int(drafted)
         self.stats["toks_accepted"] += int(accepted)
         self.store.record_draft(self._key(problem_id), drafted, accepted)
+
+    def note_draft_rows(self, problem_ids, drafted, accepted) -> None:
+        """Batched ``note_draft`` for one verify round: one counter
+        update for the batch and one store write per *distinct* problem
+        (with G samples per problem the per-row calls were G-way
+        duplicated on the serve hot path)."""
+        self.stats["toks_drafted"] += int(np.sum(drafted))
+        self.stats["toks_accepted"] += int(np.sum(accepted))
+        agg: Dict[object, List[int]] = {}
+        for pid, d, a in zip(problem_ids, drafted, accepted):
+            key = self._key(pid)
+            cur = agg.get(key)
+            if cur is None:
+                agg[key] = [int(d), int(a)]
+            else:
+                cur[0] += int(d)
+                cur[1] += int(a)
+        for key, (d, a) in agg.items():
+            self.store.record_draft(key, d, a)
 
     def _rebuild(self, key) -> SuffixTree:
         """Reference path: fresh tree from the store window.

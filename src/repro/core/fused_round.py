@@ -1,0 +1,293 @@
+"""Fused device-resident verify rounds (draft → verify → accept in ONE
+dispatch).
+
+Since the suffix-match kernel landed, both the draft walk and the model
+forward already run on device — yet the unfused engine still round-trips
+the host every round: proposals are materialized to numpy, re-assembled
+into a host block, re-uploaded, and the verify result is synced back
+before the next propose can be built. At production batch that host
+ping-pong, not compute, bounds the round rate.
+
+This module fuses the whole steady-state round into one jitted program
+per (K-bucket, forest geometry):
+
+    propose (suffix_match kernel over the packed forest)
+      → build the (B, K+1) verify block on device
+      → model forward + ``verify_block`` acceptance
+      → cache commit (ring-slot overwrite / staged recurrent gather)
+      → EOS/limit emit scan
+      → next-round session state (head, context tails, emitted, active)
+
+The per-row session state (``RoundState``) lives on device between
+rounds: heads are verify outputs, context tails are shift-registers
+updated from the accepted tokens, and the matcher re-derives its match
+registers from the resident tail exactly like the unfused device path
+(same ``match_propose_row`` core, same tail cap), so proposals — and
+therefore sampled tokens under a shared PRNG stream — are bit-identical
+to the unfused round.
+
+The host uploads one (B,) budget vector per round and downloads one
+packed (B, K+5) result: ``[cand tokens | accepted | n_take | alive |
+n_prop]`` — everything consume-side bookkeeping needs, double-buffered
+by the engine. An optional R-round device micro-loop
+(``micro_rounds > 1``; lock-step ``generate``) reuses the budgets for up
+to R rounds and exits early the moment any row finishes, syncing host
+bookkeeping every R rounds instead of every round (token-identical at
+T=0; at T>0 the per-round PRNG stream is folded on device, so outputs
+stay in-distribution but are not bit-identical to the R=1 stream).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.verify import verify_block
+from repro.kernels.suffix_match import ops as sm_ops
+from repro.models import model as M
+
+
+class RoundState(NamedTuple):
+    """Device-resident per-slot session state carried across rounds."""
+
+    head: jnp.ndarray  # (B,) i32 last emitted-but-unverified token
+    tails: jnp.ndarray  # (B, m) i32 context tails, -1 = left pad/reset
+    active: jnp.ndarray  # (B,) bool
+    emitted: jnp.ndarray  # (B,) i32 tokens emitted so far
+    max_new: jnp.ndarray  # (B,) i32 per-row token limit
+
+
+def make_state(head, tails, active, emitted, max_new) -> RoundState:
+    """Build a device ``RoundState`` from host arrays (one-time upload
+    at pool/batch construction; afterwards the state only lives on
+    device)."""
+    return RoundState(
+        head=jnp.asarray(np.asarray(head, np.int32)),
+        tails=jnp.asarray(np.asarray(tails, np.int32)),
+        active=jnp.asarray(np.asarray(active, bool)),
+        emitted=jnp.asarray(np.asarray(emitted, np.int32)),
+        max_new=jnp.asarray(np.asarray(max_new, np.int32)),
+    )
+
+
+# Packed per-round result columns appended after the K+1 cand tokens.
+OUT_EXTRA = 4  # accepted | n_take | alive | n_prop
+
+
+def verify_step(
+    params, cfg, cache, block, budgets, active, key,
+    *, temperature: float, recurrent: bool, attn_impl: str,
+) -> Tuple[Any, Any]:
+    """One verify forward + acceptance + cache commit (traceable).
+
+    Shared by the unfused per-K jitted verify and the fused round
+    program so both paths run the exact same ops (token parity by
+    construction). Returns (VerifyResult, committed cache).
+    """
+    B = block.shape[0]
+    valid = jnp.broadcast_to(active[:, None], block.shape)
+    # Single pass: attention caches commit via the ring-slot overwrite
+    # trick; recurrent layers emit staged per-step states
+    # (collect_states) that are gathered at the acceptance count below —
+    # no second forward.
+    logits, cache1, _ = M.forward(
+        params, cfg, block, cache=cache, valid=valid,
+        commit_upto=None if recurrent else jnp.zeros((B,), jnp.int32),
+        attn_impl=attn_impl, collect_states=recurrent,
+    )
+    logits = logits[:, :, : cfg.vocab_size]
+    res = verify_block(
+        logits, block, budgets, temperature=temperature, key=key,
+        active=active,
+    )
+    n_commit = jnp.where(active, 1 + res.accepted, 0)
+    if recurrent:
+        cache1 = M.commit_staged_cache(cfg, cache1, n_commit)
+    cache1 = cache1._replace(
+        lengths=cache1.lengths + n_commit.astype(jnp.int32)
+    )
+    return res, cache1
+
+
+def emit_scan_device(
+    cand: jnp.ndarray,  # (B, K+1) candidate emissions per row
+    n_new: jnp.ndarray,  # (B,) accepted + 1
+    remaining: jnp.ndarray,  # (B,) max_new - emitted before this round
+    eos: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Device twin of ``spec_engine._emit_scan`` (append-then-check)."""
+    B, K1 = cand.shape
+    idx = jnp.arange(K1)[None, :]
+    valid = idx < n_new[:, None]
+    eos_hit = (cand == eos) & valid
+    has_eos = eos_hit.any(axis=1)
+    first_eos = jnp.where(has_eos, jnp.argmax(eos_hit, axis=1), K1)
+    cap = jnp.maximum(remaining, 1)  # append-then-check: >=1 lands
+    n_take = jnp.minimum(jnp.minimum(n_new, cap),
+                         jnp.where(has_eos, first_eos + 1, K1 + 1))
+    last = jnp.take_along_axis(
+        cand, jnp.maximum(n_take - 1, 0)[:, None], axis=1
+    )[:, 0]
+    alive = (n_take == n_new) & (last != eos) & (n_take < remaining)
+    return n_take.astype(jnp.int32), alive
+
+
+def fused_round_core(
+    params, cfg, forest, cache, state: RoundState, roots, budgets, key,
+    *, K: int, temperature: float, eos_token: int, recurrent: bool,
+    attn_impl: str, min_match: int, impl: str, interpret: bool,
+):
+    """One fused round (traceable): propose → verify → commit → state.
+
+    Returns (cache', state', out (B, K+1+OUT_EXTRA) i32). ``out`` packs
+    everything the host consume path needs into ONE download:
+    ``[cand (K+1) | accepted | n_take | alive | n_prop]``. Rows outside
+    ``state.active`` carry zeros in the bookkeeping columns and leave
+    cache/state untouched.
+    """
+    B, m = state.tails.shape
+    i32 = jnp.int32
+    if K > 0:
+        # Rows without a packed tree (root < 0) or without budget propose
+        # nothing and take a plain AR step — same as the unfused path.
+        proots = jnp.where(state.active & (budgets > 0), roots, -1)
+        _, n_prop, props = sm_ops.propose_device(
+            forest, state.tails, proots, budgets,
+            n_prop_max=K, min_match=min_match,
+            impl=impl, interpret=interpret,
+        )
+        n_prop = n_prop.astype(i32)
+        drafts = jnp.where(
+            jnp.arange(K)[None, :] < n_prop[:, None], props, 0
+        ).astype(i32)
+    else:
+        n_prop = jnp.zeros((B,), i32)
+        drafts = jnp.zeros((B, 0), i32)
+    block = jnp.concatenate([state.head[:, None], drafts], axis=1)
+    res, cache = verify_step(
+        params, cfg, cache, block, n_prop, state.active, key,
+        temperature=temperature, recurrent=recurrent, attn_impl=attn_impl,
+    )
+    accepted = res.accepted.astype(i32)
+    next_tok = res.next_token.astype(i32)
+    cand = jnp.concatenate([block[:, 1:], jnp.zeros((B, 1), i32)], axis=1)
+    cand = cand.at[jnp.arange(B), accepted].set(next_tok)
+    n_take, alive = emit_scan_device(
+        cand, accepted + 1, state.max_new - state.emitted, eos_token
+    )
+    alive = alive & state.active
+    n_take_eff = jnp.where(state.active, n_take, 0).astype(i32)
+    # Context-tail shift register: the last m of (tail ++ taken tokens).
+    # The gather window ends exactly at the last taken token, so junk
+    # cand positions past n_take never enter the tail.
+    comb = jnp.concatenate([state.tails, cand], axis=1)
+    idx = n_take_eff[:, None] + jnp.arange(m)[None, :]
+    fed_tails = jnp.take_along_axis(comb, idx, axis=1)
+    state2 = RoundState(
+        head=jnp.where(alive, next_tok, state.head),
+        tails=jnp.where(alive[:, None], fed_tails, state.tails),
+        active=alive,
+        emitted=state.emitted + n_take_eff,
+        max_new=state.max_new,
+    )
+    out = jnp.concatenate(
+        [
+            cand,
+            accepted[:, None],
+            n_take_eff[:, None],
+            alive.astype(i32)[:, None],
+            jnp.where(state.active, n_prop, 0)[:, None],
+        ],
+        axis=1,
+    )
+    return cache, state2, out
+
+
+def build_fused_round(
+    cfg, *, K: int, micro_rounds: int, temperature: float, eos_token: int,
+    recurrent: bool, attn_impl: str, min_match: int, impl: str,
+    interpret: bool,
+):
+    """Jitted fused-round program for one K-bucket.
+
+    Uniform signature for R = 1 and the R-round micro-loop:
+
+        fused(params, forest, cache, state, roots, budgets, key)
+          -> (cache', state', outs (R, B, K+1+OUT_EXTRA), n_done)
+
+    ``cache`` and ``state`` are donated — the round is an in-place
+    update of the pool. With ``micro_rounds > 1`` the program iterates
+    up to R rounds in a ``lax.while_loop``, re-clamping budgets against
+    the rows' shrinking remaining-token counts each round, and exits
+    early the moment the active-row composition changes (a finished row
+    needs host bookkeeping: slot recycling, history observation). Only
+    the first ``n_done`` rows of ``outs`` are valid.
+    """
+    core = functools.partial(
+        fused_round_core, K=K, temperature=temperature,
+        eos_token=eos_token, recurrent=recurrent, attn_impl=attn_impl,
+        min_match=min_match, impl=impl, interpret=interpret,
+    )
+    R = max(1, int(micro_rounds))
+
+    if R == 1:
+        @functools.partial(jax.jit, donate_argnums=(2, 3))
+        def fused(params, forest, cache, state, roots, budgets, key):
+            cache2, state2, out = core(
+                params, cfg, forest, cache, state, roots, budgets, key
+            )
+            return cache2, state2, out[None], jnp.ones((), jnp.int32)
+
+        return fused
+
+    @functools.partial(jax.jit, donate_argnums=(2, 3))
+    def fused_micro(params, forest, cache, state, roots, budgets, key):
+        B = state.head.shape[0]
+        outs0 = jnp.zeros((R, B, K + 1 + OUT_EXTRA), jnp.int32)
+        active0 = state.active
+
+        def cond(carry):
+            i, _, st, _ = carry
+            return (
+                (i < R)
+                & jnp.any(st.active)
+                & jnp.all(st.active == active0)
+            )
+
+        def body(carry):
+            i, cache_i, st, outs = carry
+            # Budgets are host-solved once per micro-loop; re-clamp
+            # against each round's remaining tokens so a stale budget
+            # can never draft past a row's limit.
+            b_i = jnp.minimum(
+                budgets, jnp.maximum(st.max_new - st.emitted - 1, 0)
+            )
+            kv = jax.random.fold_in(key, i)
+            cache_i, st, out = core(
+                params, cfg, forest, cache_i, st, roots, b_i, kv
+            )
+            return i + 1, cache_i, st, outs.at[i].set(out)
+
+        n_done, cache2, state2, outs = jax.lax.while_loop(
+            cond, body, (jnp.zeros((), jnp.int32), cache, state, outs0)
+        )
+        return cache2, state2, outs, n_done
+
+    return fused_micro
+
+
+def unpack_round_out(out_row: np.ndarray, K: int):
+    """Split one (B, K+1+OUT_EXTRA) host round row into its columns:
+    (cand, accepted, n_take, alive, n_prop)."""
+    K1 = K + 1
+    return (
+        out_row[:, :K1],
+        out_row[:, K1].astype(np.int64),
+        out_row[:, K1 + 1].astype(np.int64),
+        out_row[:, K1 + 2].astype(bool),
+        out_row[:, K1 + 3].astype(np.int64),
+    )

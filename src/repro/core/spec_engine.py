@@ -2,16 +2,22 @@
 continuous-batching modes.
 
 Host side: the length-aware budget policy (length_policy.py +
-budget.py), per-row context-tail bookkeeping, vectorized EOS/emit
-bookkeeping, and rollout statistics. Device side: jitted prefill and
-verify steps (models/model.py + verify.py) plus ONE batched
-draft-proposal call per round (`SuffixDrafter.batched_sessions` over
-the `kernels/suffix_match` packed-tree kernel — per-row host tree
-walks only remain for the `problem+request` scope or
-``device_draft="off"``).
+budget.py), per-request output assembly, and rollout statistics.
+Device side — in the default **fused** mode (``EngineConfig.
+fuse_rounds``, core/fused_round.py) — the ENTIRE steady-state round:
+suffix-match propose over the packed forest, verify-block assembly,
+model forward + acceptance, cache commit, EOS/limit emit scan, and the
+next round's session state (heads / context tails / emitted counts
+live on device in a ``RoundState`` between rounds). The host uploads
+one (B,) budget vector per round and downloads one packed per-row
+result, double-buffered. The unfused fallback (``fuse_rounds="off"``,
+or host per-row sessions for the ``problem+request`` scope /
+``device_draft="off"``) keeps the split dispatches: one batched
+draft-proposal call, host block assembly, one verify call, host emit
+scan.
 
 Two serving modes share the same stepwise primitives (budget solve →
-batched draft propose → device verify → vectorized consume):
+round dispatch → vectorized consume):
 
 * ``generate``            — lock-step batched rollout: one fixed batch,
   every row steps together; finished rows ride along as dead padded
@@ -41,6 +47,7 @@ asserted in tests/test_scheduler.py and benchmarks/bench_rollout.py).
 
 from __future__ import annotations
 
+import collections
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
@@ -52,9 +59,16 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.budget import LatencyModel, solve_budgets
 from repro.core.drafter import DrafterConfig, SuffixDrafter
+from repro.core.fused_round import (
+    RoundState,
+    build_fused_round,
+    make_state,
+    unpack_round_out,
+    verify_step,
+)
 from repro.core.length_policy import LengthPolicy, LengthPolicyConfig
 from repro.core.scheduler import Request, SlotScheduler
-from repro.core.verify import sample_token, verify_block
+from repro.core.verify import sample_token, sample_token_rows, verify_block
 from repro.models import model as M
 
 
@@ -76,12 +90,36 @@ class EngineConfig:
     # force it. One batched propose per round replaces B per-row Python
     # tree walks; proposals stay host-oracle-identical on the same tail.
     device_draft: str = "auto"
+    # Fused device-resident rounds (core/fused_round.py): propose →
+    # block build → verify forward → accept → cache commit → next-round
+    # session state, all in ONE jitted dispatch per round. The host
+    # uploads one budget vector and downloads one packed result per
+    # round. "auto" fuses whenever the batched device drafter is active
+    # (see device_draft); "off" keeps the unfused multi-dispatch round
+    # (the config-selectable fallback); "on" forces fusion where the
+    # drafter supports it.
+    fuse_rounds: str = "auto"
+    # R-round device micro-loop for lock-step `generate` (fused mode
+    # only): host budgets/bookkeeping sync every R rounds instead of
+    # every round; the loop exits early the moment any row finishes.
+    # Token-identical at T=0; at T>0 the PRNG fold runs on device, so
+    # R>1 is in-distribution but not bit-identical to the R=1 stream.
+    micro_rounds: int = 1
 
     def __post_init__(self) -> None:
         if self.device_draft not in ("auto", "on", "off"):
             raise ValueError(
                 f"device_draft must be 'auto'|'on'|'off', "
                 f"got {self.device_draft!r}"
+            )
+        if self.fuse_rounds not in ("auto", "on", "off"):
+            raise ValueError(
+                f"fuse_rounds must be 'auto'|'on'|'off', "
+                f"got {self.fuse_rounds!r}"
+            )
+        if self.micro_rounds < 1:
+            raise ValueError(
+                f"micro_rounds must be >= 1, got {self.micro_rounds}"
             )
 
 
@@ -94,6 +132,13 @@ class RolloutStats:
     n_drafted: int = 0
     n_accepted: int = 0
     wall_time_s: float = 0.0
+    # Round-path host accounting (benchmarks/bench_rollout.py): host
+    # milliseconds spent on per-round bookkeeping (budget solve, block/
+    # dispatch assembly, consume-side bookkeeping — device waits
+    # excluded) and the number of host↔device array crossings.
+    host_time_s: float = 0.0
+    n_h2d: int = 0
+    n_d2h: int = 0
     per_row_rounds: Optional[np.ndarray] = None
     per_row_emitted: Optional[np.ndarray] = None
     effective_batch: List[int] = field(default_factory=list)
@@ -151,7 +196,7 @@ def _prompt_bucket(n: int) -> int:
     """Prompt pad width (16-multiples). Both serving modes MUST use the
     same bucketing: compiled prefill variants are keyed on (Tp, max_len)
     and the lock-step/continuous parity + cache-geometry contract
-    (copy_cache_row) relies on identical padding."""
+    (copy_cache_rows) relies on identical padding."""
     return max(16, _round_up(n, 16))
 
 
@@ -190,7 +235,9 @@ class SpecEngine:
         self._recurrent = M.has_recurrent(cfg)
         self._verify_jit: Dict[int, Any] = {}
         self._prefill_jit: Dict[Tuple[int, int], Any] = {}
-        self._write_slot_fn = None
+        self._fused_jit: Dict[Tuple[int, int], Any] = {}
+        self._copy_rows_fn = None
+        self._admit_state_fn = None
         # Per-(problem, partial-length) budget memo: with G samples per
         # problem the per-row LengthPolicy calls are G-way duplicated
         # every verify round; keyed on the history version so any new
@@ -215,59 +262,106 @@ class SpecEngine:
         return fn
 
     def _get_verify(self, K: int):
-        """Jitted verify step for a draft-block bucket of size K."""
+        """Jitted verify step for a draft-block bucket of size K (the
+        unfused round's verify dispatch; the fused program traces the
+        same ``verify_step`` body)."""
         fn = self._verify_jit.get(K)
         if fn is None:
             temp = self.engine.temperature
             recurrent = self._recurrent
             attn_impl = self.engine.attn_impl
+            cfg = self.cfg
 
             @jax.jit
             def verify_fn(params, cache, block, budgets, active, key):
-                B = block.shape[0]
-                valid = jnp.broadcast_to(active[:, None], block.shape)
-                # Single pass: attention caches commit via the ring-slot
-                # overwrite trick; recurrent layers emit staged per-step
-                # states (collect_states) that are gathered at the
-                # acceptance count below — no second forward.
-                logits, cache1, _ = M.forward(
-                    params, self.cfg, block, cache=cache, valid=valid,
-                    commit_upto=None if recurrent else jnp.zeros((B,), jnp.int32),
-                    attn_impl=attn_impl, collect_states=recurrent,
+                return verify_step(
+                    params, cfg, cache, block, budgets, active, key,
+                    temperature=temp, recurrent=recurrent,
+                    attn_impl=attn_impl,
                 )
-                logits = logits[:, :, : self.cfg.vocab_size]
-                res = verify_block(
-                    logits, block, budgets, temperature=temp, key=key,
-                    active=active,
-                )
-                n_commit = jnp.where(active, 1 + res.accepted, 0)
-                if recurrent:
-                    cache1 = M.commit_staged_cache(
-                        self.cfg, cache1, n_commit
-                    )
-                cache1 = cache1._replace(
-                    lengths=cache1.lengths + n_commit.astype(jnp.int32)
-                )
-                return res, cache1
 
             fn = verify_fn
             self._verify_jit[K] = fn
         return fn
 
-    def _get_write_slot(self):
-        """Jitted slot-recycling cache write (one compile per pool
-        geometry; the slot index is traced)."""
-        if self._write_slot_fn is None:
+    def _get_fused(self, K: int, R: int):
+        """Jitted fused round program for bucket K (micro-loop depth R).
+
+        One program per (K-bucket, forest/cache geometry): geometry
+        changes retrace via jax's shape keying, the K bucket and
+        micro-loop depth key this dict."""
+        fn = self._fused_jit.get((K, R))
+        if fn is None:
+            e = self.engine
+            fn = build_fused_round(
+                self.cfg, K=K, micro_rounds=R,
+                temperature=e.temperature, eos_token=e.eos_token,
+                recurrent=self._recurrent, attn_impl=e.attn_impl,
+                min_match=self.drafter.cfg.min_match,
+                impl="pallas" if jax.default_backend() == "tpu" else "ref",
+                interpret=jax.default_backend() != "tpu",
+            )
+            self._fused_jit[(K, R)] = fn
+        return fn
+
+    def _fuse_enabled(self, bds) -> bool:
+        """Fused rounds need the batched device drafter (host per-row
+        sessions — scope problem+request or device_draft=off — keep the
+        unfused loop)."""
+        return bds.device and self.engine.fuse_rounds != "off"
+
+    def _get_copy_rows(self):
+        """Jitted batched admission write: k freshly prefilled cache
+        rows scatter into their pool slots in one donated update (one
+        retrace per admission-chunk size)."""
+        if self._copy_rows_fn is None:
             cfg = self.cfg
 
-            def write_fn(dst, src, slot):
-                return M.copy_cache_row(cfg, dst, src, slot)
+            def write_fn(dst, src, slots):
+                return M.copy_cache_rows(cfg, dst, src, slots)
 
-            # Donating the pool lets XLA lower the write to an in-place
-            # dynamic-update-slice instead of copying the whole cache on
-            # every admission (the hot path of slot recycling).
-            self._write_slot_fn = jax.jit(write_fn, donate_argnums=(0,))
-        return self._write_slot_fn
+            self._copy_rows_fn = jax.jit(write_fn, donate_argnums=(0,))
+        return self._copy_rows_fn
+
+    def _get_admit_state(self):
+        """Jitted fused-state admission write: newly admitted rows'
+        head/tail/limit scatter into the device ``RoundState``. ``slots``
+        may be padded with ``n_slots`` (out-of-range scatters drop)."""
+        if self._admit_state_fn is None:
+            def write_fn(state, slots, heads, tails, max_new):
+                return RoundState(
+                    head=state.head.at[slots].set(heads),
+                    tails=state.tails.at[slots].set(tails),
+                    active=state.active.at[slots].set(True),
+                    emitted=state.emitted.at[slots].set(1),
+                    max_new=state.max_new.at[slots].set(max_new),
+                )
+
+            self._admit_state_fn = jax.jit(write_fn, donate_argnums=(0,))
+        return self._admit_state_fn
+
+    def compile_count(self) -> int:
+        """Total jit compilations attributable to this engine (plus the
+        module-level suffix-match dispatches) — the steady-state
+        recompile guard's probe: after warmup, serving a mixed workload
+        must not grow this."""
+        from repro.kernels.suffix_match import ops as sm_ops
+        from repro.kernels.suffix_match import ref as sm_ref
+
+        fns = (
+            list(self._prefill_jit.values())
+            + list(self._verify_jit.values())
+            + list(self._fused_jit.values())
+        )
+        for f in (self._copy_rows_fn, self._admit_state_fn):
+            if f is not None:
+                fns.append(f)
+        fns += [sm_ops._dispatch, sm_ref.suffix_match_propose_ref]
+        total = 0
+        for f in fns:
+            size = getattr(f, "_cache_size", None)
+            total += int(size()) if callable(size) else 0
+        return total
 
     def _bucket(self, k: int) -> int:
         for b in self.engine.block_buckets:
@@ -422,65 +516,85 @@ class SpecEngine:
         stats.n_fwd += 1
         stats.n_toks_proposed += int(mask.sum())
 
-        while active.any():
-            remaining = max_new_arr - emitted
-            budgets_np = self._round_budgets(
-                problem_ids, emitted, active, remaining
+        if self._fuse_enabled(bds):
+            cache = self._fused_generate_rounds(
+                bds, cache, key, problem_ids, outputs, active, emitted,
+                max_new_arr, head, rounds_per_row, stats,
+                collect_effective_batch,
             )
-            kmax = int(budgets_np.max()) if active.any() else 0
-            K = self._bucket(kmax)
-            # ---- drafting: one batched propose for all active rows;
-            # the device walk overlaps the block assembly below ----
-            prop_handle = bds.dispatch(budgets_np)
-            block = np.zeros((B, K + 1), np.int32)
-            block[:, 0] = head
-            props = bds.consume(prop_handle)
-            for b in np.nonzero(active)[0]:
-                prop = props[b]
-                budgets_np[b] = len(prop)
-                if prop:
-                    block[b, 1 : 1 + len(prop)] = prop
-            key, kv = jax.random.split(key)
-            res, cache = self._get_verify(K)(
-                self.params, cache, jnp.asarray(block),
-                jnp.asarray(budgets_np.astype(np.int32)),
-                jnp.asarray(active), kv,
-            )
-            accepted = np.asarray(res.accepted).astype(np.int64)
-            next_tok = np.asarray(res.next_token).astype(np.int32)
-            # ---- host bookkeeping (vectorized EOS/emit scan) ----
-            stats.n_rounds += 1
-            stats.n_fwd += 1
-            stats.n_toks_proposed += int((1 + budgets_np[active]).sum())
-            stats.n_drafted += int(budgets_np[active].sum())
-            stats.n_accepted += int(accepted[active].sum())
-            stats.round_accepts.append(
-                float(accepted[active].mean()) if active.any() else 0.0
-            )
-            if collect_effective_batch:
-                stats.effective_batch.append(int(active.sum()))
-            cand = np.zeros((B, K + 1), np.int32)
-            cand[:, :K] = block[:, 1:]
-            cand[np.arange(B), accepted] = next_tok
-            n_take, alive = _emit_scan(
-                cand, accepted + 1, max_new_arr - emitted, e.eos_token
-            )
-            alive &= active
-            for b in np.nonzero(active)[0]:
-                rounds_per_row[b] += 1
-                if budgets_np[b] > 0:  # per-prompt acceptance telemetry
-                    self.drafter.note_draft(
-                        problem_ids[b], int(budgets_np[b]), int(accepted[b])
-                    )
-                take = cand[b, : n_take[b]].tolist()
-                outputs[b].extend(take)
-                if alive[b]:
-                    bds.feed(b, take)
-                else:
-                    bds.close(b)
-            emitted[active] += n_take[active]
-            head = np.where(alive, next_tok, head)
-            active = alive
+        else:
+            while active.any():
+                t_h = time.perf_counter()
+                remaining = max_new_arr - emitted
+                budgets_np = self._round_budgets(
+                    problem_ids, emitted, active, remaining
+                )
+                kmax = int(budgets_np.max()) if active.any() else 0
+                K = self._bucket(kmax)
+                # ---- drafting: one batched propose for all active
+                # rows; the device walk overlaps the block assembly ----
+                prop_handle = bds.dispatch(budgets_np)
+                block = np.zeros((B, K + 1), np.int32)
+                block[:, 0] = head
+                props = bds.consume(prop_handle)
+                for b in np.nonzero(active)[0]:
+                    prop = props[b]
+                    budgets_np[b] = len(prop)
+                    if prop:
+                        block[b, 1 : 1 + len(prop)] = prop
+                kv = key
+                if e.temperature > 0:  # greedy verify never uses the key
+                    key, kv = jax.random.split(key)
+                block_dev = jnp.asarray(block)
+                budgets_dev = jnp.asarray(budgets_np.astype(np.int32))
+                active_dev = jnp.asarray(active)
+                stats.host_time_s += time.perf_counter() - t_h
+                stats.n_h2d += 3  # block + budgets + active uploads
+                res, cache = self._get_verify(K)(
+                    self.params, cache, block_dev, budgets_dev,
+                    active_dev, kv,
+                )
+                accepted = np.asarray(res.accepted).astype(np.int64)
+                next_tok = np.asarray(res.next_token).astype(np.int32)
+                stats.n_d2h += 2
+                # ---- host bookkeeping (vectorized EOS/emit scan) ----
+                t_h = time.perf_counter()
+                stats.n_rounds += 1
+                stats.n_fwd += 1
+                stats.n_toks_proposed += int((1 + budgets_np[active]).sum())
+                stats.n_drafted += int(budgets_np[active].sum())
+                stats.n_accepted += int(accepted[active].sum())
+                stats.round_accepts.append(
+                    float(accepted[active].mean()) if active.any() else 0.0
+                )
+                if collect_effective_batch:
+                    stats.effective_batch.append(int(active.sum()))
+                cand = np.zeros((B, K + 1), np.int32)
+                cand[:, :K] = block[:, 1:]
+                cand[np.arange(B), accepted] = next_tok
+                n_take, alive = _emit_scan(
+                    cand, accepted + 1, max_new_arr - emitted, e.eos_token
+                )
+                alive &= active
+                for b in np.nonzero(active)[0]:
+                    rounds_per_row[b] += 1
+                    if budgets_np[b] > 0:  # per-prompt accept telemetry
+                        self.drafter.note_draft(
+                            problem_ids[b], int(budgets_np[b]),
+                            int(accepted[b]),
+                        )
+                    take = cand[b, : n_take[b]].tolist()
+                    outputs[b].extend(take)
+                    if alive[b]:
+                        bds.feed(b, take)
+                    else:
+                        bds.close(b)
+                emitted[active] += n_take[active]
+                head = np.where(alive, next_tok, head)
+                active = alive
+                stats.host_time_s += time.perf_counter() - t_h
+        stats.n_h2d += bds.xfers.pop("h2d", 0)
+        stats.n_d2h += bds.xfers.pop("d2h", 0)
         # strip EOS and observe history
         for b in range(B):
             if outputs[b] and outputs[b][-1] == e.eos_token:
@@ -496,6 +610,89 @@ class SpecEngine:
         stats.wall_time_s = time.perf_counter() - t0
         return outputs, stats
 
+    def _fused_generate_rounds(
+        self, bds, cache, key, problem_ids, outputs, active, emitted,
+        max_new_arr, head, rounds_per_row, stats, collect_effective_batch,
+    ):
+        """Lock-step round loop on the fused device-resident program.
+
+        Per dispatch the host solves budgets, uploads ONE (B,) vector
+        and downloads ONE packed per-row result; head/tails/emitted
+        live on device between rounds (``RoundState``). With
+        ``micro_rounds > 1`` each dispatch runs up to R rounds on
+        device (early-exiting when any row finishes), so host
+        bookkeeping syncs every R rounds. Returns the updated cache.
+        """
+        e = self.engine
+        B = len(outputs)
+        R = int(e.micro_rounds)
+        bds.prewarm()  # pack every open row's tree before round one
+        state = make_state(
+            head, bds.tails_matrix(), active, emitted, max_new_arr
+        )
+        stats.n_h2d += 5
+        forest = bds.forest_arrays()
+        roots_dev = jnp.asarray(bds.roots_array())
+        stats.n_h2d += 1
+        last_ver = bds.repack_version
+        while active.any():
+            t_h = time.perf_counter()
+            remaining = max_new_arr - emitted
+            budgets_np = self._round_budgets(
+                problem_ids, emitted, active, remaining
+            )
+            K = self._bucket(int(budgets_np.max()))
+            rows = np.nonzero(active & (budgets_np > 0))[0]
+            bds.refresh_for(rows)
+            if bds.repack_version != last_ver:
+                last_ver = bds.repack_version
+                forest = bds.forest_arrays()
+                roots_dev = jnp.asarray(bds.roots_array())
+                stats.n_h2d += 1
+            kv = key
+            if e.temperature > 0:  # greedy verify never uses the key
+                key, kv = jax.random.split(key)
+            stats.host_time_s += time.perf_counter() - t_h
+            stats.n_h2d += 1  # the (B,) budget vector
+            cache, state, outs_dev, ndone_dev = self._get_fused(K, R)(
+                self.params, forest, cache, state, roots_dev,
+                budgets_np.astype(np.int32), kv,
+            )
+            outs = np.asarray(outs_dev)
+            n_done = int(ndone_dev)
+            stats.n_d2h += 2
+            if K > 0 and len(rows) > 0:  # each micro-round proposed once
+                self.drafter.stats["batched_proposes"] += n_done
+            t_h = time.perf_counter()
+            for r in range(n_done):
+                cand, acc, n_take, alive, n_prop = unpack_round_out(
+                    outs[r], K
+                )
+                mask = active.copy()
+                stats.n_rounds += 1
+                stats.n_fwd += 1
+                stats.n_toks_proposed += int((1 + n_prop[mask]).sum())
+                stats.n_drafted += int(n_prop[mask].sum())
+                stats.n_accepted += int(acc[mask].sum())
+                stats.round_accepts.append(
+                    float(acc[mask].mean()) if mask.any() else 0.0
+                )
+                if collect_effective_batch:
+                    stats.effective_batch.append(int(mask.sum()))
+                rounds_per_row[mask] += 1
+                tel = np.nonzero(mask & (n_prop > 0))[0]
+                if tel.size:  # per-prompt acceptance telemetry, batched
+                    self.drafter.note_draft_rows(
+                        [problem_ids[b] for b in tel], n_prop[tel],
+                        acc[tel],
+                    )
+                for b in np.nonzero(mask & (n_take > 0))[0]:
+                    outputs[b].extend(cand[b, : n_take[b]].tolist())
+                emitted[mask] += n_take[mask]
+                active &= alive
+            stats.host_time_s += time.perf_counter() - t_h
+        return cache
+
     # -- continuous-batching mode --------------------------------------------
     def serve(
         self,
@@ -510,9 +707,10 @@ class SpecEngine:
 
         A fixed pool of ``slots`` device slots is fed from an admission
         queue ordered longest-predicted-first (``SlotScheduler``). The
-        moment a row finishes, its slot is re-prefilled (B=1 prefill +
-        ``copy_cache_row``) with the next pending request, so the
-        effective batch stays full through the long tail.
+        moment a row finishes, its slot is re-prefilled (coalesced
+        bucketed prefill + ``copy_cache_rows`` scatter) with the next
+        pending request, so the effective batch stays full through the
+        long tail.
 
         Rounds are double-buffered: after the jitted verify for round
         *t* is dispatched, the host (a) observes rollouts that finished
@@ -556,7 +754,7 @@ class SpecEngine:
             + e.max_draft + 2
         )
         cache = M.init_cache(self.cfg, n_slots, pool_len, e.cache_headroom)
-        write_slot = self._get_write_slot()
+        copy_rows = self._get_copy_rows()
 
         head = np.zeros(n_slots, np.int32)
         emitted = np.zeros(n_slots, np.int64)
@@ -564,10 +762,25 @@ class SpecEngine:
         active = np.zeros(n_slots, bool)
         pids: List[Any] = [None] * n_slots
         bds = self._batched_sessions(n_slots)
+        fused = self._fuse_enabled(bds)
 
-        pending = None  # in-flight round: (res<device>, block, budgets, mask)
-        finalize_q: List[Request] = []  # finished; observation deferred
-        done_q: List[Request] = []  # observed; ready to yield
+        # Fused mode: per-slot session state (head / context tails /
+        # emitted / limits) lives on DEVICE between rounds; the host
+        # mirrors above only drive budget solving and bookkeeping.
+        state = None
+        forest = None
+        roots_dev = None
+        last_ver = -1
+        if fused:
+            state = make_state(
+                head, np.full((n_slots, bds.tail_len), -1, np.int32),
+                active, emitted, max_new_arr,
+            )
+            stats.n_h2d += 5
+
+        pending = None  # in-flight round (see dispatch/consume)
+        finalize_q = collections.deque()  # finished; observation deferred
+        done_q = collections.deque()  # observed; ready to yield
         round_no = 0
 
         t_serve0 = time.perf_counter()
@@ -582,91 +795,174 @@ class SpecEngine:
             sched.release(req)
             finalize_q.append(req)
 
+        roots_dirty = True  # row→tree mapping changed since last upload
+
         def admit() -> None:
-            """Fill free slots from the queue: B=1 prefill into the pool
-            row (``copy_cache_row``). Immediate-EOS admissions release
-            their slot and the loop re-admits into it."""
-            nonlocal cache, key
+            """Fill free slots from the queue with COALESCED prefills.
+
+            Admissions sharing a prompt bucket run as ONE batched
+            prefill (binary-decomposed into power-of-two chunks so the
+            compiled-variant set stays bounded) and their cache rows
+            commit via one vectorized scatter (``copy_cache_rows``).
+            PRNG keys are still split per *request*, so sampled first
+            tokens are independent of the grouping. Immediate-EOS
+            admissions release their slot and the loop re-admits into
+            it. In fused mode the new rows' head/tail/limit are
+            batch-written into the device ``RoundState``.
+            """
+            nonlocal cache, key, state, roots_dirty
             while True:
                 newly = sched.next_admissions()
                 if not newly:
                     return
+                groups: Dict[int, List[Request]] = {}
                 for req in newly:
-                    s = req.slot
-                    n_p = len(req.prompt)
-                    Tp = _prompt_bucket(n_p)
-                    toks = np.zeros((1, Tp), np.int32)
-                    mask = np.zeros((1, Tp), bool)
-                    toks[0, Tp - n_p:] = req.prompt
-                    mask[0, Tp - n_p:] = True
-                    last_logits, row_cache = self._get_prefill(Tp, pool_len)(
-                        self.params, jnp.asarray(toks), jnp.asarray(mask)
-                    )
-                    cache = write_slot(cache, row_cache, np.int32(s))
-                    key, k0 = jax.random.split(key)
-                    tok = int(np.asarray(sample_token(
-                        last_logits[:, : self.cfg.vocab_size],
-                        temperature=e.temperature, key=k0,
-                    ))[0])
-                    stats.n_fwd += 1
-                    stats.n_toks_proposed += n_p
-                    req.admit_round = round_no
-                    req.head = tok
-                    if tok == e.eos_token or req.max_new_tokens <= 0:
-                        if req.max_new_tokens > 0:
+                    Tp = _prompt_bucket(len(req.prompt))
+                    groups.setdefault(Tp, []).append(req)
+                admitted: List[Request] = []
+                for Tp in sorted(groups):
+                    greqs = groups[Tp]
+                    i0 = 0
+                    while i0 < len(greqs):
+                        k = 1 << ((len(greqs) - i0).bit_length() - 1)
+                        sub = greqs[i0 : i0 + k]
+                        i0 += k
+                        toks = np.zeros((k, Tp), np.int32)
+                        mask = np.zeros((k, Tp), bool)
+                        for j, req in enumerate(sub):
+                            n_p = len(req.prompt)
+                            toks[j, Tp - n_p:] = req.prompt
+                            mask[j, Tp - n_p:] = True
+                        last_logits, rows_cache = self._get_prefill(
+                            Tp, pool_len
+                        )(self.params, jnp.asarray(toks), jnp.asarray(mask))
+                        stats.n_h2d += 2
+                        slots_arr = np.array(
+                            [r.slot for r in sub], np.int32
+                        )
+                        cache = copy_rows(cache, rows_cache, slots_arr)
+                        stats.n_h2d += 1
+                        row_keys = None
+                        if e.temperature > 0:  # per-request key stream
+                            row_keys = []
+                            for _ in sub:
+                                key, k0 = jax.random.split(key)
+                                row_keys.append(k0)
+                        first_toks = np.asarray(sample_token_rows(
+                            last_logits[:, : self.cfg.vocab_size],
+                            temperature=e.temperature,
+                            keys=(jnp.stack(row_keys)
+                                  if row_keys is not None else None),
+                        ))
+                        stats.n_d2h += 1
+                        stats.n_fwd += 1
+                        stats.n_toks_proposed += int(
+                            sum(len(r.prompt) for r in sub)
+                        )
+                        for j, req in enumerate(sub):
+                            tok = int(first_toks[j])
+                            s = req.slot
+                            req.admit_round = round_no
+                            req.head = tok
+                            if tok == e.eos_token or req.max_new_tokens <= 0:
+                                if req.max_new_tokens > 0:
+                                    req.output.append(tok)
+                                finish(req)  # freed; outer loop re-admits
+                                continue
                             req.output.append(tok)
-                        finish(req)  # slot freed; outer loop re-admits
-                        continue
-                    req.output.append(tok)
-                    if req.max_new_tokens <= 1:  # head fills the limit
-                        finish(req)
-                        continue
-                    bds.open(s, req.problem_id, req.prompt)
-                    bds.feed(s, [tok])
-                    pids[s] = req.problem_id
-                    head[s] = tok
-                    emitted[s] = 1
-                    max_new_arr[s] = req.max_new_tokens
-                    active[s] = True
+                            if req.max_new_tokens <= 1:  # head fills limit
+                                finish(req)
+                                continue
+                            bds.open(s, req.problem_id, req.prompt)
+                            bds.feed(s, [tok])
+                            pids[s] = req.problem_id
+                            head[s] = tok
+                            emitted[s] = 1
+                            max_new_arr[s] = req.max_new_tokens
+                            active[s] = True
+                            admitted.append(req)
+                if fused and admitted:
+                    kk = len(admitted)
+                    kb = 1 << max(kk - 1, 0).bit_length()  # pow2 ceiling
+                    # padding rows scatter out of range (dropped)
+                    slots_pad = np.full(kb, n_slots, np.int32)
+                    heads_pad = np.zeros(kb, np.int32)
+                    tails_pad = np.full(
+                        (kb, bds.tail_len), -1, np.int32
+                    )
+                    mn_pad = np.ones(kb, np.int32)
+                    for j, req in enumerate(admitted):
+                        slots_pad[j] = req.slot
+                        heads_pad[j] = req.head
+                        tails_pad[j] = bds.tail_row(req.slot)
+                        mn_pad[j] = req.max_new_tokens
+                    state = self._get_admit_state()(
+                        state, slots_pad, heads_pad, tails_pad, mn_pad
+                    )
+                    stats.n_h2d += 4
+                    roots_dirty = True
 
         def consume() -> None:
-            """Materialize the in-flight verify (device sync point) and
-            apply the vectorized emit/EOS bookkeeping."""
+            """Materialize the in-flight round (device sync point) and
+            apply its bookkeeping.
+
+            Mirror updates (emitted / head / active) are vectorized; the
+            per-row loop that remains is the unavoidable per-request
+            ``output.extend`` plus telemetry and finish handling. In
+            fused mode the round result arrives as ONE packed download —
+            emit scan, acceptance and next-round session state were
+            already computed on device."""
             nonlocal pending
             if pending is None:
                 return
-            res, block, budgets, mask = pending
-            pending = None
-            accepted = np.asarray(res.accepted).astype(np.int64)
-            next_tok = np.asarray(res.next_token).astype(np.int32)
+            if pending[0] == "fused":
+                _, outs_dev, K, mask = pending
+                pending = None
+                outs = np.asarray(outs_dev)  # the round's one download
+                stats.n_d2h += 1
+                t_h = time.perf_counter()
+                cand, accepted, n_take, alive, budgets = unpack_round_out(
+                    outs[0], K
+                )
+                alive = alive & mask
+            else:
+                _, res, block, budgets, mask = pending
+                pending = None
+                accepted = np.asarray(res.accepted).astype(np.int64)
+                next_tok = np.asarray(res.next_token).astype(np.int32)
+                stats.n_d2h += 2
+                t_h = time.perf_counter()
+                cand = np.zeros((n_slots, block.shape[1]), np.int32)
+                cand[:, :-1] = block[:, 1:]
+                cand[np.arange(n_slots), accepted] = next_tok
+                n_take, alive = _emit_scan(
+                    cand, accepted + 1, max_new_arr - emitted, e.eos_token
+                )
+                alive &= mask
+                head[:] = np.where(alive, next_tok, head)
+            stats.n_toks_proposed += int((1 + budgets[mask]).sum())
+            stats.n_drafted += int(budgets[mask].sum())
             stats.n_accepted += int(accepted[mask].sum())
             stats.round_accepts.append(
                 float(accepted[mask].mean()) if mask.any() else 0.0
             )
-            cand = np.zeros((n_slots, block.shape[1]), np.int32)
-            cand[:, :-1] = block[:, 1:]
-            cand[np.arange(n_slots), accepted] = next_tok
-            n_take, alive = _emit_scan(
-                cand, accepted + 1, max_new_arr - emitted, e.eos_token
-            )
-            alive &= mask
-            for s in np.nonzero(mask)[0]:
+            emitted[mask] += n_take[mask]
+            active[mask & ~alive] = False
+            if not fused:  # device tails advance inside the fused round
+                bds.feed_rows(np.nonzero(alive)[0], cand, n_take)
+            tel = np.nonzero(mask & (budgets > 0))[0]
+            if tel.size:  # per-prompt acceptance telemetry, batched
+                self.drafter.note_draft_rows(
+                    [pids[s] for s in tel], budgets[tel], accepted[tel]
+                )
+            for s in np.nonzero(mask & (n_take > 0))[0]:
+                sched.slots[s].output.extend(cand[s, : n_take[s]].tolist())
+            for s in np.nonzero(mask & ~alive)[0]:
                 req = sched.slots[s]
-                if budgets[s] > 0:  # per-prompt acceptance telemetry
-                    self.drafter.note_draft(
-                        pids[s], int(budgets[s]), int(accepted[s])
-                    )
-                take = cand[s, : n_take[s]].tolist()
-                req.output.extend(take)
-                emitted[s] += n_take[s]
-                if alive[s]:
-                    bds.feed(s, take)
-                    head[s] = next_tok[s]
-                else:
-                    active[s] = False
-                    bds.close(s)
-                    pids[s] = None
-                    finish(req)
+                bds.close(s)
+                pids[s] = None
+                finish(req)
+            stats.host_time_s += time.perf_counter() - t_h
 
         def precompute_budgets():
             """Round t+1 budgets from bounded-staleness emitted counts —
@@ -708,29 +1004,77 @@ class SpecEngine:
                 active, np.minimum(budgets, np.maximum(remaining - 1, 0)), 0
             )
 
-        def dispatch(budgets, prop_handle) -> None:
-            nonlocal pending, cache, key, round_no
+        def sync_forest() -> None:
+            """Refresh the packed forest + per-row root handles after
+            tree mutations (finalize observations) or slot turnover
+            (admissions). Called from the overlap window so the repack
+            and the roots upload hide behind the in-flight round; the
+            dispatch-side call is a startup/late-repack fallback."""
+            nonlocal forest, roots_dev, last_ver, roots_dirty
+            bds.prewarm()
+            last_ver = bds.repack_version
+            roots_dirty = False
+            forest = bds.forest_arrays()
+            roots_dev = jnp.asarray(bds.roots_array())
+            stats.n_h2d += 1
+
+        def dispatch(budgets, prop_handle, fresh_roots: bool = False) -> None:
+            nonlocal pending, cache, key, round_no, state
+            t_h = time.perf_counter()
             K = self._bucket(int(budgets.max(initial=0)))
-            block = np.zeros((n_slots, K + 1), np.int32)
-            block[:, 0] = head
-            props = bds.consume(prop_handle)
-            for s in np.nonzero(active)[0]:
-                prop = props[s]
-                budgets[s] = len(prop)
-                if prop:
-                    block[s, 1 : 1 + len(prop)] = prop
-            key, kv = jax.random.split(key)
-            res, cache = self._get_verify(K)(
-                self.params, cache, jnp.asarray(block),
-                jnp.asarray(budgets.astype(np.int32)),
-                jnp.asarray(active), kv,
-            )
-            pending = (res, block, budgets, active.copy())
+            if fused:
+                # ---- ONE fused dispatch: propose → block → verify →
+                # commit → next-round state, all device-side. The host
+                # uploads the (B,) budget vector (plus roots when the
+                # row→tree mapping or the packed forest changed — the
+                # overlap window usually refreshed those already) and
+                # nothing else. Rows admitted THIS iteration carry
+                # budget 0 (they draft from their next round on), so a
+                # stale root entry for them is inert — only the startup
+                # branch, whose budgets were solved post-admission,
+                # needs roots synced right here.
+                if roots_dev is None or (
+                    fresh_roots
+                    and (roots_dirty or bds.repack_version != last_ver)
+                ):
+                    sync_forest()  # startup / post-admission solve
+                kv = key
+                if e.temperature > 0:  # greedy verify never uses the key
+                    key, kv = jax.random.split(key)
+                if K > 0:  # solve_budgets zeroes inactive rows
+                    self.drafter.stats["batched_proposes"] += 1
+                stats.host_time_s += time.perf_counter() - t_h
+                stats.n_h2d += 1  # the (B,) budget vector
+                cache, state, outs_dev, _ = self._get_fused(K, 1)(
+                    self.params, forest, cache, state, roots_dev,
+                    budgets.astype(np.int32), kv,
+                )
+                pending = ("fused", outs_dev, K, active.copy())
+            else:
+                block = np.zeros((n_slots, K + 1), np.int32)
+                block[:, 0] = head
+                props = bds.consume(prop_handle)
+                for s in np.nonzero(active)[0]:
+                    prop = props[s]
+                    budgets[s] = len(prop)
+                    if prop:
+                        block[s, 1 : 1 + len(prop)] = prop
+                kv = key
+                if e.temperature > 0:  # greedy verify never uses the key
+                    key, kv = jax.random.split(key)
+                block_dev = jnp.asarray(block)
+                budgets_dev = jnp.asarray(budgets.astype(np.int32))
+                active_dev = jnp.asarray(active)
+                stats.host_time_s += time.perf_counter() - t_h
+                stats.n_h2d += 3  # block + budgets + active uploads
+                res, cache = self._get_verify(K)(
+                    self.params, cache, block_dev, budgets_dev,
+                    active_dev, kv,
+                )
+                pending = ("plain", res, block, budgets, active.copy())
             round_no += 1
             stats.n_rounds += 1
             stats.n_fwd += 1
-            stats.n_toks_proposed += int((1 + budgets[active]).sum())
-            stats.n_drafted += int(budgets[active].sum())
             if collect_effective_batch:
                 stats.effective_batch.append(int(active.sum()))
             for s in np.nonzero(active)[0]:
@@ -738,45 +1082,61 @@ class SpecEngine:
 
         while sched.has_work() or pending is not None:
             # ---- overlap window: the device executes the in-flight
-            # verify; the host observes finished rollouts (their drafts
+            # round; the host observes finished rollouts (their drafts
             # immediately help still-running stragglers) and pre-solves
             # the next round's budgets.
             if finalize_q:
                 while finalize_q:
-                    req = finalize_q.pop(0)
+                    req = finalize_q.popleft()
                     self._finalize_request(req)
                     done_q.append(req)
-                # repack mutated trees while the verify is in flight so
-                # the round's propose dispatch stays cache-hit (once,
-                # after ALL of the round's observations mutated trees)
+                # repack mutated trees while the round is in flight so
+                # the next dispatch stays cache-hit (once, after ALL of
+                # the round's observations mutated trees)
                 bds.prewarm()
+            if fused and (roots_dirty or bds.repack_version != last_ver):
+                # also in the overlap window: the roots/forest upload
+                # for last iteration's admissions rides the in-flight
+                # round (their budgets stay 0 until the next solve)
+                sync_forest()
             pre = precompute_budgets() if pending is not None else None
-            consume()  # device sync: the next dispatch needs the heads
-            # ---- batched draft propose for the rows that survived the
-            # round, dispatched BEFORE admissions: the device suffix
-            # walk overlaps the admissions' B=1 prefills. Rows admitted
-            # below draft from their next round on (one draft-free
-            # warmup round per admission).
+            consume()  # device sync: bookkeeping needs the round result
+            # ---- unfused: batched draft propose for the rows that
+            # survived the round, dispatched BEFORE admissions so the
+            # device suffix walk overlaps the admission prefills. Fused:
+            # the propose runs inside the round dispatch below. Either
+            # way, rows admitted below draft from their next round on
+            # (one draft-free warmup round per admission).
             budgets = prop_handle = None
             if active.any():
+                t_h = time.perf_counter()
                 budgets = solve_budgets(pre)
-                prop_handle = bds.dispatch(budgets)
+                if not fused:
+                    prop_handle = bds.dispatch(budgets)
+                stats.host_time_s += time.perf_counter() - t_h
             admit()  # recycle freed slots before the next round
             if active.any():
+                fresh_roots = False
                 if budgets is None:
                     # The pool was empty before admissions (startup or
                     # full drain): nothing was in flight to overlap
                     # with, so solve + propose for the freshly admitted
                     # batch now — warm history drafts from round one.
+                    t_h = time.perf_counter()
                     budgets = solve_budgets(None)
-                    prop_handle = bds.dispatch(budgets)
-                dispatch(budgets, prop_handle)
+                    if not fused:
+                        prop_handle = bds.dispatch(budgets)
+                    stats.host_time_s += time.perf_counter() - t_h
+                    fresh_roots = True
+                dispatch(budgets, prop_handle, fresh_roots)
             while done_q:
-                yield done_q.pop(0)
+                yield done_q.popleft()
         while finalize_q:  # tail: rows that finished in the last round
-            req = finalize_q.pop(0)
+            req = finalize_q.popleft()
             self._finalize_request(req)
             yield req
+        stats.n_h2d += bds.xfers.pop("h2d", 0)
+        stats.n_d2h += bds.xfers.pop("d2h", 0)
         stats.wall_time_s = time.perf_counter() - t_serve0
 
     def _finalize_request(self, req: Request) -> None:

@@ -117,3 +117,25 @@ def sample_token(
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def sample_token_rows(
+    logits: jnp.ndarray,  # (B, V)
+    *,
+    temperature: float = 0.0,
+    keys: Optional[jax.Array] = None,  # (B,) one PRNG key per row
+) -> jnp.ndarray:
+    """Per-row-keyed first-token sampling.
+
+    The continuous engine coalesces same-bucket admissions into one
+    batched prefill but still derives one PRNG key per *request* (in
+    admission order), so the sampled first tokens are independent of how
+    admissions happen to be grouped into prefill batches.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert keys is not None, "stochastic sampling needs per-row PRNG keys"
+    sample = jax.vmap(
+        lambda lg, k: jax.random.categorical(k, lg / temperature)
+    )
+    return sample(logits, keys).astype(jnp.int32)

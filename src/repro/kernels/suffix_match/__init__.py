@@ -1,12 +1,22 @@
 from . import ops, ref
-from .ops import PackedForest, pack_forest, suffix_match_propose
+from .ops import (
+    ChunkedForest,
+    PackedForest,
+    pack_forest,
+    pack_forest_chunked,
+    propose_device,
+    suffix_match_propose,
+)
 from .ref import suffix_match_propose_ref
 
 __all__ = [
     "ops",
     "ref",
+    "ChunkedForest",
     "PackedForest",
     "pack_forest",
+    "pack_forest_chunked",
+    "propose_device",
     "suffix_match_propose",
     "suffix_match_propose_ref",
 ]

@@ -85,6 +85,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _FEED = 0  # consume the next tail token / walk the continuation
 _DESC = 1  # mid suffix-link re-descent (skip/count, one segment a step)
@@ -379,6 +380,111 @@ def suffix_match_propose_kernel(
         interpret=interpret,
     )(
         tails, roots, budgets,
+        edge_node, edge_tok, edge_child,
+        suffix_link, edge_start, edge_len, first_tok, best_child,
+        corpus,
+    )
+    return out
+
+
+def _suffix_match_kernel_chunked(
+    tidx_ref,  # scalar-prefetch: (B,) tree ordinal per row
+    tail_ref, root_ref, budget_ref,
+    en_ref, et_ref, ec_ref,
+    sl_ref, es_ref, el_ref, ft_ref, bc_ref,
+    corpus_ref,
+    mlen_ref, nprop_ref, props_ref,
+    *,
+    n_prop_max: int,
+    min_match: int,
+):
+    # The BlockSpec index maps already streamed this row's tree into
+    # VMEM (tidx_ref drove the DMA); in-kernel the core is identical to
+    # the flat variant, just on tree-local indices (root 0).
+    del tidx_ref
+    _suffix_match_kernel(
+        tail_ref, root_ref, budget_ref,
+        en_ref, et_ref, ec_ref,
+        sl_ref, es_ref, el_ref, ft_ref, bc_ref,
+        corpus_ref,
+        mlen_ref, nprop_ref, props_ref,
+        n_prop_max=n_prop_max, min_match=min_match,
+    )
+
+
+def suffix_match_propose_kernel_chunked(
+    tails: jnp.ndarray,  # (B, m) int32
+    roots: jnp.ndarray,  # (B,) int32 tree ordinal (< 0 = inactive row)
+    budgets: jnp.ndarray,  # (B,) int32
+    edge_node: jnp.ndarray,  # (T, Es) per-tree chunked forest …
+    edge_tok: jnp.ndarray,
+    edge_child: jnp.ndarray,
+    suffix_link: jnp.ndarray,  # (T, Ns)
+    edge_start: jnp.ndarray,
+    edge_len: jnp.ndarray,
+    first_tok: jnp.ndarray,
+    best_child: jnp.ndarray,
+    corpus: jnp.ndarray,  # (T, Cs) int32
+    *,
+    n_prop_max: int,
+    min_match: int,
+    interpret: bool = False,
+):
+    """HBM→VMEM streamed variant for forests past VMEM capacity.
+
+    The flat kernel holds the whole packed forest in VMEM for every grid
+    step, which caps the forest at a few MB. Here the forest is packed
+    *per tree* (``ops.pack_forest_chunked``: node/edge/corpus indices
+    are tree-local, rows padded to a common stride) and the grid streams
+    exactly ONE tree's chunk per row: a scalar-prefetched ``tree`` index
+    drives the BlockSpec index maps, so pallas DMAs the row's tree from
+    HBM into VMEM ahead of the grid step (consecutive rows drafting from
+    the same problem reuse the resident chunk). VMEM then holds one
+    tree-stride instead of the whole forest — the forest scales with
+    HBM, the stride with the largest single tree.
+    """
+    B, m = tails.shape
+    T, Es = edge_node.shape
+    Ns = suffix_link.shape[1]
+    Cs = corpus.shape[1]
+    tidx = jnp.clip(roots, 0, T - 1).astype(jnp.int32)
+    root_local = jnp.where(roots >= 0, 0, -1).astype(jnp.int32)
+    kernel = functools.partial(
+        _suffix_match_kernel_chunked,
+        n_prop_max=n_prop_max, min_match=min_match,
+    )
+    row = pl.BlockSpec((None, m), lambda b, t: (b, 0))
+    scalar = pl.BlockSpec((1,), lambda b, t: (b,))
+    tree_e = pl.BlockSpec((None, Es), lambda b, t: (t[b], 0))
+    tree_n = pl.BlockSpec((None, Ns), lambda b, t: (t[b], 0))
+    tree_c = pl.BlockSpec((None, Cs), lambda b, t: (t[b], 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            row, scalar, scalar,
+            tree_e, tree_e, tree_e,
+            tree_n, tree_n, tree_n, tree_n, tree_n,
+            tree_c,
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda b, t: (b,)),
+            pl.BlockSpec((1,), lambda b, t: (b,)),
+            pl.BlockSpec((None, n_prop_max), lambda b, t: (b, 0)),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B, n_prop_max), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        tidx,
+        tails, root_local, budgets,
         edge_node, edge_tok, edge_child,
         suffix_link, edge_start, edge_len, first_tok, best_child,
         corpus,

@@ -23,12 +23,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import suffix_match_propose_kernel
+from .kernel import (
+    match_propose_row,
+    suffix_match_propose_kernel,
+    suffix_match_propose_kernel_chunked,
+)
 from .ref import suffix_match_propose_ref
 
 _MIN_NODES = 1024
 _MIN_EDGES = 1024
 _MIN_CORPUS = 2048
+_MIN_STRIDE = 256
 _SENTINEL = np.int32(np.iinfo(np.int32).max)  # sorts past every real edge
 
 
@@ -44,6 +49,25 @@ class PackedForest(NamedTuple):
     first_tok: jnp.ndarray
     best_child: jnp.ndarray
     corpus: jnp.ndarray
+
+
+class ChunkedForest(NamedTuple):
+    """Per-tree chunked export: row ``t`` holds tree ``t`` (tree-local
+    node/edge/corpus indices, padded to a common stride). The pallas
+    kernel streams one row from HBM to VMEM per grid step (scalar-
+    prefetch driven), so the forest may exceed VMEM as long as the
+    largest single tree fits. ``roots`` for this layout are tree
+    ordinals (row indices), not node ids."""
+
+    edge_node: jnp.ndarray  # (T, Es)
+    edge_tok: jnp.ndarray
+    edge_child: jnp.ndarray
+    suffix_link: jnp.ndarray  # (T, Ns)
+    edge_start: jnp.ndarray
+    edge_len: jnp.ndarray
+    first_tok: jnp.ndarray
+    best_child: jnp.ndarray
+    corpus: jnp.ndarray  # (T, Cs)
 
 
 def _bucket(n: int, floor: int) -> int:
@@ -119,6 +143,119 @@ def pack_forest(
     return forest, roots
 
 
+def forest_nbytes(packs: Sequence) -> int:
+    """Approximate device bytes of a flat forest over ``packs`` (pre-
+    bucketing): 3 int32 edge arrays, 5 node arrays, 1 corpus array."""
+    n = sum(p.n_nodes for p in packs)
+    e = sum(p.n_edges for p in packs)
+    c = sum(len(p.corpus) for p in packs)
+    return 4 * (3 * e + 5 * n + c)
+
+
+def pack_forest_chunked(
+    packs: Sequence, *, min_stride_nodes: int = _MIN_STRIDE,
+    min_stride_edges: int = _MIN_STRIDE, min_stride_corpus: int = _MIN_STRIDE,
+    min_trees: int = 1,
+) -> Tuple[ChunkedForest, np.ndarray]:
+    """Pack trees into the per-tree chunked layout; returns
+    (forest, tree ordinal per tree).
+
+    Unlike ``pack_forest`` nothing is offset: every row keeps the
+    tree-local indices of its ``PackedSuffixTree`` (root = node 0), so
+    the kernel can operate on a single streamed-in row. Strides are the
+    bucketed maximum single-tree sizes (25% headroom, power-of-two with
+    generous floors) and the tree count is bucketed too, so sliding-
+    window growth recompiles only on doublings. Padding is inert: edge
+    sentinels sort last, padding nodes self-link *locally*, padded
+    corpus is separators (-1), and padded tree rows are never selected
+    (inactive rows clamp to tree 0 with root -1).
+    """
+    n_max = max((p.n_nodes for p in packs), default=1)
+    e_max = max((p.n_edges for p in packs), default=1)
+    c_max = max((len(p.corpus) for p in packs), default=1)
+    Ns = _bucket(n_max + n_max // 4, min_stride_nodes)
+    Es = _bucket(e_max + e_max // 4, min_stride_edges)
+    Cs = _bucket(c_max + c_max // 4, min_stride_corpus)
+    T = _bucket(max(len(packs), 1), max(min_trees, 1))
+    en = np.full((T, Es), _SENTINEL, np.int32)
+    et = np.full((T, Es), _SENTINEL, np.int32)
+    ec = np.full((T, Es), -1, np.int32)
+    sl = np.broadcast_to(np.arange(Ns, dtype=np.int32), (T, Ns)).copy()
+    es = np.zeros((T, Ns), np.int32)
+    el = np.zeros((T, Ns), np.int32)
+    ft = np.full((T, Ns), -1, np.int32)
+    bc = np.full((T, Ns), -1, np.int32)
+    corpus = np.full((T, Cs), -1, np.int32)
+    for i, p in enumerate(packs):
+        n, e, c = p.n_nodes, p.n_edges, len(p.corpus)
+        en[i, :e] = p.edge_node
+        et[i, :e] = p.edge_tok
+        ec[i, :e] = p.edge_child
+        sl[i, :n] = p.suffix_link
+        es[i, :n] = p.edge_start
+        el[i, :n] = p.edge_len
+        ft[i, :n] = p.first_tok
+        bc[i, :n] = p.best_child
+        corpus[i, :c] = p.corpus
+    forest = ChunkedForest(
+        edge_node=jnp.asarray(en), edge_tok=jnp.asarray(et),
+        edge_child=jnp.asarray(ec),
+        suffix_link=jnp.asarray(sl), edge_start=jnp.asarray(es),
+        edge_len=jnp.asarray(el), first_tok=jnp.asarray(ft),
+        best_child=jnp.asarray(bc), corpus=jnp.asarray(corpus),
+    )
+    return forest, np.arange(len(packs), dtype=np.int32)
+
+
+def _propose_chunked_ref(forest, tails, roots, budgets, *, n_prop_max,
+                         min_match):
+    """Chunked-layout jnp fallback: vmap the scalar core over rows,
+    gathering each row's tree chunk (the CPU/oracle twin of the
+    scalar-prefetch streamed pallas variant)."""
+    T = forest.edge_node.shape[0]
+    tidx = jnp.clip(roots, 0, T - 1).astype(jnp.int32)
+    root_local = jnp.where(roots >= 0, 0, -1).astype(jnp.int32)
+
+    def one(t, tail, root, budget):
+        return match_propose_row(
+            forest.edge_node[t], forest.edge_tok[t], forest.edge_child[t],
+            forest.suffix_link[t], forest.edge_start[t], forest.edge_len[t],
+            forest.first_tok[t], forest.best_child[t], forest.corpus[t],
+            tail, root, budget,
+            n_prop_max=n_prop_max, min_match=min_match,
+        )
+
+    return jax.vmap(one)(tidx, tails, root_local, budgets)
+
+
+def propose_device(forest, tails, roots, budgets, *, n_prop_max,
+                   min_match, impl, interpret):
+    """Trace-time propose dispatch — usable standalone *or inside a
+    larger jitted program* (the fused verify round composes it with the
+    model forward). Routes on forest layout: flat forests use the
+    shared-block kernel / vmapped reference, chunked forests the
+    scalar-prefetch streamed kernel / per-row gather reference."""
+    if isinstance(forest, ChunkedForest):
+        if impl == "ref":
+            return _propose_chunked_ref(
+                forest, tails, roots, budgets,
+                n_prop_max=n_prop_max, min_match=min_match,
+            )
+        return suffix_match_propose_kernel_chunked(
+            tails, roots, budgets, *forest,
+            n_prop_max=n_prop_max, min_match=min_match, interpret=interpret,
+        )
+    if impl == "ref":
+        return suffix_match_propose_ref(
+            tails, roots, budgets, *forest,
+            n_prop_max=n_prop_max, min_match=min_match,
+        )
+    return suffix_match_propose_kernel(
+        tails, roots, budgets, *forest,
+        n_prop_max=n_prop_max, min_match=min_match, interpret=interpret,
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("n_prop_max", "min_match", "impl", "interpret"),
@@ -129,14 +266,10 @@ def _dispatch(query, forest, *, n_prop_max, min_match, impl, interpret):
     tails = query[:, :-2]
     roots = query[:, -2]
     budgets = query[:, -1]
-    if impl == "ref":
-        return suffix_match_propose_ref(
-            tails, roots, budgets, *forest,
-            n_prop_max=n_prop_max, min_match=min_match,
-        )
-    return suffix_match_propose_kernel(
-        tails, roots, budgets, *forest,
-        n_prop_max=n_prop_max, min_match=min_match, interpret=interpret,
+    return propose_device(
+        forest, tails, roots, budgets,
+        n_prop_max=n_prop_max, min_match=min_match,
+        impl=impl, interpret=interpret,
     )
 
 

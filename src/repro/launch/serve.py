@@ -44,6 +44,15 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=0,
                     help="requests per round in continuous mode "
                          "(default: 2x --batch)")
+    ap.add_argument("--fuse", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="fused device-resident rounds (one dispatch "
+                         "per verify round); 'off' keeps the unfused "
+                         "multi-dispatch fallback")
+    ap.add_argument("--scope", default="problem+request",
+                    choices=["problem", "problem+request", "global"],
+                    help="drafter scope (fused rounds need a tree-only "
+                         "scope: problem or global)")
     ap.add_argument("--history-dir", default="",
                     help="load persisted rollout history (warm trees + "
                          "warm length priors) from this directory")
@@ -88,8 +97,9 @@ def main() -> None:
     eng = SpecEngine(
         params, cfg,
         EngineConfig(spec_enabled=True, max_new_tokens=32, eos_token=1,
-                     max_draft=8, block_buckets=(0, 4, 8)),
-        drafter=SuffixDrafter(DrafterConfig(scope="problem+request",
+                     max_draft=8, block_buckets=(0, 4, 8),
+                     fuse_rounds=args.fuse),
+        drafter=SuffixDrafter(DrafterConfig(scope=args.scope,
                                             min_match=2)),
     )
     if args.history_dir:

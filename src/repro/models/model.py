@@ -490,23 +490,25 @@ def prefill(
     return last_logits, Cache(tuple(new_stages), plen)
 
 
-def copy_cache_row(cfg: ModelConfig, dst: Cache, src: Cache, slot) -> Cache:
-    """Write batch row 0 of ``src`` into batch row ``slot`` of ``dst``.
-
-    The slot-recycling admission primitive: a finished row's slot in the
-    continuous-batching pool is overwritten with a freshly prefilled
-    B=1 cache of the next pending request. Both caches must share the
-    same geometry (``max_len``/``headroom``); the batch axis is leading
-    for unstacked stages and second (after the scan-repeat axis) for
-    stacked ones. ``slot`` may be traced (dynamic-update-slice under
-    jit, so one compile serves every slot).
+def copy_cache_rows(cfg: ModelConfig, dst: Cache, src: Cache, slots) -> Cache:
+    """Write batch rows ``0..k-1`` of ``src`` into rows ``slots`` of
+    ``dst`` — the slot-recycling admission primitive: finished rows'
+    slots in the continuous-batching pool are overwritten with the
+    freshly (batch-)prefilled caches of the next pending requests, one
+    scatter per cache leaf for the whole coalesced admission chunk.
+    Both caches must share the same geometry (``max_len``/``headroom``);
+    the batch axis is leading for unstacked stages and second (after
+    the scan-repeat axis) for stacked ones. ``slots`` is a (k,) index
+    array (may be traced); out-of-range entries (e.g. ``n_slots``
+    padding) are dropped by XLA scatter semantics, so callers can pad
+    ``slots`` to a bucketed size without masking.
     """
 
     def write(d, s, stacked: bool):
         def one(dl, sl):
-            if stacked:  # (R, B, ...)
-                return dl.at[:, slot].set(sl[:, 0].astype(dl.dtype))
-            return dl.at[slot].set(sl[0].astype(dl.dtype))
+            if stacked:  # (R, B, ...): scatter along the batch axis
+                return dl.at[:, slots].set(sl.astype(dl.dtype))
+            return dl.at[slots].set(sl.astype(dl.dtype))
 
         return jax.tree.map(one, d, s)
 
@@ -517,7 +519,7 @@ def copy_cache_row(cfg: ModelConfig, dst: Cache, src: Cache, slot) -> Cache:
             for ui in range(len(unit))
         )
         new_stages.append(unit_new)
-    lengths = dst.lengths.at[slot].set(src.lengths[0])
+    lengths = dst.lengths.at[slots].set(src.lengths)
     return Cache(tuple(new_stages), lengths)
 
 

@@ -1,0 +1,228 @@
+"""Fused device-resident rounds vs the unfused multi-dispatch round.
+
+The contract under test: with a shared PRNG stream, the fused program
+(propose → block build → verify → commit → state update in ONE dispatch,
+``core/fused_round.py``) emits *bit-identical* tokens to the unfused
+round at temperature 0 AND under seeded sampling — in both serving
+modes — and steady-state serving never triggers a fresh jit compile
+after warmup.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_params
+from repro.configs.base import ModelConfig
+from repro.core.drafter import DrafterConfig, SuffixDrafter
+from repro.core.fused_round import emit_scan_device
+from repro.core.spec_engine import EngineConfig, SpecEngine, _emit_scan
+
+BASE = dict(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=64, vocab_pad_multiple=8, dtype="float32",
+)
+DENSE = ModelConfig(name="t", family="dense", **BASE)
+PROMPTS = [
+    [2, 3, 4, 5], [7, 8], [9, 10, 11, 12, 13, 14], [5, 6],
+    [3, 3, 3], [4, 4, 9, 2], [2, 2], [11, 12, 13],
+]
+PIDS = ["a", "b", "c", "d", "e", "a", "b", "c"]
+LIMITS = [14, 9, 22, 7, 5, 11, 3, 18]
+
+
+def _engine(params, cfg, *, fuse, temperature=0.0, micro_rounds=1,
+            device_draft="on", window_size=16):
+    return SpecEngine(
+        params, cfg,
+        EngineConfig(
+            max_new_tokens=24, max_draft=4, block_buckets=(0, 2, 4),
+            eos_token=1, temperature=temperature,
+            device_draft=device_draft, fuse_rounds=fuse,
+            micro_rounds=micro_rounds,
+        ),
+        drafter=SuffixDrafter(
+            DrafterConfig(scope="problem", min_match=1,
+                          window_size=window_size)
+        ),
+    )
+
+
+def _two_epochs(eng, *, mode, key0=5, key1=7):
+    """Epoch 0 lock-step (builds history), epoch 1 in ``mode``; returns
+    (epoch-0 outputs, epoch-1 outputs, epoch-1 stats)."""
+    eng.begin_iteration(0)
+    o0, _ = eng.generate(PROMPTS, PIDS, max_new_tokens=LIMITS,
+                         key=jax.random.key(key0))
+    eng.begin_iteration(1)
+    if mode == "generate":
+        o1, st = eng.generate(PROMPTS, PIDS, max_new_tokens=LIMITS,
+                              key=jax.random.key(key1))
+    else:
+        o1, st = eng.generate_continuous(
+            PROMPTS, PIDS, slots=3, max_new_tokens=LIMITS,
+            key=jax.random.key(key1),
+        )
+    return o0, o1, st
+
+
+@pytest.mark.parametrize("mode", ["generate", "continuous"])
+def test_fused_token_identity_greedy(mode):
+    """T=0: fused rounds must be token-identical to the unfused path in
+    both serving modes (warm drafter, real proposals in flight)."""
+    params = make_params(DENSE)
+    runs = {}
+    for fuse in ("on", "off"):
+        runs[fuse] = _two_epochs(
+            _engine(params, DENSE, fuse=fuse), mode=mode
+        )
+    assert runs["on"][0] == runs["off"][0]
+    assert runs["on"][1] == runs["off"][1]
+    st = runs["on"][2]
+    assert st.n_drafted > 0, "warm drafter must actually speculate"
+
+
+@pytest.mark.parametrize("mode", ["generate", "continuous"])
+def test_fused_token_identity_seeded_sampling(mode):
+    """T>0 with a fixed seed: the fused path consumes the PRNG stream
+    exactly like the unfused path (per-round verify keys, per-request
+    admission keys), so sampled outputs are bit-identical too."""
+    params = make_params(DENSE)
+    runs = {}
+    for fuse in ("on", "off"):
+        runs[fuse] = _two_epochs(
+            _engine(params, DENSE, fuse=fuse, temperature=0.8), mode=mode
+        )
+    assert runs["on"][0] == runs["off"][0]
+    assert runs["on"][1] == runs["off"][1]
+
+
+def test_fused_micro_loop_token_identity_and_fewer_syncs():
+    """R>1 lock-step micro-loop: still token-identical at T=0, while the
+    host materializes strictly fewer round results (bookkeeping syncs
+    every R rounds instead of every round)."""
+    params = make_params(DENSE)
+    o_ref, o1_ref, st_ref = _two_epochs(
+        _engine(params, DENSE, fuse="on"), mode="generate"
+    )
+    o_mic, o1_mic, st_mic = _two_epochs(
+        _engine(params, DENSE, fuse="on", micro_rounds=4), mode="generate"
+    )
+    assert (o_ref, o1_ref) == (o_mic, o1_mic)
+    assert st_mic.n_rounds == st_ref.n_rounds  # same verify rounds…
+    assert st_mic.n_d2h < st_ref.n_d2h  # …fewer host syncs
+
+
+def test_fused_ssm_family_runs_and_matches():
+    """The fused program composes the staged-state recurrent commit
+    (collect_states + commit_staged_cache) exactly like the unfused
+    verify."""
+    cfg = ModelConfig(
+        name="t-ssm", family="ssm", block_pattern=("mlstm", "slstm"),
+        **{**BASE, "d_ff": 0, "rnn_width": 64},
+    )
+    params = make_params(cfg)
+    runs = {}
+    for fuse in ("on", "off"):
+        runs[fuse] = _two_epochs(
+            _engine(params, cfg, fuse=fuse), mode="generate"
+        )
+    assert runs["on"][1] == runs["off"][1]
+
+
+def test_fused_respects_exact_limits_and_head_only_rows():
+    """Per-row max_new_tokens stays a hard cap through the fused emit
+    scan, including limit=1 (head token fills it, no round)."""
+    params = make_params(DENSE)
+    limits = [1, 2, 7, 1, 3, 5, 1, 4]
+    outs = {}
+    for fuse in ("on", "off"):
+        eng = _engine(params, DENSE, fuse=fuse)
+        outs[fuse], _ = eng.generate(
+            PROMPTS, PIDS, max_new_tokens=limits, key=jax.random.key(4)
+        )
+    assert outs["on"] == outs["off"]
+    for o, lim in zip(outs["on"], limits):
+        assert len(o) <= lim
+
+
+def test_emit_scan_device_matches_host():
+    """The device emit scan is the bit-exact twin of the host
+    ``_emit_scan`` (EOS, limits, append-then-check)."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        B, K1 = int(rng.integers(1, 6)), int(rng.integers(1, 6))
+        cand = rng.integers(0, 4, size=(B, K1)).astype(np.int32)
+        n_new = rng.integers(1, K1 + 1, size=B).astype(np.int64)
+        remaining = rng.integers(0, 8, size=B).astype(np.int64)
+        h_take, h_alive = _emit_scan(cand, n_new, remaining, eos=1)
+        d_take, d_alive = emit_scan_device(
+            cand, n_new.astype(np.int32), remaining.astype(np.int32), 1
+        )
+        assert np.array_equal(h_take, np.asarray(d_take))
+        assert np.array_equal(h_alive, np.asarray(d_alive))
+
+
+@pytest.mark.parametrize("device_draft", ["on", "off"])
+def test_steady_state_serve_never_recompiles(device_draft):
+    """Recompile guard: after a warmup serving epoch over mixed-length
+    requests, further epochs of the same workload must trigger ZERO new
+    jit compilations — in the fused device-draft mode and in the host
+    fallback mode alike. (RL training serves the same problem set every
+    epoch; a bucket flip or shape wobble here would recompile mid-run.)
+    """
+    params = make_params(DENSE)
+    # Small sliding window: steady state = saturated windows (sizes
+    # oscillate inside the compaction cycle, where the monotone bucket
+    # floors guarantee stable kernel geometry). While windows are still
+    # FILLING the forest legitimately grows and may cross a pow2 bucket
+    # — that is warmup, not steady state.
+    eng = _engine(params, DENSE, device_draft=device_draft,
+                  fuse="auto", window_size=4)
+
+    def serve_epoch(epoch):
+        eng.begin_iteration(epoch)
+        outs, _ = eng.generate_continuous(
+            PROMPTS, PIDS, slots=4, max_new_tokens=LIMITS,
+            key=jax.random.key(11 + epoch),
+        )
+        return outs
+
+    for epoch in range(5):  # compile variants + saturate every window
+        serve_epoch(epoch)
+    n0 = eng.compile_count()
+    assert n0 > 0
+    for epoch in (5, 6):
+        serve_epoch(epoch)
+        assert eng.compile_count() == n0, (
+            f"epoch {epoch} recompiled in steady state "
+            f"(device_draft={device_draft})"
+        )
+
+
+def test_fused_strictly_fewer_transfers_per_round():
+    """The fused round's host↔device traffic: one budget upload + one
+    packed result download per round, vs the unfused query/block/flag
+    uploads and multi-array downloads."""
+    params = make_params(DENSE)
+    per_round = {}
+    for fuse in ("on", "off"):
+        eng = _engine(params, DENSE, fuse=fuse)
+        eng.begin_iteration(0)
+        eng.generate(PROMPTS, PIDS, max_new_tokens=LIMITS,
+                     key=jax.random.key(5))
+        eng.begin_iteration(1)
+        from repro.core.spec_engine import RolloutStats
+        from repro.core.scheduler import Request
+
+        reqs = [
+            Request(rid=i, problem_id=PIDS[i], prompt=list(PROMPTS[i]),
+                    max_new_tokens=LIMITS[i])
+            for i in range(len(PROMPTS))
+        ]
+        stats = RolloutStats()
+        list(eng.serve(reqs, slots=4, key=jax.random.key(7), stats=stats))
+        per_round[fuse] = (stats.n_h2d + stats.n_d2h) / max(
+            stats.n_rounds, 1
+        )
+    assert per_round["on"] < per_round["off"], per_round

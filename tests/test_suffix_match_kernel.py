@@ -22,7 +22,11 @@ from repro.core.length_policy import (
     SHORT,
 )
 from repro.core.suffix_tree import SuffixTree
-from repro.kernels.suffix_match import pack_forest, suffix_match_propose
+from repro.kernels.suffix_match import (
+    pack_forest,
+    pack_forest_chunked,
+    suffix_match_propose,
+)
 
 TAIL = 16  # fixed shapes -> the jitted core compiles once per impl
 B = 4
@@ -206,6 +210,139 @@ def test_engine_device_draft_parity(tiny_dense):
             assert eng.drafter.stats["batched_proposes"] > 0
     for it in range(2):
         assert outs[("on", it)] == outs[("off", it)]
+
+
+# ---------------------------------------------------------------------------
+# chunked (HBM→VMEM streamed) forest layout
+# ---------------------------------------------------------------------------
+def _device_chunked(trees, ctxs, budgets, min_match, impl="ref"):
+    """Chunked-layout twin of ``_device`` (tree ordinal roots)."""
+    packs = [t.pack() for t in trees]
+    forest, troots = pack_forest_chunked(
+        packs, min_stride_nodes=64, min_stride_edges=64,
+        min_stride_corpus=64,
+    )
+    n = len(ctxs)
+    tails = np.full((n, TAIL), -1, np.int32)
+    roots = np.zeros(n, np.int32)
+    for b, ctx in enumerate(ctxs):
+        tail = [int(t) for t in ctx[-TAIL:]]
+        if tail:
+            tails[b, TAIL - len(tail):] = tail
+        roots[b] = troots[b % len(trees)]
+    ml, npr, props = suffix_match_propose(
+        forest, tails, roots, np.asarray(budgets, np.int32),
+        n_prop_max=KMAX, min_match=min_match, impl=impl,
+    )
+    ml, npr, props = np.asarray(ml), np.asarray(npr), np.asarray(props)
+    return ml, [props[b, : npr[b]].tolist() for b in range(n)]
+
+
+def test_chunked_forest_exceeds_single_block_limit():
+    """A forest whose flat packing would blow the kernel's single
+    shared-block budget still drafts correctly chunked: each row only
+    ever needs ITS tree's stride resident, so the per-row block stays at
+    the (tiny) stride while the total forest exceeds the configured
+    limit by an order of magnitude."""
+    from repro.kernels.suffix_match import ops as sm_ops
+
+    rng = np.random.default_rng(3)
+    trees = []
+    for t in range(48):
+        docs = [list(rng.integers(0, 6, size=12)) for _ in range(2)]
+        trees.append(_mk_tree(docs, decay=0.9, epochs=[0, 1]))
+    packs = [t.pack() for t in trees]
+    budget_bytes = 4 << 10  # pretend VMEM caps at 4 KiB
+    assert sm_ops.forest_nbytes(packs) > 10 * budget_bytes
+    forest, _ = pack_forest_chunked(
+        packs, min_stride_nodes=64, min_stride_edges=64,
+        min_stride_corpus=64,
+    )
+    # per-row residency = one stride of each table, under the limit
+    per_row = 4 * (
+        3 * forest.edge_node.shape[1] + 5 * forest.suffix_link.shape[1]
+        + forest.corpus.shape[1]
+    )
+    assert per_row < budget_bytes
+    ctxs = [list(rng.integers(0, 6, size=rng.integers(1, 12)))
+            for _ in range(len(trees))]
+    budgets = [int(b) for b in rng.integers(0, KMAX, size=len(trees))]
+    ml, props = _device_chunked(trees, ctxs, budgets, 1)
+    for b, ctx in enumerate(ctxs):
+        h_ml, h_prop = _host_oracle(trees[b], ctx, budgets[b], 1)
+        assert h_ml == ml[b], (b, ctx, h_ml, int(ml[b]))
+        assert h_prop == props[b], (b, ctx, h_prop, props[b])
+
+
+def test_chunked_pallas_interpret_matches_ref():
+    """The scalar-prefetch streamed kernel ≡ the chunked jnp reference
+    (and both ≡ the flat layout) on a multi-tree forest with inactive
+    rows."""
+    t1 = _mk_tree([[1, 2, 3, 4, 5], [1, 2, 3, 9, 9]], decay=0.9,
+                  epochs=[0, 1])
+    t2 = _mk_tree([[7, 1, 2, 8], [6, 6, 1, 2]])
+    ctxs = [[1, 2, 3], [1, 2], [6, 1, 2], [5, 5]]
+    budgets = [4, 3, 8, 2]
+    ml_f, props_f = _device([t1, t2], ctxs, budgets, 1)
+    ml_r, props_r = _device_chunked([t1, t2], ctxs, budgets, 1, impl="ref")
+    ml_p, props_p = _device_chunked(
+        [t1, t2], ctxs, budgets, 1, impl="pallas"
+    )
+    assert np.array_equal(ml_f, ml_r) and props_f == props_r
+    assert np.array_equal(ml_r, ml_p) and props_r == props_p
+
+
+def test_batched_sessions_chunked_layout_parity():
+    """forest_layout="chunked" through the BatchedDraftSessions surface
+    proposes exactly what the host sessions do."""
+    d = SuffixDrafter(
+        DrafterConfig(scope="problem", min_match=1,
+                      forest_layout="chunked")
+    )
+    d.observe_rollout("p1", [1, 2, 3, 4, 5], 0)
+    d.observe_rollout("p1", [1, 2, 3, 4, 6], 1)
+    d.observe_rollout("p2", [1, 2, 3, 9, 9], 0)
+    ctxs = {0: ("p1", [1, 2, 3]), 1: ("p2", [1, 2, 3]), 2: ("p1", [9, 9])}
+    bds = d.batched_sessions(3)
+    assert bds.device
+    host = []
+    for row, (pid, ctx) in ctxs.items():
+        bds.open(row, pid, ctx)
+        host.append(d.new_session(pid, list(ctx)).propose(4))
+    assert bds.propose_batch([4, 4, 4]) == host
+    from repro.kernels.suffix_match.ops import ChunkedForest
+
+    assert isinstance(bds._forest, ChunkedForest)
+
+
+def test_engine_fused_with_chunked_forest_parity(tiny_dense):
+    """Fused rounds compose with the chunked forest layout: outputs stay
+    token-identical to the flat-layout engine."""
+    import jax
+    from conftest import make_params
+    from repro.core.spec_engine import EngineConfig, SpecEngine
+
+    params = make_params(tiny_dense)
+    prompts = [[3, 4, 5], [6, 7], [8, 9, 10, 11]]
+    outs = {}
+    for layout in ("flat", "chunked"):
+        eng = SpecEngine(
+            params, tiny_dense,
+            EngineConfig(max_new_tokens=20, max_draft=4,
+                         block_buckets=(0, 2, 4), device_draft="on",
+                         fuse_rounds="on"),
+            drafter=SuffixDrafter(
+                DrafterConfig(scope="problem", min_match=1,
+                              forest_layout=layout)
+            ),
+        )
+        for it in range(2):
+            eng.begin_iteration(it)
+            outs[(layout, it)], _ = eng.generate(
+                prompts, key=jax.random.key(0)
+            )
+    for it in range(2):
+        assert outs[("flat", it)] == outs[("chunked", it)]
 
 
 # ---------------------------------------------------------------------------
