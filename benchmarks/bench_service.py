@@ -1,0 +1,309 @@
+"""Sharded history-service benchmark: pooled vs isolated multi-worker
+drafting + RPC latency + the never-change-outputs contract.
+
+Three measurements, emitted to ``BENCH_service.json``:
+
+1. **Pooled vs isolated warm acceptance at N workers** — N drafters
+   roll out a rotated partition of the problem set (each problem visits
+   a different worker each epoch, the realistic fleet schedule). With
+   *isolated* per-worker stores a worker re-assigned a problem starts
+   cold; with the *shared service* it drafts from the pack its peers
+   already warmed. First warm epoch accepted-per-round must be
+   **strictly higher pooled than isolated** at N=2 and N=4. Both arms
+   draft through the same ``BatchedDraftSessions`` mechanics, so the
+   comparison isolates history pooling.
+
+2. **Publish/sync latency percentiles** — per-batch publish RPC (ack
+   round-trip, off the worker's hot path) and per-sync delta pull, p50 /
+   p90 / p99 over the run.
+
+3. **Token identity** — a remote-backed engine must emit bit-identical
+   tokens to a local-store engine at T=0: history sharing may only
+   change draft *proposals*, never outputs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.drafter import DrafterConfig, SuffixDrafter
+from repro.history.client import HistoryClient
+from repro.history.service import HistoryService
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"
+
+
+def _percentiles(xs):
+    if not xs:
+        return {"p50": 0.0, "p90": 0.0, "p99": 0.0, "n": 0}
+    arr = np.asarray(xs, np.float64)
+    return {
+        "p50": float(np.percentile(arr, 50)),
+        "p90": float(np.percentile(arr, 90)),
+        "p99": float(np.percentile(arr, 99)),
+        "n": int(arr.size),
+    }
+
+
+# ---------------------------------------------------------------------------
+# 1) pooled vs isolated acceptance
+# ---------------------------------------------------------------------------
+def _epoch_rollout(rng, template, noise=0.1, vocab=24):
+    d = template.copy()
+    flips = rng.random(len(d)) < noise
+    d[flips] = rng.integers(0, vocab, size=int(flips.sum()))
+    return [int(t) for t in d]
+
+
+def _drafted_acceptance(drafter, bds, pid, rollout, k=8):
+    """T=0 speculative decode of ``rollout`` against the drafter via the
+    batched-session path (same mechanics both arms): accepted = longest
+    exact-match prefix of each proposal."""
+    bds.open(0, pid)
+    bds.feed(0, rollout[:4])
+    pos = 4
+    drafted = accepted = rounds = 0
+    budget = np.array([k])
+    while pos < len(rollout):
+        prop = bds.propose_batch(budget)[0]
+        a = 0
+        for t in prop:
+            if pos + a < len(rollout) and t == rollout[pos + a]:
+                a += 1
+            else:
+                break
+        drafted += len(prop)
+        accepted += a
+        rounds += 1
+        emit = a + 1  # accepted run + the corrected token
+        bds.feed(0, rollout[pos : pos + emit])
+        pos += emit
+    bds.close(0)
+    if drafted:
+        drafter.note_draft(pid, drafted, accepted)
+    return drafted, accepted, rounds
+
+
+def _run_fleet(drafters, templates, n_epochs, group, seed):
+    """Rotated-partition fleet simulation; returns per-epoch
+    accepted-per-round (worker w owns problem j in epoch e iff
+    (j + e) % N == w — every problem changes hands every epoch)."""
+    N = len(drafters)
+    rng = np.random.default_rng(seed)
+    sessions = [d.batched_sessions(1) for d in drafters]
+    pids = sorted(templates)
+    traj = []
+    for e in range(n_epochs):
+        for d in drafters:
+            d.begin_iteration(e)
+        acc = rounds = 0
+        for w, (d, bds) in enumerate(zip(drafters, sessions)):
+            bds.prewarm()  # remote drafters pull peer deltas here
+            for j, pid in enumerate(pids):
+                if (j + e) % N != w:
+                    continue
+                for _ in range(group):
+                    roll = _epoch_rollout(rng, templates[pid])
+                    _, a, r = _drafted_acceptance(d, bds, pid, roll)
+                    acc += a
+                    rounds += r
+                    d.observe_rollout(pid, roll, e, response_len=len(roll))
+            if d.remote is not None:
+                # epoch barrier: peers must see this worker's rollouts
+                assert d.remote.flush(), "publish flush timed out"
+        traj.append(acc / max(rounds, 1))
+    return traj
+
+
+def bench_pooled_vs_isolated(
+    n_workers, n_problems, doc_len, n_epochs, group, n_shards=2, seed=0
+):
+    rng = np.random.default_rng(seed)
+    templates = {
+        f"p{i}": rng.integers(0, 24, size=doc_len)
+        for i in range(n_problems)
+    }
+    cfg = DrafterConfig(scope="problem", window_size=8, min_match=2,
+                        epoch_decay=0.9)
+
+    iso = [SuffixDrafter(cfg) for _ in range(n_workers)]
+    iso_traj = _run_fleet(iso, templates, n_epochs, group, seed + 1)
+
+    svc = HistoryService.spawn_in_process(
+        n_shards, window_size=cfg.window_size, epoch_decay=cfg.epoch_decay
+    )
+    try:
+        clients = [
+            HistoryClient(svc.addresses, worker_id=f"w{w}")
+            for w in range(n_workers)
+        ]
+        pooled = [SuffixDrafter(cfg, remote=c) for c in clients]
+        t0 = time.perf_counter()
+        pooled_traj = _run_fleet(pooled, templates, n_epochs, group,
+                                 seed + 1)
+        wall = time.perf_counter() - t0
+        publish_ms = [x for c in clients
+                      for x in c.latencies["publish_ms"]]
+        sync_ms = [x for c in clients for x in c.latencies["sync_ms"]]
+        stats = {}
+        for c in clients:
+            for k, v in c.stats.items():
+                stats[k] = stats.get(k, 0) + v
+        for c in clients:
+            c.close()
+    finally:
+        svc.stop()
+    return {
+        "n_workers": n_workers,
+        "n_shards": n_shards,
+        "n_problems": n_problems,
+        "group": group,
+        "acceptance_isolated": iso_traj,
+        "acceptance_pooled": pooled_traj,
+        # epoch 0 is cold for both arms; epoch 1 is the first epoch
+        # where pooling can matter (every problem just changed hands)
+        "first_warm_epoch_isolated": iso_traj[1],
+        "first_warm_epoch_pooled": pooled_traj[1],
+        "pooled_wall_s": wall,
+        "publish_ms": _percentiles(publish_ms),
+        "sync_ms": _percentiles(sync_ms),
+        "client_stats": stats,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 3) token identity: sharing history must never change outputs
+# ---------------------------------------------------------------------------
+def bench_token_identity(n_iters=2):
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.core.spec_engine import EngineConfig, SpecEngine
+    from repro.models import model as M
+    from repro.models.layers import split_tree
+
+    cfg = ModelConfig(
+        name="bench-service", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+        vocab_pad_multiple=8, dtype="float32",
+    )
+    params, _ = split_tree(M.init_params(cfg, jax.random.key(0)))
+    prompts = [[2, 3, 4, 5], [7, 8, 9], [10, 11]]
+    pids = ["a", "b", "c"]
+
+    def mk(remote=None):
+        return SpecEngine(
+            params, cfg,
+            EngineConfig(spec_enabled=True, max_new_tokens=16, eos_token=1,
+                         use_budget_solver=False),
+            drafter=SuffixDrafter(
+                DrafterConfig(scope="problem", min_match=2), remote=remote
+            ),
+        )
+
+    svc = HistoryService.spawn_in_process(2, window_size=16)
+    try:
+        client = HistoryClient(svc.addresses, worker_id="w0")
+        eng_r, eng_l = mk(remote=client), mk()
+        identical = True
+        fwd_r = fwd_l = 0
+        for it in range(n_iters):
+            out_r, st_r = eng_r.generate(prompts, pids,
+                                         key=jax.random.key(it))
+            client.flush()
+            out_l, st_l = eng_l.generate(prompts, pids,
+                                         key=jax.random.key(it))
+            identical &= out_r == out_l
+            fwd_r += st_r.n_fwd
+            fwd_l += st_l.n_fwd
+            eng_r.begin_iteration(it + 1)
+            eng_l.begin_iteration(it + 1)
+        client.close()
+    finally:
+        svc.stop()
+    return {
+        "token_identical": bool(identical),
+        "n_fwd_remote": int(fwd_r),
+        "n_fwd_local": int(fwd_l),
+    }
+
+
+# ---------------------------------------------------------------------------
+def run(quick: bool = True, smoke: bool = False,
+        out: str = "BENCH_service.json"):
+    if smoke:
+        fleet_args = dict(n_problems=4, doc_len=40, n_epochs=3, group=2)
+        worker_counts = (2, 4)
+    elif quick:
+        fleet_args = dict(n_problems=6, doc_len=60, n_epochs=3, group=2)
+        worker_counts = (2, 4)
+    else:
+        fleet_args = dict(n_problems=8, doc_len=100, n_epochs=4, group=3)
+        worker_counts = (2, 4, 8)
+
+    fleets = [
+        bench_pooled_vs_isolated(n, **fleet_args) for n in worker_counts
+    ]
+    identity = bench_token_identity()
+
+    payload = {"pooled_vs_isolated": fleets, "token_identity": identity}
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    for r in fleets:
+        assert r["first_warm_epoch_pooled"] > r["first_warm_epoch_isolated"], (
+            f"N={r['n_workers']}: pooled first-warm-epoch accepted/round "
+            f"({r['first_warm_epoch_pooled']:.3f}) must beat isolated "
+            f"per-worker stores ({r['first_warm_epoch_isolated']:.3f})"
+        )
+        assert r["client_stats"].get("dropped_batches", 0) == 0, (
+            "bounded outbox must not drop under benchmark load"
+        )
+    assert identity["token_identical"], (
+        "history sharing may only change draft proposals, never outputs"
+    )
+
+    rows = [
+        row(
+            f"bench_service/pooled_n{r['n_workers']}",
+            r["sync_ms"]["p50"] * 1e3,
+            f"pooled_acc={r['first_warm_epoch_pooled']:.3f};"
+            f"isolated_acc={r['first_warm_epoch_isolated']:.3f};"
+            f"publish_p50={r['publish_ms']['p50']:.2f}ms;"
+            f"publish_p99={r['publish_ms']['p99']:.2f}ms;"
+            f"sync_p50={r['sync_ms']['p50']:.2f}ms;"
+            f"sync_p99={r['sync_ms']['p99']:.2f}ms",
+        )
+        for r in fleets
+    ]
+    rows.append(
+        row(
+            "bench_service/token_identity",
+            0.0,
+            f"identical={identity['token_identical']};"
+            f"n_fwd_remote={identity['n_fwd_remote']};"
+            f"n_fwd_local={identity['n_fwd_local']}",
+        )
+    )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (seconds)")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_service.json")
+    args = ap.parse_args()
+    for r in run(quick=not args.full, smoke=args.smoke, out=args.out):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ MODULES = [
     "bench_draft",
     "bench_history",
     "bench_rollout",
+    "bench_service",
     "fig01_batch_collapse",
     "fig02_similarity",
     "fig04_acceptance",

@@ -287,21 +287,25 @@ class BatchedDraftSessions:
 
     # -- batched propose ---------------------------------------------------
     def _refresh_forest(self, need_keys) -> None:
-        """(Re)pack the device forest iff any needed tree's flat export
-        changed — ``SuffixTree.pack()`` is version-gated, so identity of
+        """(Re)pack the device forest iff any needed key's flat export
+        changed — ``drafter.pack_for`` is identity-stable (version-gated
+        tree pack locally, replicated delta remotely), so identity of
         the returned pack is the change signal."""
         from repro.kernels.suffix_match import ops as sm_ops
 
         drafter = self.drafter
+        if drafter.remote is not None:
+            # Cold-start only: a key with no replicated pack yet forces
+            # one sync; warm keys ride the overlap-window syncs
+            # (``prewarm``) so the dispatch path stays RPC-free.
+            drafter.remote.sync_if_missing(
+                {k for k in need_keys if k is not None}
+            )
         changed = False
         for key in need_keys:
-            tree = drafter.index.tree(key)
-            if tree is None and drafter.store.window(key):
-                # warm store, cold tree (persisted history): build lazily
-                tree = drafter._rebuild(key)
-            if tree is None:
+            pk = drafter.pack_for(key)
+            if pk is None:
                 continue
-            pk = tree.pack()
             if self._packed_by_key.get(key) is not pk:
                 self._packed_by_key[key] = pk
                 changed = True
@@ -325,10 +329,7 @@ class BatchedDraftSessions:
                 # LARGEST tree (same compaction-cycle argument as the
                 # flat floors below, applied per chunk).
                 live_max = max(
-                    (t.n_live_tokens
-                     for t in (drafter.index.tree(k) for k in keys)
-                     if t is not None),
-                    default=0,
+                    (drafter.live_tokens_for(k) for k in keys), default=0
                 )
                 floor_c = int(
                     (drafter.index.compact_ratio + 1.0) * live_max
@@ -353,11 +354,7 @@ class BatchedDraftSessions:
                 # the cycle's maximum (nodes <= 2 x corpus tokens),
                 # rounded to a power of two, so steady-state serving
                 # never recompiles the kernel.
-                live = sum(
-                    t.n_live_tokens
-                    for t in (drafter.index.tree(k) for k in keys)
-                    if t is not None
-                )
+                live = sum(drafter.live_tokens_for(k) for k in keys)
                 floor_c = int((drafter.index.compact_ratio + 1.0) * live)
                 p2 = sm_ops._bucket(max(floor_c, sm_ops._MIN_CORPUS), 1)
                 self._forest, roots = sm_ops.pack_forest(
@@ -407,6 +404,10 @@ class BatchedDraftSessions:
         """
         if not self.device:
             return
+        # Remote-backed drafters pull replicated deltas here: prewarm
+        # runs in the verify-overlap window, so the shard RPC (like the
+        # repack it delivers) hides behind the in-flight round.
+        self.drafter.sync_remote()
         keys = {self._keys[b] for b in range(self.n_rows) if self._open[b]}
         if keys:
             self._refresh_forest(keys)
@@ -548,17 +549,35 @@ _GLOBAL_KEY = "__global__"
 
 
 class SuffixDrafter:
-    """Store-backed collection of incrementally maintained speculators."""
+    """Store-backed collection of incrementally maintained speculators.
+
+    With ``remote`` set (a ``repro.history.client.HistoryClient``) the
+    drafter is backed by the sharded cross-worker history service
+    instead of its local store: observed rollouts and accept telemetry
+    are *published* (async, fire-and-forget) and drafting consumes the
+    client's replicated ``SuffixTree.pack()`` deltas — a globally-warm
+    forest fed by every worker's rollouts. Remote mode requires a
+    tree-only scope (problem / global): per-request host trees never
+    leave the process by design.
+    """
 
     def __init__(
         self,
         cfg: Optional[DrafterConfig] = None,
         store=None,
+        remote=None,
     ) -> None:
         from repro.history.incremental import IncrementalIndex
         from repro.history.store import RolloutHistoryStore
 
         self.cfg = cfg or DrafterConfig()
+        self.remote = remote
+        if remote is not None and self.cfg.scope == "problem+request":
+            raise ValueError(
+                "remote-backed drafting needs a tree-only scope "
+                "(problem or global); problem+request keeps per-row "
+                "host sessions that cannot draft from replicated packs"
+            )
         self._window_size = self.cfg.window_size
         self.store = (
             store if store is not None
@@ -569,6 +588,10 @@ class SuffixDrafter:
         self.epoch = self.store.epoch
         # Stats for EXPERIMENTS/benchmarks
         self.stats = collections.Counter()
+        if remote is not None:
+            # the local store becomes a telemetry mirror: pooled accept
+            # counters merge into it on sync (fleet-wide acceptance())
+            remote.attach(store=self.store)
 
     @property
     def _trees(self) -> Dict[object, SuffixTree]:
@@ -602,25 +625,29 @@ class SuffixDrafter:
         ep = self.epoch if epoch is None else int(epoch)
         key = self._key(problem_id)
         toks = [int(t) for t in tokens]
-        rec, evicted = self.store.append(
-            key, toks, ep, response_len=response_len
-        )
         self.stats["rollouts_observed"] += 1
-        if self.index.tree(key) is None and len(self.store.window(key)) > 1:
-            # Warm store (e.g. just loaded from disk), cold tree: build
-            # from the full window so earlier history is not dropped.
-            self.index.rebuild(key, self.store.window(key), epoch=self.epoch)
+        if self.remote is not None:
+            # Remote mode: the owning shard maintains store+index with
+            # the SAME apply_rollout routine (bit-identical trees); the
+            # pack comes back on the next sync.
+            self.remote.publish_rollout(
+                key, toks, ep, response_len=response_len
+            )
             return
-        self.index.add(key, rec.doc_id, toks, ep)
-        for ev in evicted:
-            self.index.evict(key, ev.doc_id)
-        if self.index.needs_compaction(key):  # O(1) gate on the hot path
-            self.index.maybe_compact(key, self.store.window(key))
+        from repro.history.incremental import apply_rollout
+
+        apply_rollout(
+            self.store, self.index, key, toks, ep,
+            response_len=response_len, rebuild_epoch=self.epoch,
+        )
 
     def note_draft(self, problem_id, drafted: int, accepted: int) -> None:
         """Per-problem acceptance telemetry (fed by the engine)."""
         self.stats["toks_drafted"] += int(drafted)
         self.stats["toks_accepted"] += int(accepted)
+        if self.remote is not None:
+            self.remote.note_draft(self._key(problem_id), drafted, accepted)
+            return
         self.store.record_draft(self._key(problem_id), drafted, accepted)
 
     def note_draft_rows(self, problem_ids, drafted, accepted) -> None:
@@ -640,7 +667,10 @@ class SuffixDrafter:
                 cur[0] += int(d)
                 cur[1] += int(a)
         for key, (d, a) in agg.items():
-            self.store.record_draft(key, d, a)
+            if self.remote is not None:
+                self.remote.note_draft(key, d, a)
+            else:
+                self.store.record_draft(key, d, a)
 
     def _rebuild(self, key) -> SuffixTree:
         """Reference path: fresh tree from the store window.
@@ -685,8 +715,19 @@ class SuffixDrafter:
         retiring evicted docs online — and (c) compacts corpora whose
         retired text dominates. Amortized cost is sub-linear in the
         window size.
+
+        Remote mode delegates: the epoch advance is published to every
+        shard (they re-decay and rebroadcast mutated packs) and a sync
+        pulls whatever the fleet produced since the last round. Window
+        adaptation stays server-side config there (one window per
+        service, not per worker).
         """
         self.epoch = int(epoch)
+        if self.remote is not None:
+            self.remote.begin_epoch(self.epoch)
+            self.remote.sync()
+            self.stats["iterations"] += 1
+            return
         self.store.begin_iteration(self.epoch)
         if self.cfg.adapt_window_to_updates and update_norm is not None:
             w = int(round(self.cfg.window_size / (1.0 + self.cfg.window_gamma * float(update_norm))))
@@ -705,7 +746,12 @@ class SuffixDrafter:
     def new_session(
         self, problem_id=None, prompt: Optional[Sequence[int]] = None
     ) -> DraftSession:
-        """Create the per-request draft session; feeds the prompt."""
+        """Create the per-request draft session; feeds the prompt.
+
+        Remote-backed drafters have no local trees to walk: a host
+        session then proposes nothing (remote drafting flows through
+        ``batched_sessions`` / ``pack_for``, which the engine uses for
+        tree-only scopes anyway)."""
         if problem_id is None and self._trie is not None and prompt is not None:
             problem_id = self._trie.route(prompt)
         key = self._key(problem_id)
@@ -740,10 +786,44 @@ class SuffixDrafter:
             device = self.cfg.scope != "problem+request"
         return BatchedDraftSessions(self, n_rows, device=device)
 
-    # -- introspection ---------------------------------------------------
-    def tree_tokens(self, problem_id=None) -> int:
-        tree = self.index.tree(self._key(problem_id))
+    # -- pack source (local trees OR replicated remote packs) -------------
+    def pack_for(self, key):
+        """Current ``PackedSuffixTree`` for ``key`` — the one pack
+        source ``BatchedDraftSessions`` drafts from. Local mode packs
+        the live tree (version-gated cache inside ``SuffixTree.pack``);
+        remote mode returns the client's latest replicated delta. Both
+        are identity-stable until the underlying tree actually changes,
+        which is what keys the forest rebuild."""
+        if self.remote is not None:
+            return self.remote.pack_for(key)
+        tree = self.index.tree(key)
+        if tree is None and self.store.window(key):
+            # warm store, cold tree (persisted history): build lazily
+            tree = self._rebuild(key)
+        return None if tree is None else tree.pack()
+
+    def live_tokens_for(self, key) -> int:
+        """Live-corpus size estimate for forest bucket floors. Remote
+        packs report their full corpus length (live + not-yet-compacted
+        dead text) — an overestimate, so floors only get safer."""
+        if self.remote is not None:
+            pk = self.remote.pack_for(key)
+            return 0 if pk is None else int(len(pk.corpus))
+        tree = self.index.tree(key)
         return 0 if tree is None else tree.n_live_tokens
 
+    def sync_remote(self) -> None:
+        """Pull replicated deltas + pooled telemetry now (no-op for
+        local drafters). The engine calls this from verify-overlap
+        windows so the RPC hides behind the in-flight round."""
+        if self.remote is not None:
+            self.remote.sync()
+
+    # -- introspection ---------------------------------------------------
+    def tree_tokens(self, problem_id=None) -> int:
+        return self.live_tokens_for(self._key(problem_id))
+
     def n_trees(self) -> int:
+        if self.remote is not None:
+            return self.remote.n_packs()
         return len(self.index)

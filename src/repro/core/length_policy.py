@@ -56,6 +56,14 @@ class LengthPolicy:
         self._all.append(float(final_length))
         self._thresholds = None  # lazily recomputed
 
+    def observe_many(self, problem_id, lengths) -> None:
+        """Batched ``observe`` (pooled cross-worker telemetry merges)."""
+        for L in lengths:
+            self._hist[problem_id].append(float(L))
+            self._all.append(float(L))
+        if lengths:
+            self._thresholds = None
+
     def history_size(self, problem_id=None) -> int:
         return len(self._all) if problem_id is None else len(self._hist[problem_id])
 

@@ -231,6 +231,12 @@ class SpecEngine:
         self.engine = engine or EngineConfig()
         self.drafter = drafter or SuffixDrafter(DrafterConfig())
         self.length_policy = length_policy or LengthPolicy()
+        if self.drafter.remote is not None:
+            # Remote-backed drafter: pooled cross-worker response-length
+            # telemetry merges into THIS engine's length policy on every
+            # sync, so classify_length thresholds warm N-workers times
+            # faster than local observation alone.
+            self.drafter.remote.attach(length_policy=self.length_policy)
         self.latency = latency or LatencyModel(c_base=1.0, c_tok=0.002)
         self._recurrent = M.has_recurrent(cfg)
         self._verify_jit: Dict[int, Any] = {}

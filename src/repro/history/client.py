@@ -1,0 +1,431 @@
+"""Worker-side client for the sharded history service.
+
+One ``HistoryClient`` per rollout worker. Two independent paths:
+
+* **publish** — ``publish_rollout`` / ``note_draft`` / ``begin_epoch``
+  enqueue into a per-shard **bounded outbox** drained by a background
+  sender thread: the verify round never blocks on the service. Batches
+  carry a per-session monotone sequence number, so the at-least-once
+  resend after a reconnect is deduped shard-side to exactly-once. A
+  full outbox drops its *oldest* sealed batch (counted in
+  ``stats["dropped_batches"]``) — losing old history is strictly better
+  than stalling the round or growing without bound.
+* **sync** — pulls version-gated packed-forest deltas + pooled
+  length/accept telemetry from every shard. Deltas older than the
+  client's per-key ``(tree version, epoch)`` are ignored (stale-delta
+  gating); telemetry is origin-filtered shard-side so the worker never
+  re-applies its own observations, and merges into whatever
+  ``attach()``-ed ``LengthPolicy`` / telemetry store the engine gave us.
+
+Crash/reconnect: every RPC reconnects lazily with no backoff state to
+corrupt; a changed shard ``generation`` (shard restarted, possibly from
+a snapshot) drops that shard's pack cache and delta cursor and triggers
+an immediate full resync, after which drafting proceeds exactly as
+before the crash (the restored trees are query-equivalent).
+"""
+
+from __future__ import annotations
+
+import collections
+import os
+import socket
+import threading
+import time
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.suffix_tree import PackedSuffixTree
+
+from . import wire
+from .service import shard_for
+
+
+class HistoryClient:
+    """RPC client + replication cache for one rollout worker."""
+
+    def __init__(
+        self,
+        addresses: Sequence[Tuple[str, int]],
+        worker_id: str = "w0",
+        n_problems: Optional[int] = None,
+        outbox_cap: int = 128,
+        rpc_timeout: float = 10.0,
+        start_sender: bool = True,
+        skip_initial_telemetry: bool = False,
+    ) -> None:
+        self.addresses = [tuple(a) for a in addresses]
+        self.n_shards = len(self.addresses)
+        if self.n_shards < 1:
+            raise ValueError("HistoryClient needs at least one shard address")
+        self.worker_id = str(worker_id)
+        # Session id = worker id + instance nonce: publish dedup must
+        # not confuse a *restarted* worker (fresh seq counter) with a
+        # retry from the previous incarnation.
+        self.session = f"{self.worker_id}:{os.urandom(4).hex()}"
+        self.n_problems = n_problems
+        self.outbox_cap = int(outbox_cap)
+        self.rpc_timeout = float(rpc_timeout)
+        # Fast-forward past telemetry that predates first contact: set
+        # by callers that warm their LengthPolicy straight from restored
+        # shard snapshots — replaying the shard's persisted telemetry
+        # log on top would double-count every peer observation.
+        self.skip_initial_telemetry = bool(skip_initial_telemetry)
+
+        n = self.n_shards
+        self._socks: List[Optional[socket.socket]] = [None] * n
+        self._sock_locks = [threading.Lock() for _ in range(n)]
+        self._seq = [0] * n
+        self._pending: List[List[Dict[str, Any]]] = [[] for _ in range(n)]
+        self._pending_epoch: List[Optional[int]] = [None] * n
+        self._outbox: List[Deque[Dict[str, Any]]] = [
+            collections.deque() for _ in range(n)
+        ]
+        self._delta_cur = [0] * n
+        self._tel_cur = [0] * n
+        self._gen: List[Optional[str]] = [None] * n
+
+        # replicated pack cache (what the drafter drafts from)
+        self._packs: Dict[Any, PackedSuffixTree] = {}
+        self._pack_ver: Dict[Any, Tuple[int, int]] = {}
+        self._pack_shard: Dict[Any, int] = {}
+        self._empty_asof: Dict[Any, int] = {}
+        self.sync_count = 0
+
+        # telemetry merge targets (engine/drafter attach these)
+        self._length_policy = None
+        self._tel_store = None
+
+        self.stats: collections.Counter = collections.Counter()
+        # bounded: telemetry must not grow with run length (a multi-day
+        # run syncs millions of times); the newest window is plenty for
+        # percentile reporting
+        self.latencies: Dict[str, Deque[float]] = {
+            "publish_ms": collections.deque(maxlen=4096),
+            "sync_ms": collections.deque(maxlen=4096),
+        }
+
+        self._cv = threading.Condition()
+        self._closed = False
+        self._sender: Optional[threading.Thread] = None
+        if start_sender:
+            self._sender = threading.Thread(
+                target=self._sender_loop,
+                name=f"history-sender-{self.worker_id}", daemon=True,
+            )
+            self._sender.start()
+
+    # -- wiring ------------------------------------------------------------
+    def attach(self, length_policy=None, store=None) -> "HistoryClient":
+        """Register pooled-telemetry merge targets: remote response
+        lengths flow into ``length_policy.observe`` (so class thresholds
+        warm N× faster) and remote accept counters into
+        ``store.record_draft`` (fleet-wide acceptance stats)."""
+        if length_policy is not None:
+            self._length_policy = length_policy
+        if store is not None:
+            self._tel_store = store
+        return self
+
+    def shard_of(self, key) -> int:
+        return shard_for(key, self.n_shards, self.n_problems)
+
+    # -- publish (fire-and-forget) ----------------------------------------
+    def publish_rollout(
+        self, key, tokens: Sequence[int], epoch: int,
+        response_len: Optional[int] = None,
+    ) -> None:
+        entry = {
+            "kind": "roll", "key": key,
+            "tokens": [int(t) for t in tokens], "epoch": int(epoch),
+            "rlen": None if response_len is None else int(response_len),
+        }
+        with self._cv:
+            self._pending[self.shard_of(key)].append(entry)
+            self._cv.notify_all()
+
+    def note_draft(self, key, drafted: int, accepted: int) -> None:
+        entry = {
+            "kind": "draft", "key": key,
+            "drafted": int(drafted), "accepted": int(accepted),
+        }
+        with self._cv:
+            self._pending[self.shard_of(key)].append(entry)
+            self._cv.notify_all()
+
+    def begin_epoch(self, epoch: int) -> None:
+        with self._cv:
+            for i in range(self.n_shards):
+                self._pending_epoch[i] = max(
+                    int(epoch), self._pending_epoch[i] or 0
+                )
+            self._cv.notify_all()
+
+    def _seal_pending_locked(self) -> None:
+        """Move pending entries into sealed, sequenced outbox batches
+        (called under ``_cv``)."""
+        for i in range(self.n_shards):
+            if not self._pending[i] and self._pending_epoch[i] is None:
+                continue
+            entries, self._pending[i] = self._pending[i], []
+            epoch, self._pending_epoch[i] = self._pending_epoch[i], None
+            batch = {
+                "seq": self._seq[i],
+                "epoch": epoch,
+                "rollouts": [e for e in entries if e["kind"] == "roll"],
+                "drafts": [e for e in entries if e["kind"] == "draft"],
+            }
+            self._seq[i] += 1
+            self._outbox[i].append(batch)
+            while len(self._outbox[i]) > self.outbox_cap:
+                self._outbox[i].popleft()  # bounded: oldest history loses
+                self.stats["dropped_batches"] += 1
+
+    def _sender_loop(self) -> None:
+        while True:
+            with self._cv:
+                while (
+                    not self._closed
+                    and not any(self._pending)
+                    and not any(self._outbox)
+                    and all(e is None for e in self._pending_epoch)
+                ):
+                    self._cv.wait(timeout=0.5)
+                if self._closed and not any(self._pending) \
+                        and not any(self._outbox):
+                    return
+                self._seal_pending_locked()
+            made_progress = False
+            for i in range(self.n_shards):
+                while self._outbox[i]:
+                    batch = self._outbox[i][0]  # peek: pop only on ack
+                    t0 = time.perf_counter()
+                    try:
+                        self._rpc(i, {
+                            "op": "publish",
+                            "session": self.session,
+                            "origin": self.worker_id,
+                            "seq": batch["seq"],
+                            "epoch": batch["epoch"],
+                            "rollouts": batch["rollouts"],
+                            "drafts": batch["drafts"],
+                        })
+                    except OSError:
+                        self.stats["publish_failures"] += 1
+                        break  # shard down: keep the batch, retry later
+                    except RuntimeError:
+                        # Shard *rejected* the batch (bad request, not a
+                        # transport failure): retrying forever would jam
+                        # the outbox — drop it and move on.
+                        self.stats["rejected_batches"] += 1
+                    else:
+                        self.latencies["publish_ms"].append(
+                            1e3 * (time.perf_counter() - t0)
+                        )
+                        self.stats["published_batches"] += 1
+                    made_progress = True
+                    with self._cv:
+                        # pop by identity: a cap-overflow drop may have
+                        # already evicted the in-flight batch
+                        if self._outbox[i] and self._outbox[i][0] is batch:
+                            self._outbox[i].popleft()
+                        self._cv.notify_all()
+            if not made_progress and any(self._outbox):
+                time.sleep(0.05)  # every reachable shard is down: back off
+
+    def flush(self, timeout: float = 10.0) -> bool:
+        """Block until every pending/outbox publish is acked (tests and
+        epoch barriers; the hot path never calls this)."""
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            self._cv.notify_all()
+            while any(self._pending) or any(self._outbox) \
+                    or any(e is not None for e in self._pending_epoch):
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._cv.wait(timeout=min(remaining, 0.2))
+        return True
+
+    # -- rpc ---------------------------------------------------------------
+    def _rpc(self, i: int, msg: Dict[str, Any]) -> Dict[str, Any]:
+        with self._sock_locks[i]:
+            sock = self._socks[i]
+            try:
+                if sock is None:
+                    sock = socket.create_connection(
+                        self.addresses[i], timeout=self.rpc_timeout
+                    )
+                    sock.settimeout(self.rpc_timeout)
+                    self._socks[i] = sock
+                    self.stats["connects"] += 1
+                wire.send_msg(sock, msg)
+                resp = wire.recv_msg(sock)
+            except OSError:
+                self._drop_sock(i)
+                # One immediate reconnect attempt: the common failure is
+                # a server restart that closed an idle connection.
+                try:
+                    sock = socket.create_connection(
+                        self.addresses[i], timeout=self.rpc_timeout
+                    )
+                    sock.settimeout(self.rpc_timeout)
+                    self._socks[i] = sock
+                    self.stats["reconnects"] += 1
+                    wire.send_msg(sock, msg)
+                    resp = wire.recv_msg(sock)
+                except OSError:
+                    self._drop_sock(i)
+                    raise
+            if resp is None:
+                self._drop_sock(i)
+                raise ConnectionError(f"shard {i} closed the connection")
+            if not resp.get("ok"):
+                raise RuntimeError(
+                    f"shard {i} rejected {msg.get('op')!r}: "
+                    f"{resp.get('error')}"
+                )
+            return resp
+
+    def _drop_sock(self, i: int) -> None:
+        sock, self._socks[i] = self._socks[i], None
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    # -- sync (delta replication) -----------------------------------------
+    def sync(self) -> int:
+        """Pull deltas + pooled telemetry from every shard; returns the
+        number of packs applied. Failing shards are skipped — transport
+        errors and shard-side rejections alike (the worker drafts from
+        its last replicated state — bounded staleness, never a stall)."""
+        applied = 0
+        for i in range(self.n_shards):
+            t0 = time.perf_counter()
+            try:
+                resp = self._rpc(i, {
+                    "op": "sync", "session": self.session,
+                    "origin": self.worker_id,
+                    "delta_cursor": self._delta_cur[i],
+                    "tel_cursor": self._tel_cur[i],
+                })
+                if resp["gen"] != self._gen[i]:
+                    first = self._gen[i] is None
+                    self._gen[i] = resp["gen"]
+                    if not first:
+                        # Shard restarted: its delta sequence and tree
+                        # versions restarted too — drop everything we
+                        # replicated from it and re-pull from zero.
+                        self.stats["shard_restarts"] += 1
+                        for k in [
+                            k for k, s in self._pack_shard.items()
+                            if s == i
+                        ]:
+                            self._packs.pop(k, None)
+                            self._pack_ver.pop(k, None)
+                            self._pack_shard.pop(k, None)
+                        self._delta_cur[i] = 0
+                        self._tel_cur[i] = min(
+                            self._tel_cur[i], int(resp["tel_cursor"])
+                        )
+                        resp = self._rpc(i, {
+                            "op": "sync", "session": self.session,
+                            "origin": self.worker_id,
+                            "delta_cursor": 0,
+                            "tel_cursor": self._tel_cur[i],
+                        })
+                    elif self.skip_initial_telemetry:
+                        # first contact already used cursor 0 — just
+                        # drop the pre-existing telemetry (the caller
+                        # warmed from snapshots); the cursor advance in
+                        # _apply_sync fast-forwards past it
+                        resp = dict(resp, tel=[])
+            except (OSError, RuntimeError, ValueError):
+                # ConnectionError ⊂ OSError; RuntimeError = shard-side
+                # rejection; ValueError = framing error
+                self.stats["sync_failures"] += 1
+                continue
+            applied += self._apply_sync(i, resp)
+            self.latencies["sync_ms"].append(
+                1e3 * (time.perf_counter() - t0)
+            )
+        self.sync_count += 1
+        return applied
+
+    def _apply_sync(self, i: int, resp: Dict[str, Any]) -> int:
+        applied = 0
+        for d in resp.get("deltas", ()):
+            if self.apply_delta(i, d):
+                applied += 1
+        lengths_by_key: Dict[Any, list] = {}
+        for t in resp.get("tel", ()):
+            if "len" in t:
+                lengths_by_key.setdefault(t["key"], []).append(t["len"])
+                self.stats["tel_lengths"] += 1
+            else:
+                if self._tel_store is not None:
+                    self._tel_store.record_draft(
+                        t["key"], t["drafted"], t["accepted"]
+                    )
+                self.stats["tel_drafts"] += 1
+        if self._length_policy is not None:
+            for key, lens in lengths_by_key.items():
+                self._length_policy.observe_many(key, lens)
+        self._delta_cur[i] = int(resp["delta_cursor"])
+        self._tel_cur[i] = int(resp["tel_cursor"])
+        return applied
+
+    def apply_delta(self, shard_i: int, delta: Dict[str, Any]) -> bool:
+        """Version-gated delta apply: a delta at or below the known
+        per-key ``(tree version, epoch)`` is stale and ignored (both
+        components are monotone on a given shard generation)."""
+        key = delta["key"]
+        ver = (int(delta["ver"][0]), int(delta["ver"][1]))
+        known = self._pack_ver.get(key)
+        if known is not None and ver <= known:
+            self.stats["stale_deltas"] += 1
+            return False
+        self._packs[key] = wire.wire_to_pack(delta["pack"])
+        self._pack_ver[key] = ver
+        self._pack_shard[key] = shard_i
+        self.stats["packs_applied"] += 1
+        return True
+
+    # -- drafter-facing view ----------------------------------------------
+    def pack_for(self, key) -> Optional[PackedSuffixTree]:
+        """Latest replicated pack for ``key`` (identity changes exactly
+        when a newer delta lands — the drafter's forest cache keys on
+        object identity)."""
+        return self._packs.get(key)
+
+    def n_packs(self) -> int:
+        """Number of problem keys with a replicated pack."""
+        return len(self._packs)
+
+    def sync_if_missing(self, keys) -> None:
+        """Cold-start helper for the dispatch path: sync only when a
+        needed key has no replicated pack AND we have not already
+        confirmed it empty as of the current sync — so a problem with no
+        history costs one RPC per sync generation, not one per round."""
+        missing = [
+            k for k in keys
+            if k not in self._packs
+            and self._empty_asof.get(k) != self.sync_count
+        ]
+        if not missing:
+            return
+        self.sync()
+        for k in missing:
+            if k not in self._packs:
+                self._empty_asof[k] = self.sync_count
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self, flush_timeout: float = 5.0) -> None:
+        self.flush(timeout=flush_timeout)
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if self._sender is not None:
+            self._sender.join(timeout=2.0)
+        for i in range(self.n_shards):
+            self._drop_sock(i)

@@ -40,6 +40,45 @@ class IndexStats:
     compactions: int = 0
 
 
+def apply_rollout(
+    store,
+    index: "IncrementalIndex",
+    key,
+    tokens: List[int],
+    epoch: int,
+    response_len: Optional[int] = None,
+    rebuild_epoch: Optional[int] = None,
+):
+    """Apply ONE completed rollout to a (store, index) pair.
+
+    This is the single shared maintenance routine behind both
+    ``SuffixDrafter.observe_rollout`` and the history service's shard
+    ``publish`` handler: append to the store, extend the live tree
+    online, retire whatever slid out of the window, compact when dead
+    text dominates. Sharing it is what guarantees a shard's tree is
+    *bit-identical* (same pack) to a local drafter fed the same
+    per-key rollout sequence — the pooled-vs-oracle contract the
+    multi-worker tests assert. Returns the appended ``RolloutRecord``.
+    """
+    toks = [int(t) for t in tokens]
+    ep = int(epoch)
+    rec, evicted = store.append(key, toks, ep, response_len=response_len)
+    if index.tree(key) is None and len(store.window(key)) > 1:
+        # Warm store (e.g. restored from a snapshot), cold tree: build
+        # from the full window so earlier history is not dropped.
+        index.rebuild(
+            key, store.window(key),
+            epoch=store.epoch if rebuild_epoch is None else int(rebuild_epoch),
+        )
+        return rec
+    index.add(key, rec.doc_id, toks, ep)
+    for ev in evicted:
+        index.evict(key, ev.doc_id)
+    if index.needs_compaction(key):  # O(1) gate on the hot path
+        index.maybe_compact(key, store.window(key))
+    return rec
+
+
 class IncrementalIndex:
     """Per-key live suffix trees fed by store deltas."""
 
@@ -109,7 +148,14 @@ class IncrementalIndex:
         Query-equivalent to the incrementally maintained tree — asserted
         by the property tests — and used (a) as the verified fallback,
         (b) for compaction, (c) to warm trees from a persisted store.
+
+        The replacement tree's ``version`` continues strictly past the
+        replaced tree's: version is the staleness signal of the history
+        service's delta replication, and a compaction rebuild that reset
+        it would make every post-compaction pack look stale to remote
+        workers (frozen replicas for the hottest keys).
         """
+        old = self._trees.get(key)
         tree = SuffixTree(epoch_decay=self.epoch_decay)
         dm: Dict[int, int] = {}
         for rec in records:
@@ -122,6 +168,8 @@ class IncrementalIndex:
                 dm[int(rec.doc_id)] = d
         if epoch is not None:
             tree.current_epoch = max(tree.current_epoch, int(epoch))
+        if old is not None:
+            tree.version = max(tree.version, old.version + 1)
         self._trees[key] = tree
         self._docmap[key] = dm
         self.stats.rebuilds += 1

@@ -15,8 +15,20 @@ incrementally) and the length policy replays the recorded per-problem
 response lengths, so the scheduler's longest-predicted-first admission
 and the budget solver are history-aware from the first request.
 
-Every payload carries ``schema_version``; loads fail loudly on
-mismatch rather than silently mis-reading a foreign blob.
+The sharded history service persists through the same module: a
+**shard manifest** (``history_manifest.json``) listing one
+``history.shard<k>.json`` snapshot per shard — ``save_service_history``
+/ ``load_service_history`` — so a checkpoint resume or a
+``--history-dir`` warm start restores every shard of the fleet.
+
+Every payload carries ``schema_version``; loads fail loudly on an
+*unknown* schema rather than silently mis-reading a foreign blob.
+Schema 2 (current) added the shard manifest + shard snapshot kinds;
+schema-1 payloads (single-store ``history.json``) still load, and the
+shard loader treats a legacy ``history.json`` with no manifest as shard
+0 of 1. All writes are crash-safe: tmp file + fsync + atomic rename
+(+ directory fsync), so a torn save can never corrupt the previous
+history.
 """
 
 from __future__ import annotations
@@ -24,12 +36,14 @@ from __future__ import annotations
 import json
 import os
 from dataclasses import asdict
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 from .store import RolloutHistoryStore
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+LEGACY_SCHEMA_VERSIONS = (1,)
 HISTORY_FILENAME = "history.json"
+MANIFEST_FILENAME = "history_manifest.json"
 
 
 class HistorySchemaError(RuntimeError):
@@ -42,11 +56,35 @@ def _check_schema(state: Dict[str, Any], origin: str) -> None:
             f"{origin}: not a history payload (missing schema_version)"
         )
     v = state["schema_version"]
-    if v != SCHEMA_VERSION:
+    if v != SCHEMA_VERSION and v not in LEGACY_SCHEMA_VERSIONS:
         raise HistorySchemaError(
-            f"{origin}: schema_version {v} != supported {SCHEMA_VERSION}; "
+            f"{origin}: schema_version {v} not supported (current "
+            f"{SCHEMA_VERSION}, legacy {list(LEGACY_SCHEMA_VERSIONS)}); "
             "re-save the history with this build or upgrade the loader"
         )
+
+
+def _atomic_write_json(path: str, payload: Dict[str, Any]) -> str:
+    """Crash-safe JSON write: tmp + flush + fsync + atomic rename, then
+    fsync the directory so the rename itself survives a power cut. A
+    plain ``open(path, 'w')`` could leave a torn file on crash."""
+    path = os.path.abspath(path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)  # atomic: a crashed save never corrupts history
+    try:
+        dfd = os.open(os.path.dirname(path), os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+    except OSError:
+        pass  # not all platforms/filesystems support directory fsync
+    return path
 
 
 # -- state assembly --------------------------------------------------------
@@ -167,15 +205,10 @@ def save_history(dir_or_file: str, state: Optional[Dict] = None, **kwargs) -> st
     ``history_state`` keyword arguments (store/drafter/length_policy/meta).
     """
     path = history_path(dir_or_file)
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     if state is None:
         state = history_state(**kwargs)
     _check_schema(state, "save_history")
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(state, f)
-    os.replace(tmp, path)  # atomic: a crashed save never corrupts history
-    return path
+    return _atomic_write_json(path, state)
 
 
 def load_history(dir_or_file: str) -> Dict[str, Any]:
@@ -184,6 +217,79 @@ def load_history(dir_or_file: str) -> Dict[str, Any]:
         state = json.load(f)
     _check_schema(state, path)
     return state
+
+
+# -- sharded service persistence -------------------------------------------
+def shard_filename(shard_id: int) -> str:
+    return f"history.shard{int(shard_id)}.json"
+
+
+def save_service_history(
+    dir_path: str,
+    shard_states: Sequence[Dict[str, Any]],
+    meta: Optional[Dict[str, Any]] = None,
+) -> str:
+    """Persist a sharded history service: one crash-safe snapshot file
+    per shard plus the manifest tying them together. The manifest is
+    written LAST (also atomically), so a reader either sees a complete
+    save or the previous one — never a half-written fleet."""
+    entries: List[Dict[str, Any]] = []
+    for i, state in enumerate(shard_states):
+        _check_schema(state, f"save_service_history shard {i}")
+        fn = shard_filename(state.get("shard_id", i))
+        _atomic_write_json(os.path.join(dir_path, fn), state)
+        entries.append({
+            "file": fn,
+            "shard_id": int(state.get("shard_id", i)),
+            "n_rollouts": sum(
+                int(d["n_appended"]) for _, d in state["store"]["problems"]
+            ),
+        })
+    manifest = {
+        "schema_version": SCHEMA_VERSION,
+        "kind": "history_manifest",
+        "n_shards": len(entries),
+        "shards": entries,
+        "meta": dict(meta or {}),
+    }
+    return _atomic_write_json(
+        os.path.join(dir_path, MANIFEST_FILENAME), manifest
+    )
+
+
+def load_service_history(dir_path: str) -> Dict[str, Any]:
+    """Load a sharded history save: ``{"n_shards", "shards": [state...],
+    "meta", "legacy"}``.
+
+    Legacy path: a directory holding only a schema-1 single-store
+    ``history.json`` (pre-manifest saves) loads as one shard — the
+    service then owns the whole problem space under shard 0 of 1.
+    """
+    mpath = os.path.join(dir_path, MANIFEST_FILENAME)
+    if not os.path.exists(mpath):
+        legacy = load_history(dir_path)  # raises if absent — loudly
+        return {
+            "n_shards": 1, "shards": [legacy],
+            "meta": dict(legacy.get("meta", {})), "legacy": True,
+        }
+    with open(mpath) as f:
+        manifest = json.load(f)
+    _check_schema(manifest, mpath)
+    if manifest.get("kind") != "history_manifest":
+        raise HistorySchemaError(f"{mpath}: not a history manifest")
+    states = []
+    for entry in manifest["shards"]:
+        spath = os.path.join(dir_path, entry["file"])
+        with open(spath) as f:
+            state = json.load(f)
+        _check_schema(state, spath)
+        states.append(state)
+    return {
+        "n_shards": int(manifest["n_shards"]),
+        "shards": states,
+        "meta": dict(manifest.get("meta", {})),
+        "legacy": False,
+    }
 
 
 def save_engine_history(

@@ -20,6 +20,19 @@ trees and the length policy with warm per-problem priors, so the very
 first requests draft against cross-epoch history instead of cold
 trees. ``--save-history`` persists the (updated) history back to the
 same directory on exit — run-to-run the server keeps learning.
+
+``--history-service`` runs the smoke through the **sharded cross-worker
+history service**: ``--shards`` shard subprocesses (each owning a
+contiguous problem range behind the socket RPC) and ``--workers``
+serving engines whose drafters publish rollouts to — and replicate
+packed-forest deltas from — the shared service, so every worker drafts
+from every worker's rollouts. Needs a tree-only ``--scope`` (problem or
+global). Combined with ``--history-dir`` the service loads/saves the
+sharded manifest format (``history_manifest.json`` +
+``history.shard<k>.json``).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+        --smoke --history-service --shards 2 --workers 2 --scope problem
 """
 
 from __future__ import annotations
@@ -59,9 +72,23 @@ def main() -> None:
     ap.add_argument("--save-history", action="store_true",
                     help="persist updated rollout history back to "
                          "--history-dir on exit")
+    ap.add_argument("--history-service", action="store_true",
+                    help="back the drafters with the sharded "
+                         "cross-worker history service")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="history-service shard count")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="serving workers sharing the history service")
+    ap.add_argument("--service-mode", default="process",
+                    choices=["process", "thread"],
+                    help="spawn shards as subprocesses (real runs) or "
+                         "in-process threads (debug)")
     args = ap.parse_args()
     if args.save_history and not args.history_dir:
         ap.error("--save-history requires --history-dir")
+    if args.history_service and args.scope == "problem+request":
+        ap.error("--history-service needs a tree-only scope: pass "
+                 "--scope problem (or global)")
 
     if args.dry_run:
         import subprocess
@@ -94,6 +121,9 @@ def main() -> None:
             "the dry-run path"
         )
     params, _ = split_tree(M.init_params(cfg, jax.random.key(0)))
+    if args.history_service:
+        _serve_with_service(args, cfg, params)
+        return
     eng = SpecEngine(
         params, cfg,
         EngineConfig(spec_enabled=True, max_new_tokens=32, eos_token=1,
@@ -136,6 +166,111 @@ def main() -> None:
         # Persist whatever history accumulated, interrupted or not —
         # losing a long session's rollouts defeats the warm start.
         _persist_history()
+
+
+def _serve_with_service(args, cfg, params) -> None:
+    """Multi-worker serving over the sharded history service: shards as
+    subprocesses (or threads with ``--service-mode thread``), one engine
+    per worker, each round's request stream partitioned across workers
+    (rotated, so every worker ends up drafting from peers' history)."""
+    import os
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.core.drafter import DrafterConfig, SuffixDrafter
+    from repro.core.spec_engine import EngineConfig, SpecEngine
+    from repro.history import persist
+    from repro.history.client import HistoryClient
+    from repro.history.service import HistoryService
+
+    states = None
+    if args.history_dir and (
+        os.path.exists(os.path.join(args.history_dir,
+                                    persist.MANIFEST_FILENAME))
+        or os.path.exists(persist.history_path(args.history_dir))
+    ):
+        loaded = persist.load_service_history(args.history_dir)
+        states = loaded["shards"]
+        print(
+            f"warm start: {loaded['n_shards']} shard(s) from "
+            f"{args.history_dir}"
+            + (" (legacy single-store payload)" if loaded["legacy"] else "")
+        )
+    if args.service_mode == "thread":
+        svc = HistoryService.spawn_in_process(
+            args.shards, window_size=16, states=states
+        )
+    else:  # subprocess shards load from disk themselves
+        svc = HistoryService.spawn_subprocess(
+            args.shards, window_size=16,
+            load_dir=args.history_dir if states is not None else None,
+        )
+    # Continue the restored epoch cursor: fresh engines start at 0, and
+    # publishing regressed epochs would decay the session's own rollouts
+    # into near-invisibility against the warm trees.
+    epoch0 = max(
+        (int(st["store"]["epoch"]) for st in states or []), default=0
+    )
+    engines, clients = [], []
+    for w in range(args.workers):
+        client = HistoryClient(svc.addresses, worker_id=f"w{w}")
+        engines.append(SpecEngine(
+            params, cfg,
+            EngineConfig(spec_enabled=True, max_new_tokens=32, eos_token=1,
+                         max_draft=8, block_buckets=(0, 4, 8),
+                         fuse_rounds=args.fuse),
+            drafter=SuffixDrafter(
+                DrafterConfig(scope=args.scope, min_match=2), remote=client
+            ),
+        ))
+        engines[-1].epoch = engines[-1].drafter.epoch = epoch0
+        clients.append(client)
+    print(
+        f"history service: {args.shards} shard(s) "
+        f"[{args.service_mode}] x {args.workers} worker(s) at "
+        f"{svc.addresses}"
+    )
+    rng = np.random.default_rng(0)
+    try:
+        base_epoch = max(e.epoch for e in engines)
+        for rnd in range(args.rounds):
+            t0 = time.perf_counter()
+            fwd = acc = rds = 0
+            for w, eng in enumerate(engines):
+                prompts, pids = [], []
+                for b in range(args.batch):
+                    # rotated partition: worker w serves different
+                    # problems each round, drafting from peers' history
+                    seed = (b + w + rnd) % 4
+                    prompts.append(
+                        [2] + list(rng.integers(4, 20, size=4 + seed))
+                    )
+                    pids.append(f"q{seed}")
+                outs, st = eng.generate(
+                    prompts, pids, key=jax.random.key(rnd * 31 + w)
+                )
+                clients[w].flush()
+                fwd += st.n_fwd
+                acc += st.n_accepted
+                rds += st.n_rounds
+            dt = time.perf_counter() - t0
+            print(
+                f"round {rnd}: {dt*1e3:8.1f} ms  fwd={fwd:4d} "
+                f"accept/round={acc/max(rds,1):6.2f}"
+            )
+            for eng in engines:
+                eng.begin_iteration(base_epoch + rnd + 1)
+        if args.history_dir and args.save_history:
+            for c in clients:
+                c.flush()
+            path = svc.save(args.history_dir)
+            print(f"saved sharded history manifest -> {path}")
+    finally:
+        for c in clients:
+            c.close()
+        svc.stop()
 
 
 def _serve_rounds(args, eng, rng) -> None:

@@ -42,6 +42,24 @@ class RolloutBatch:
     gen_time_s: float
 
 
+def pack_train_arrays(
+    prompts: Sequence[Sequence[int]], outs: Sequence[Sequence[int]]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Right-padded (tokens, resp_mask) train arrays (bucketed width to
+    bound train-step recompiles) — shared by the single- and
+    multi-worker rollout paths."""
+    N = len(prompts)
+    S = max(len(p) + len(o) for p, o in zip(prompts, outs)) + 1
+    S = ((S + 31) // 32) * 32
+    tokens = np.full((N, S), PAD, np.int32)
+    resp_mask = np.zeros((N, S), bool)
+    for i, (p, o) in enumerate(zip(prompts, outs)):
+        seq = list(p) + list(o)
+        tokens[i, : len(seq)] = seq
+        resp_mask[i, len(p) : len(seq)] = True
+    return tokens, resp_mask
+
+
 class RolloutWorker:
     def __init__(
         self,
@@ -90,16 +108,7 @@ class RolloutWorker:
             np.float32,
         )
         adv = group_advantages(rewards, self.G)
-        # pack train batch (bucketed width to bound train-step recompiles)
-        N = len(prompts)
-        S = max(len(p) + len(o) for p, o in zip(prompts, outs)) + 1
-        S = ((S + 31) // 32) * 32
-        tokens = np.full((N, S), PAD, np.int32)
-        resp_mask = np.zeros((N, S), bool)
-        for i, (p, o) in enumerate(zip(prompts, outs)):
-            seq = list(p) + list(o)
-            tokens[i, : len(seq)] = seq
-            resp_mask[i, len(p) : len(seq)] = True
+        tokens, resp_mask = pack_train_arrays(prompts, outs)
         return RolloutBatch(
             tokens=tokens,
             resp_mask=resp_mask,
@@ -109,4 +118,134 @@ class RolloutWorker:
             problems=probs,
             stats=stats,
             gen_time_s=gen_time,
+        )
+
+
+def merge_rollout_stats(parts: Sequence[RolloutStats]) -> RolloutStats:
+    """Sum per-worker rollout stats into one fleet view (counters add,
+    traces concatenate; per-row views are reassembled by the caller)."""
+    out = RolloutStats()
+    for st in parts:
+        out.n_rounds += st.n_rounds
+        out.n_fwd += st.n_fwd
+        out.n_toks_proposed += st.n_toks_proposed
+        out.n_toks_emitted += st.n_toks_emitted
+        out.n_drafted += st.n_drafted
+        out.n_accepted += st.n_accepted
+        out.wall_time_s += st.wall_time_s
+        out.host_time_s += st.host_time_s
+        out.n_h2d += st.n_h2d
+        out.n_d2h += st.n_d2h
+        out.effective_batch.extend(st.effective_batch)
+        out.round_accepts.extend(st.round_accepts)
+    return out
+
+
+class MultiWorkerRollout:
+    """N rollout workers sharing one batch — the multi-worker rollout
+    phase over the pooled history service.
+
+    Each call partitions the problem batch across the workers
+    (round-robin, **rotated** every call so a problem's rollouts come
+    from a different worker each step — with a static partition every
+    worker would only ever revisit its own history and pooling would be
+    pointless). Workers run their slices through their own engines;
+    with remote-backed drafters each worker's publishes are flushed
+    before the next worker starts, so later slices draft against trees
+    the earlier slices just warmed (the in-process stand-in for the
+    fleet's concurrent publish stream — ordering per problem stays
+    deterministic, which keeps shard trees oracle-identical).
+
+    The merged ``RolloutBatch`` is in the original request order with
+    group advantages recomputed over the merged rewards, so the trainer
+    cannot tell it from a single-worker batch.
+    """
+
+    def __init__(self, workers: Sequence[RolloutWorker], rotate: bool = True):
+        if not workers:
+            raise ValueError("MultiWorkerRollout needs >= 1 worker")
+        gs = {w.G for w in workers}
+        if len(gs) != 1:
+            raise ValueError(f"workers disagree on group size: {gs}")
+        self.workers = list(workers)
+        self.G = self.workers[0].G
+        self.rotate = bool(rotate)
+        self._calls = 0
+
+    @property
+    def engine(self):
+        """Lead worker's engine (trainer introspection compatibility)."""
+        return self.workers[0].engine
+
+    def _flush_worker(self, worker: RolloutWorker) -> None:
+        remote = worker.engine.drafter.remote
+        if remote is not None and not remote.flush():
+            # The barrier is what keeps shard trees oracle-identical;
+            # proceeding with unacked publishes would silently diverge.
+            raise RuntimeError(
+                "history-service publish flush timed out: a shard is "
+                "unreachable and the epoch barrier cannot be enforced"
+            )
+
+    def rollout(
+        self,
+        problems: Sequence[Problem],
+        *,
+        key,
+        max_new_tokens: Optional[int] = None,
+        collect_effective_batch: bool = False,
+    ) -> RolloutBatch:
+        t0 = time.perf_counter()
+        N = len(self.workers)
+        off = (self._calls % N) if self.rotate else 0
+        self._calls += 1
+        # problem j -> worker (j + off) % N; slices keep problem order
+        assign = [[] for _ in range(N)]
+        for j, p in enumerate(problems):
+            assign[(j + off) % N].append(j)
+        keys = jax.random.split(key, N)
+        parts: List[Optional[RolloutBatch]] = [None] * N
+        for w, idxs in enumerate(assign):
+            if not idxs:
+                continue
+            parts[w] = self.workers[w].rollout(
+                [problems[j] for j in idxs], key=keys[w],
+                max_new_tokens=max_new_tokens,
+                collect_effective_batch=collect_effective_batch,
+            )
+            # Epoch barrier semantics: the next worker (and the next
+            # trainer step) must see these rollouts on the shards.
+            self._flush_worker(self.workers[w])
+
+        # -- reassemble in original problem order --------------------------
+        G = self.G
+        outs: List[List[int]] = [None] * (len(problems) * G)
+        rewards = np.zeros(len(problems) * G, np.float32)
+        probs: List[Problem] = [None] * (len(problems) * G)
+        prompts: List[List[int]] = [None] * (len(problems) * G)
+        for w, idxs in enumerate(assign):
+            part = parts[w]
+            for local, j in enumerate(idxs):
+                for g in range(G):
+                    src = local * G + g
+                    dst = j * G + g
+                    outs[dst] = part.responses[src]
+                    rewards[dst] = part.rewards[src]
+                    probs[dst] = part.problems[src]
+                    prompts[dst] = list(problems[j].prompt)
+        adv = group_advantages(rewards, G)
+        tokens, resp_mask = pack_train_arrays(prompts, outs)
+        stats = merge_rollout_stats(
+            [p.stats for p in parts if p is not None]
+        )
+        stats.per_row_emitted = np.array([len(o) for o in outs])
+        return RolloutBatch(
+            tokens=tokens,
+            resp_mask=resp_mask,
+            advantages=adv.astype(np.float32),
+            rewards=rewards,
+            responses=outs,
+            problems=probs,
+            stats=stats,
+            gen_time_s=time.perf_counter() - t0,
         )

@@ -41,7 +41,7 @@ from repro.rl.grpo import (
     make_sft_step,
     make_train_step,
 )
-from repro.rl.rollout import RolloutBatch, RolloutWorker
+from repro.rl.rollout import MultiWorkerRollout, RolloutBatch, RolloutWorker
 
 
 @dataclass
@@ -63,6 +63,12 @@ class TrainerConfig:
     # post-trains (we cannot pretrain on CPU); 0 disables.
     sft_warmup_steps: int = 0
     sft_lr: float = 3e-3
+    # Multi-worker rollout phase: n_workers > 1 runs the rollout over N
+    # engines whose drafters share a sharded cross-worker history
+    # service (repro.history.service) — every worker drafts from every
+    # worker's rollouts. history_shards sets the shard count.
+    n_workers: int = 1
+    history_shards: int = 2
 
 
 class Trainer:
@@ -84,12 +90,9 @@ class Trainer:
         self.opt_state = adamw.init_state(params)
         tcfg.engine.temperature = tcfg.temperature
         tcfg.engine.max_new_tokens = tcfg.max_new_tokens
-        self.engine = SpecEngine(
-            params, cfg, tcfg.engine,
-            drafter=SuffixDrafter(tcfg.drafter),
-            length_policy=LengthPolicy(),
-        )
-        self.worker = RolloutWorker(self.engine, task, tcfg.group_size)
+        self.service = None  # sharded history service (n_workers > 1)
+        self._clients = []
+        self._build_workers()
         self.loader = PromptLoader(task, tcfg.prompts_per_step, seed=tcfg.seed)
         gcfg = GRPOConfig(
             clip_eps=tcfg.grpo.clip_eps, kl_coef=tcfg.grpo.kl_coef,
@@ -108,6 +111,92 @@ class Trainer:
         self._key = None  # training PRNG key; created lazily in run()
         self._epoch_begun = -1  # last epoch begin_iteration ran for
         self._epoch_batches = None  # (epoch, [batches]) shuffle cache
+
+    # -- worker/engine construction ---------------------------------------
+    def _build_workers(self, service_states=None) -> None:
+        """(Re)build engines + rollout worker(s).
+
+        Single worker: one engine with a local in-process history store
+        (the seed path, untouched). ``n_workers > 1``: an in-process
+        sharded history service plus one engine per worker, each with a
+        remote-backed drafter — the multi-worker rollout phase drafts
+        from pooled cross-worker history. ``service_states`` restores
+        the shards from a checkpoint sidecar.
+        """
+        tcfg, cfg = self.tcfg, self.cfg
+        if self.service is not None:
+            self.close()
+        if tcfg.n_workers <= 1:
+            self.engines = [SpecEngine(
+                self.params, cfg, tcfg.engine,
+                drafter=SuffixDrafter(tcfg.drafter),
+                length_policy=LengthPolicy(),
+            )]
+            self.engine = self.engines[0]
+            self.worker = RolloutWorker(
+                self.engine, self.task, tcfg.group_size
+            )
+            return
+        from repro.history.client import HistoryClient
+        from repro.history.service import HistoryService
+
+        self.service = HistoryService.spawn_in_process(
+            n_shards=tcfg.history_shards,
+            window_size=tcfg.drafter.window_size,
+            epoch_decay=tcfg.drafter.epoch_decay,
+            states=service_states,
+            n_problems=len(self.task.problems()),
+        )
+        warm_lengths = []
+        if service_states is not None:
+            # Pooled warm priors, extracted ONCE from the restored shard
+            # snapshots (not one store rebuild per worker per shard).
+            warm_lengths = [
+                (key, d["lengths"])
+                for st in service_states
+                for key, d in st["store"]["problems"]
+                if d["lengths"]
+            ]
+        self.engines = []
+        self._clients = []
+        for w in range(tcfg.n_workers):
+            client = HistoryClient(
+                self.service.addresses, worker_id=f"w{w}",
+                n_problems=self.service.n_problems,
+                # warm_lengths already carries the fleet's telemetry;
+                # replaying the shards' persisted telemetry logs on top
+                # would double-count every peer observation
+                skip_initial_telemetry=service_states is not None,
+            )
+            eng = SpecEngine(
+                self.params, cfg, tcfg.engine,
+                drafter=SuffixDrafter(tcfg.drafter, remote=client),
+                length_policy=LengthPolicy(),
+            )
+            for key, lens in warm_lengths:
+                eng.length_policy.observe_many(key, lens)
+            if service_states is not None:
+                client.sync()  # replicate the restored packs now
+            self._clients.append(client)
+            self.engines.append(eng)
+        self.engine = self.engines[0]
+        self.worker = MultiWorkerRollout([
+            RolloutWorker(e, self.task, tcfg.group_size)
+            for e in self.engines
+        ])
+
+    def close(self) -> None:
+        """Stop the history service and its clients (no-op when
+        single-worker)."""
+        for c in self._clients:
+            try:
+                c.close()
+            except Exception:
+                pass
+        self._clients = []
+        if self.service is not None:
+            self.service.stop()
+            self.service = None
 
     def sft_warmup(self, steps: Optional[int] = None) -> float:
         """Supervised warmup on task target responses (pretraining
@@ -143,7 +232,8 @@ class Trainer:
         for _ in range(n):
             self.params, opt, m = sft_step(self.params, opt, batch)
             loss = float(m["sft_loss"])
-        self.engine.set_params(self.params)
+        for eng in self.engines:
+            eng.set_params(self.params)
         return loss
 
     def run(self, steps: Optional[int] = None) -> List[Dict[str, Any]]:
@@ -160,7 +250,8 @@ class Trainer:
                 # checkpointed store already reflects it; re-running
                 # with the mid-epoch update norm would adapt the window
                 # differently and diverge from the uninterrupted run).
-                self.engine.begin_iteration(self._epoch, self._update_norm)
+                for eng in self.engines:
+                    eng.begin_iteration(self._epoch, self._update_norm)
                 self._epoch_begun = self._epoch
             resume_at = self._batch_idx
             epoch_done = True
@@ -202,7 +293,8 @@ class Trainer:
                 jax.block_until_ready(metrics["loss"])
                 train_time = time.perf_counter() - t0
                 self._update_norm = float(metrics["update_norm"])
-                self.engine.set_params(self.params)
+                for eng in self.engines:
+                    eng.set_params(self.params)
                 rec = {
                     "step": self._step,
                     "epoch": self._epoch,
@@ -242,6 +334,13 @@ class Trainer:
 
         sidecar = {
             "history": persist.engine_state(self.engine),
+            # Multi-worker runs: the authoritative history lives in the
+            # service — persist every shard so resume restores the full
+            # pooled fleet state (history/persist.py shard schema).
+            "history_service": (
+                None if self.service is None
+                else {"shards": self.service.state_dicts()}
+            ),
             "cursor": {
                 "step": self._step,
                 "epoch": self._epoch,
@@ -279,9 +378,36 @@ class Trainer:
         tree, _ = load(path, {"params": self.params, "opt": self.opt_state})
         self.params = tree["params"]
         self.opt_state = tree["opt"]
-        self.engine.set_params(self.params)
         sc = load_sidecar(path)
-        persist.restore_engine(self.engine, sc["history"])
+        svc_blob = sc.get("history_service")
+        if svc_blob is not None and self.tcfg.n_workers > 1:
+            # Multi-worker checkpoint: rebuild the service from the
+            # persisted shard snapshots (fresh generations — workers
+            # full-resync their pack replicas; a changed shard count is
+            # resharded by the service launcher) and fresh clients.
+            self._build_workers(service_states=svc_blob["shards"])
+        elif svc_blob is not None:
+            # Multi-worker checkpoint resumed single-worker: merge every
+            # shard's store into the local drafter — pooled history must
+            # not silently vanish on a fleet-size change.
+            from repro.history.service import merge_store_states
+            from repro.history.store import RolloutHistoryStore
+
+            store = RolloutHistoryStore.from_state(
+                merge_store_states(svc_blob["shards"])
+            )
+            self.engine.drafter.load_store(store)
+            self.engine.drafter.warm_trees()
+            store.warm_length_policy(self.engine.length_policy)
+            self.engine.epoch = self.engine.drafter.epoch = store.epoch
+        elif self.tcfg.n_workers > 1:
+            # Single-worker checkpoint resumed multi-worker: seed the
+            # service shards from the single store (resharded by key).
+            self._build_workers(service_states=[sc["history"]])
+        else:
+            persist.restore_engine(self.engine, sc["history"])
+        for eng in self.engines:
+            eng.set_params(self.params)
         cur = sc["cursor"]
         self._step = int(cur["step"])
         self._epoch = int(cur["epoch"])

@@ -1,0 +1,710 @@
+"""Sharded cross-worker history service: replication, crash recovery,
+pooled-vs-oracle identity.
+
+The load-bearing properties:
+
+* a shard fed a problem's rollouts in a given order builds a tree whose
+  ``pack()`` is **bit-identical** to a local drafter fed the same
+  sequence — any cross-problem interleaving of N workers' publishes
+  yields identical per-problem packed forests (the pooled-vs-oracle
+  contract);
+* delta replication is version-gated (stale deltas are ignored) and
+  survives shard crash/restart-from-snapshot: the worker reconnects,
+  full-resyncs, and drafts identically afterward;
+* pooled telemetry warms every worker's ``LengthPolicy`` N× faster
+  while publish stays fire-and-forget (bounded outbox, dedup on
+  at-least-once retries).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.drafter import DrafterConfig, SuffixDrafter
+from repro.core.length_policy import LengthPolicy
+from repro.core.suffix_tree import SuffixTree
+from repro.history import persist, wire
+from repro.history.client import HistoryClient
+from repro.history.service import (
+    HistoryService,
+    HistoryShard,
+    ShardServer,
+    merge_store_states,
+    reshard_states,
+    shard_for,
+)
+
+PACK_FIELDS = (
+    "first_child", "next_sibling", "edge_node", "edge_tok", "edge_child",
+    "suffix_link", "edge_start", "edge_len", "first_tok", "best_child",
+    "corpus",
+)
+
+
+def assert_packs_equal(a, b, msg=""):
+    assert (a is None) == (b is None), msg
+    if a is None:
+        return
+    assert a.n_nodes == b.n_nodes, msg
+    for f in PACK_FIELDS:
+        np.testing.assert_array_equal(
+            getattr(a, f), getattr(b, f), err_msg=f"{msg}: field {f}"
+        )
+
+
+def _mk_service(n_shards=2, window=8, decay=0.9):
+    return HistoryService.spawn_in_process(
+        n_shards, window_size=window, epoch_decay=decay
+    )
+
+
+def _docs(rng, n, length=14, vocab=8):
+    return [[int(t) for t in rng.integers(0, vocab, size=length)]
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# wire format
+# ---------------------------------------------------------------------------
+def test_wire_roundtrip_arrays_and_pack():
+    tree = SuffixTree(epoch_decay=0.9)
+    tree.add_document([3, 1, 4, 1, 5, 9, 2, 6], epoch=0)
+    tree.add_document([3, 1, 4, 1, 5], epoch=1)
+    pk = tree.pack()
+    blob = wire.dumps({"pack": wire.pack_to_wire(pk), "k": "p0", "i": 7})
+    back = wire.loads(blob)
+    assert back["k"] == "p0" and back["i"] == 7
+    assert_packs_equal(wire.wire_to_pack(back["pack"]), pk, "wire roundtrip")
+
+
+def test_wire_json_fallback_roundtrip(monkeypatch):
+    monkeypatch.setattr(wire, "HAVE_MSGPACK", False)
+    arr = np.arange(12, dtype=np.int32).reshape(3, 4)
+    back = wire.loads(wire.dumps({"a": arr, "n": [1, "x", None]}))
+    np.testing.assert_array_equal(back["a"], arr)
+    assert back["a"].dtype == np.int32
+    assert back["n"] == [1, "x", None]
+
+
+# ---------------------------------------------------------------------------
+# shard map
+# ---------------------------------------------------------------------------
+def test_shard_map_contiguous_and_stable():
+    # int keys with a declared universe: contiguous ranges, all covered
+    owners = [shard_for(k, 4, n_problems=16) for k in range(16)]
+    assert owners == sorted(owners), "ranges must be contiguous"
+    assert set(owners) == {0, 1, 2, 3}, "every shard owns a range"
+    # string keys: stable across calls (digest, not process hash)
+    assert shard_for("q7", 4) == shard_for("q7", 4)
+    assert 0 <= shard_for("q7", 4) < 4
+    assert shard_for("anything", 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# shard state machine (transport-free)
+# ---------------------------------------------------------------------------
+def test_publish_dedupes_at_least_once_retries():
+    sh = HistoryShard(window_size=4)
+    batch = dict(
+        session="w0:aa", origin="w0", seq=0,
+        rollouts=[{"key": "p", "tokens": [1, 2, 3], "epoch": 0, "rlen": 3}],
+    )
+    assert "dup" not in sh.publish(**batch)
+    assert sh.publish(**batch)["dup"] is True  # retry after lost ack
+    assert sh.store.n_rollouts == 1
+    # a new session with seq 0 is NOT a dup (restarted worker)
+    sh.publish(session="w0:bb", origin="w0", seq=0,
+               rollouts=[{"key": "p", "tokens": [4], "epoch": 0,
+                          "rlen": 1}])
+    assert sh.store.n_rollouts == 2
+
+
+def test_sync_filters_origin_and_cursors():
+    sh = HistoryShard(window_size=4)
+    sh.publish(session="a", origin="w0", seq=0,
+               rollouts=[{"key": "p", "tokens": [1, 2], "epoch": 0,
+                          "rlen": 2}],
+               drafts=[{"key": "p", "drafted": 8, "accepted": 5}])
+    r0 = sh.sync("a", "w0")
+    assert r0["tel"] == []  # own telemetry filtered out
+    r1 = sh.sync("b", "w1")
+    assert len(r1["tel"]) == 2 and len(r1["deltas"]) == 1
+    # cursor advance: nothing new on the next sync
+    r2 = sh.sync("b", "w1", delta_cursor=r1["delta_cursor"],
+                 tel_cursor=r1["tel_cursor"])
+    assert r2["deltas"] == [] and r2["tel"] == []
+
+
+def test_stale_delta_ignored():
+    svc = _mk_service(1)
+    try:
+        c = HistoryClient(svc.addresses, worker_id="w0")
+        c.publish_rollout("p", [1, 2, 3, 4], 0, response_len=4)
+        assert c.flush()
+        c.sync()
+        fresh = c.pack_for("p")
+        ver = c._pack_ver["p"]
+        stale = {
+            "seq": 999, "key": "p", "ver": [0, 0],
+            "pack": wire.pack_to_wire(
+                SuffixTree().pack()  # empty tree: obviously different
+            ),
+        }
+        assert c.apply_delta(0, stale) is False
+        assert c.stats["stale_deltas"] == 1
+        assert c.pack_for("p") is fresh, "stale delta must not replace"
+        # equal version is stale too (idempotent rebroadcast)
+        same = {"seq": 1000, "key": "p", "ver": list(ver),
+                "pack": stale["pack"]}
+        assert c.apply_delta(0, same) is False
+        # strictly newer wins
+        newer = {"seq": 1001, "key": "p", "ver": [ver[0] + 1, ver[1]],
+                 "pack": wire.pack_to_wire(fresh)}
+        assert c.apply_delta(0, newer) is True
+        c.close()
+    finally:
+        svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# pooled vs oracle: identical packed forests per problem
+# ---------------------------------------------------------------------------
+def test_nworker_pooled_equals_single_worker_oracle():
+    """Same rollouts, any cross-problem interleaving across N workers:
+    every problem's replicated pack must be bit-identical to a single
+    local drafter fed the same per-problem sequences."""
+    rng = np.random.default_rng(0)
+    problems = [f"p{i}" for i in range(5)]
+    per_problem = {p: _docs(rng, 6) for p in problems}
+
+    # oracle: ONE local drafter, problems interleaved one way
+    cfg = DrafterConfig(scope="problem", window_size=4, min_match=1,
+                        epoch_decay=0.9)
+    oracle = SuffixDrafter(cfg)
+    for e in range(6):
+        oracle.begin_iteration(e)
+        for p in problems:
+            doc = per_problem[p][e]
+            oracle.observe_rollout(p, doc, e, response_len=len(doc))
+
+    # pooled: 3 workers, problems partitioned DIFFERENTLY each epoch
+    # (rotation), published through 2 shards
+    svc = _mk_service(2, window=4, decay=0.9)
+    try:
+        clients = [HistoryClient(svc.addresses, worker_id=f"w{w}")
+                   for w in range(3)]
+        for e in range(6):
+            for c in clients:
+                c.begin_epoch(e)
+                c.flush()
+            for j, p in enumerate(problems):
+                c = clients[(j + e) % 3]  # rotated ownership
+                doc = per_problem[p][e]
+                c.publish_rollout(p, doc, e, response_len=len(doc))
+            for c in clients:
+                assert c.flush()
+        for c in clients:
+            c.sync()
+        for p in problems:
+            want = oracle.index.tree(p).pack()
+            for w, c in enumerate(clients):
+                assert_packs_equal(
+                    c.pack_for(p), want, f"worker {w} problem {p}"
+                )
+        for c in clients:
+            c.close()
+    finally:
+        svc.stop()
+
+
+def test_remote_proposals_match_local_oracle():
+    """BatchedDraftSessions drafting from replicated packs proposes
+    exactly what a local-store drafter proposes on the same tails."""
+    rng = np.random.default_rng(3)
+    svc = _mk_service(2, window=8)
+    try:
+        client = HistoryClient(svc.addresses, worker_id="w0")
+        cfg = DrafterConfig(scope="problem", window_size=8, min_match=2,
+                            epoch_decay=0.9)
+        remote = SuffixDrafter(cfg, remote=client)
+        local = SuffixDrafter(cfg)
+        for e in range(4):
+            for p in ("a", "b"):
+                doc = _docs(rng, 1, length=20)[0]
+                remote.observe_rollout(p, doc, e, response_len=len(doc))
+                local.observe_rollout(p, doc, e, response_len=len(doc))
+        assert client.flush()
+        br = remote.batched_sessions(2)
+        bl = local.batched_sessions(2)
+        for row, p in enumerate(("a", "b")):
+            br.open(row, p)
+            bl.open(row, p)
+        for trial in range(6):
+            tail = _docs(rng, 1, length=6)[0]
+            for row in range(2):
+                br.feed(row, tail)
+                bl.feed(row, tail)
+            props_r = br.propose_batch(np.array([8, 8]))
+            props_l = bl.propose_batch(np.array([8, 8]))
+            assert props_r == props_l, f"trial {trial}"
+        client.close()
+    finally:
+        svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# crash / restart
+# ---------------------------------------------------------------------------
+def test_shard_crash_restart_reconnect_and_identical_drafts():
+    rng = np.random.default_rng(7)
+    shard = HistoryShard(shard_id=0, n_shards=1, window_size=8,
+                         epoch_decay=0.9)
+    server = ShardServer(shard).start()
+    client = HistoryClient([server.address], worker_id="w0")
+    cfg = DrafterConfig(scope="problem", window_size=8, min_match=1,
+                        epoch_decay=0.9)
+    drafter = SuffixDrafter(cfg, remote=client)
+    docs = _docs(rng, 5, length=18)
+    for e, doc in enumerate(docs):
+        drafter.observe_rollout("p", doc, e, response_len=len(doc))
+    assert client.flush()
+    client.sync()
+    gen0 = client._gen[0]
+
+    bds = drafter.batched_sessions(1)
+    bds.open(0, "p")
+    tail = docs[-1][:9]
+    bds.feed(0, tail)
+    before = bds.propose_batch(np.array([8]))
+    assert before[0], "warm tree must propose something"
+
+    # crash: snapshot, kill the server, restart from the snapshot on
+    # the SAME port (the client's configured address must keep working)
+    snapshot = shard.state_dict()
+    port = server.address[1]
+    server.stop()
+    server.stopped.wait(timeout=5.0)
+    shard2 = HistoryShard.from_state(snapshot)
+    server2 = ShardServer(shard2, port=port).start()
+    try:
+        applied = client.sync()  # reconnect + generation change
+        assert client.stats["shard_restarts"] == 1
+        assert client._gen[0] != gen0
+        assert applied >= 1, "full resync must re-deliver the pack"
+        bds2 = drafter.batched_sessions(1)
+        bds2.open(0, "p")
+        bds2.feed(0, tail)
+        after = bds2.propose_batch(np.array([8]))
+        assert after == before, "post-restart drafts must be identical"
+        # the service keeps working: publish + resync after restart
+        drafter.observe_rollout("p", docs[0], 9, response_len=len(docs[0]))
+        assert client.flush()
+        assert shard2.store.n_rollouts == 6
+        client.close()
+    finally:
+        server2.stop()
+
+
+def test_publish_dedup_survives_restart_replay():
+    """Unacked batches resent after a restart-from-snapshot must not
+    double-append: per-session publish cursors persist in the snapshot."""
+    shard = HistoryShard(window_size=4)
+    shard.publish(session="w0:aa", origin="w0", seq=0,
+                  rollouts=[{"key": "p", "tokens": [1, 2], "epoch": 0,
+                             "rlen": 2}])
+    shard2 = HistoryShard.from_state(shard.state_dict())
+    resp = shard2.publish(
+        session="w0:aa", origin="w0", seq=0,
+        rollouts=[{"key": "p", "tokens": [1, 2], "epoch": 0, "rlen": 2}],
+    )
+    assert resp["dup"] is True
+    assert shard2.store.n_rollouts == 1
+
+
+# ---------------------------------------------------------------------------
+# resharding (restore under a different geometry)
+# ---------------------------------------------------------------------------
+def test_reshard_states_geometry_change():
+    rng = np.random.default_rng(11)
+    n_problems = 8
+    shards = [HistoryShard(shard_id=i, n_shards=2, window_size=4)
+              for i in range(2)]
+    docs = {k: _docs(rng, 2) for k in range(n_problems)}
+    for k in range(n_problems):
+        sh = shards[shard_for(k, 2, n_problems)]
+        for e, doc in enumerate(docs[k]):
+            sh.publish(session="s", origin="w", seq=None,
+                       rollouts=[{"key": k, "tokens": doc, "epoch": e,
+                                  "rlen": len(doc)}])
+    states = [sh.state_dict() for sh in shards]
+
+    # unchanged geometry: pass-through (telemetry + dedup survive)
+    assert reshard_states(states, 2, n_problems) is not states
+    assert reshard_states(states, 2, n_problems)[0] is states[0]
+
+    # 2 -> 4 shards: every key lands on exactly its new owner, trees
+    # rebuilt from the re-routed windows stay pack-identical
+    new = reshard_states(states, 4, n_problems)
+    assert [st["shard_id"] for st in new] == [0, 1, 2, 3]
+    seen = {}
+    for i, st in enumerate(new):
+        for key, _ in st["store"]["problems"]:
+            assert key not in seen, "a key may never live on two shards"
+            seen[key] = i
+            assert i == shard_for(key, 4, n_problems)
+    assert len(seen) == n_problems
+    for k in range(n_problems):
+        restored = HistoryShard.from_state(new[seen[k]])
+        assert_packs_equal(
+            restored.index.tree(k).pack(),
+            shards[shard_for(k, 2, n_problems)].index.tree(k).pack(),
+            f"key {k}",
+        )
+
+    # merge: all problems in one store state
+    merged = merge_store_states(states)
+    assert len(merged["problems"]) == n_problems
+
+
+def test_replication_survives_shard_side_compaction():
+    """A compaction rebuild must keep tree versions monotone: a version
+    reset would make every post-compaction delta look stale to remote
+    workers, freezing their replicas for exactly the hottest keys."""
+    from repro.history.incremental import IncrementalIndex
+
+    rng = np.random.default_rng(13)
+    shard = HistoryShard(window_size=2, epoch_decay=1.0)
+    # aggressive compaction so the smoke-sized stream triggers it
+    shard.index = IncrementalIndex(epoch_decay=1.0, compact_ratio=1.5,
+                                   compact_min_tokens=64)
+    server = ShardServer(shard).start()
+    try:
+        c = HistoryClient([server.address], worker_id="w0",
+                          start_sender=False)
+        for i in range(40):
+            doc = _docs(rng, 1, length=20)[0]
+            shard.publish(session="s", origin="w1", seq=i,
+                          rollouts=[{"key": "p", "tokens": doc,
+                                     "epoch": i, "rlen": len(doc)}])
+            c.sync()
+            assert_packs_equal(
+                c.pack_for("p"), shard.index.tree("p").pack(),
+                f"replica stale after publish {i}",
+            )
+        assert shard.index.stats.compactions >= 1, \
+            "stream must cross at least one compaction"
+        c.close()
+    finally:
+        server.stop()
+
+
+def test_sync_skips_shard_side_errors(monkeypatch):
+    svc = _mk_service(1)
+    try:
+        c = HistoryClient(svc.addresses, worker_id="w0",
+                          start_sender=False)
+        def boom(i, msg):
+            raise RuntimeError("shard rejected sync")
+        monkeypatch.setattr(c, "_rpc", boom)
+        assert c.sync() == 0  # skipped, not raised
+        assert c.stats["sync_failures"] == 1
+    finally:
+        svc.stop()
+
+
+def test_first_sync_is_one_rpc():
+    shard = HistoryShard(window_size=4)
+    server = ShardServer(shard).start()
+    try:
+        c = HistoryClient([server.address], worker_id="w0",
+                          start_sender=False)
+        c.sync()
+        assert shard.stats["syncs"] == 1, \
+            "first contact must not re-issue a duplicate full sync"
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# pooled telemetry (LengthPolicy warmup)
+# ---------------------------------------------------------------------------
+def test_pooled_length_policy_warms_nx_faster():
+    svc = _mk_service(2)
+    try:
+        clients = [HistoryClient(svc.addresses, worker_id=f"w{w}")
+                   for w in range(4)]
+        policies = [LengthPolicy() for _ in clients]
+        for c, lp in zip(clients, policies):
+            c.attach(length_policy=lp)
+        # each worker observes ONE rollout locally — below min_history
+        # (4) on its own — and publishes it
+        for w, (c, lp) in enumerate(zip(clients, policies)):
+            L = 10 + 5 * w
+            lp.observe(f"p{w}", L)
+            c.publish_rollout(f"p{w}", list(range(L)), 0, response_len=L)
+        for c in clients:
+            assert c.flush()
+        for lp in policies:
+            assert lp.thresholds() == (float("inf"), float("inf")), \
+                "one local observation must not set thresholds"
+        for c in clients:
+            c.sync()
+        for w, lp in enumerate(policies):
+            # own 1 + 3 pooled = 4 = min_history: thresholds now exist
+            assert lp.history_size() == 4, f"worker {w}"
+            t_s, t_l = lp.thresholds()
+            assert np.isfinite(t_s) and np.isfinite(t_l), f"worker {w}"
+        # accept telemetry pools into the drafter-store mirror
+        clients[0].note_draft("p0", 10, 7)
+        assert clients[0].flush()
+        from repro.history.store import RolloutHistoryStore
+
+        mirror = RolloutHistoryStore()
+        clients[1].attach(store=mirror)
+        clients[1].sync()
+        assert mirror.telemetry("p0")["accepted"] == 7
+        for c in clients:
+            c.close()
+    finally:
+        svc.stop()
+
+
+def test_outbox_bounded_drops_oldest_never_blocks():
+    # no server at all: everything queues, nothing blocks
+    dead = ("127.0.0.1", 1)  # port 1: nothing listens
+    c = HistoryClient([dead], worker_id="w0", outbox_cap=4,
+                      rpc_timeout=0.2, start_sender=False)
+    for i in range(10):
+        c.publish_rollout("p", [i], 0, response_len=1)
+        with c._cv:
+            c._seal_pending_locked()
+    assert len(c._outbox[0]) == 4
+    assert c.stats["dropped_batches"] == 6
+    assert c.sync() == 0  # unreachable shard: skipped, not raised
+    assert c.stats["sync_failures"] == 1
+
+
+# ---------------------------------------------------------------------------
+# sharded persistence (manifest + legacy + crash-safe writes)
+# ---------------------------------------------------------------------------
+def test_sharded_manifest_roundtrip(tmp_path):
+    shards = []
+    for i in range(3):
+        sh = HistoryShard(shard_id=i, n_shards=3, window_size=4)
+        sh.publish(session=f"s{i}", origin=f"w{i}", seq=0,
+                   rollouts=[{"key": i, "tokens": [1, 2, i], "epoch": 0,
+                              "rlen": 3}])
+        shards.append(sh)
+    path = persist.save_service_history(
+        str(tmp_path), [s.state_dict() for s in shards], meta={"run": "t"}
+    )
+    assert path.endswith(persist.MANIFEST_FILENAME)
+    # atomic writes: no torn .tmp files left behind
+    assert not any(p.name.endswith(".tmp") for p in tmp_path.iterdir())
+    loaded = persist.load_service_history(str(tmp_path))
+    assert loaded["n_shards"] == 3 and not loaded["legacy"]
+    assert loaded["meta"] == {"run": "t"}
+    for i, st in enumerate(loaded["shards"]):
+        back = HistoryShard.from_state(st)
+        assert back.store.n_rollouts == 1
+        assert_packs_equal(
+            back.index.tree(i).pack(), shards[i].index.tree(i).pack(),
+            f"shard {i}",
+        )
+
+
+def test_legacy_history_loads_as_single_shard(tmp_path):
+    d = SuffixDrafter(DrafterConfig(scope="problem", window_size=4))
+    d.observe_rollout("p", [1, 2, 3, 1, 2], 0, response_len=5)
+    # simulate an old (schema-1) save
+    state = persist.history_state(drafter=d)
+    state["schema_version"] = 1
+    persist._atomic_write_json(
+        str(tmp_path / persist.HISTORY_FILENAME), state
+    )
+    loaded = persist.load_service_history(str(tmp_path))
+    assert loaded["legacy"] and loaded["n_shards"] == 1
+    sh = HistoryShard.from_state(loaded["shards"][0])
+    assert sh.store.n_rollouts == 1
+    assert sh.index.tree("p") is not None
+
+
+def test_unknown_future_schema_rejected(tmp_path):
+    persist._atomic_write_json(
+        str(tmp_path / persist.HISTORY_FILENAME),
+        {"schema_version": 99, "store": {}},
+    )
+    with pytest.raises(persist.HistorySchemaError, match="schema_version"):
+        persist.load_history(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# engine integration: sharing history may only change drafts, not tokens
+# ---------------------------------------------------------------------------
+def test_remote_engine_token_identical_and_pooled_warm(tiny_dense):
+    import jax
+
+    from conftest import make_params
+    from repro.core.spec_engine import EngineConfig, SpecEngine
+
+    params = make_params(tiny_dense)
+    prompts = [[2, 3, 4, 5], [7, 8, 9]]
+    pids = ["a", "b"]
+
+    def mk(remote=None):
+        return SpecEngine(
+            params, tiny_dense,
+            EngineConfig(spec_enabled=True, max_new_tokens=16, eos_token=1,
+                         use_budget_solver=False),
+            drafter=SuffixDrafter(
+                DrafterConfig(scope="problem", min_match=2), remote=remote
+            ),
+        )
+
+    svc = _mk_service(2)
+    try:
+        c0 = HistoryClient(svc.addresses, worker_id="w0")
+        c1 = HistoryClient(svc.addresses, worker_id="w1")
+        eng_r = mk(remote=c0)
+        eng_peer = mk(remote=c1)
+        eng_l = mk()
+        for it in range(2):
+            out_r, st_r = eng_r.generate(prompts, pids,
+                                         key=jax.random.key(it))
+            assert c0.flush()
+            out_l, st_l = eng_l.generate(prompts, pids,
+                                         key=jax.random.key(it))
+            assert out_r == out_l, (
+                "history sharing may only change draft proposals, "
+                "never outputs (T=0)"
+            )
+            for e in (eng_r, eng_l):
+                e.begin_iteration(it + 1)
+        # a SECOND worker that never rolled out drafts warm from w0's
+        # pooled history: token-identical output, fewer forwards than
+        # a cold engine
+        cold = mk()
+        out_c, st_c = cold.generate(prompts, pids, key=jax.random.key(9))
+        out_p, st_p = eng_peer.generate(prompts, pids,
+                                        key=jax.random.key(9))
+        assert out_p == out_c
+        assert st_p.n_fwd < st_c.n_fwd, (
+            "pooled cross-worker history must cut the peer's forwards"
+        )
+        c0.close()
+        c1.close()
+    finally:
+        svc.stop()
+
+
+def test_trainer_resume_across_worker_counts(tiny_dense, tmp_path):
+    """A fleet-size change at resume must never silently drop history:
+    multi-worker checkpoints merge into a single store (N->1) and
+    single-worker checkpoints reshard across the service (1->N)."""
+    from dataclasses import replace
+
+    from repro.core.spec_engine import EngineConfig
+    from repro.data.tasks import PatternTask
+    from repro.rl.trainer import Trainer, TrainerConfig
+
+    task = PatternTask(n_problems=2, mean_len=5.0, max_len=8, seed=0)
+    base = TrainerConfig(
+        steps=1, prompts_per_step=2, group_size=2, max_new_tokens=8,
+        n_workers=2, history_shards=2,
+        drafter=DrafterConfig(scope="problem", min_match=2),
+        engine=EngineConfig(use_budget_solver=False),
+    )
+    tr = Trainer(tiny_dense, task, base)
+    try:
+        tr.run()
+        n_rollouts = sum(
+            HistoryShard.from_state(st).store.n_rollouts
+            for st in tr.service.state_dicts()
+        )
+        assert n_rollouts == 4  # 2 problems x G=2
+        ckpt = tr.save_checkpoint(str(tmp_path / "multi.npz"))
+    finally:
+        tr.close()
+
+    # multi-worker checkpoint -> single worker: merged local store
+    tr1 = Trainer(tiny_dense, task, replace(base, n_workers=1))
+    try:
+        tr1.load_checkpoint(ckpt)
+        assert tr1.service is None
+        assert tr1.engine.drafter.store.n_rollouts == 4
+        assert tr1.engine.drafter.n_trees() == 2  # warm trees rebuilt
+        single_ckpt = tr1.save_checkpoint(str(tmp_path / "single.npz"))
+    finally:
+        tr1.close()
+
+    # single-worker checkpoint -> multi worker: resharded service
+    tr2 = Trainer(tiny_dense, task, replace(base, n_workers=2,
+                                            history_shards=2))
+    try:
+        tr2.load_checkpoint(single_ckpt)
+        assert tr2.service is not None
+        total = sum(
+            HistoryShard.from_state(st).store.n_rollouts
+            for st in tr2.service.state_dicts()
+        )
+        assert total == 4
+        # every worker replicated the restored packs on its first sync
+        for eng in tr2.engines:
+            assert eng.drafter.n_trees() == 2
+    finally:
+        tr2.close()
+
+
+# ---------------------------------------------------------------------------
+# multi-worker rollout phase
+# ---------------------------------------------------------------------------
+def test_multiworker_rollout_merges_in_request_order(tiny_dense):
+    import jax
+
+    from conftest import make_params
+    from repro.core.spec_engine import EngineConfig, SpecEngine
+    from repro.data.tasks import PatternTask
+    from repro.rl.rollout import MultiWorkerRollout, RolloutWorker
+
+    params = make_params(tiny_dense)
+    task = PatternTask(n_problems=4, mean_len=6.0, max_len=10, seed=0)
+    problems = task.problems()
+
+    def mk_worker(remote=None):
+        eng = SpecEngine(
+            params, tiny_dense,
+            EngineConfig(spec_enabled=True, max_new_tokens=10, eos_token=1,
+                         use_budget_solver=False),
+            drafter=SuffixDrafter(
+                DrafterConfig(scope="problem", min_match=2), remote=remote
+            ),
+        )
+        return RolloutWorker(eng, task, group_size=2)
+
+    svc = _mk_service(2)
+    try:
+        clients = [HistoryClient(svc.addresses, worker_id=f"w{w}")
+                   for w in range(2)]
+        mw = MultiWorkerRollout(
+            [mk_worker(remote=c) for c in clients]
+        )
+        single = mk_worker()
+        b_multi = mw.rollout(problems, key=jax.random.key(1))
+        b_single = single.rollout(problems, key=jax.random.key(1))
+        # greedy outputs are drafter-independent: responses line up in
+        # the original request order even though workers split the batch
+        assert [p.pid for p in b_multi.problems] == \
+            [p.pid for p in b_single.problems]
+        assert b_multi.responses == b_single.responses
+        np.testing.assert_array_equal(b_multi.rewards, b_single.rewards)
+        np.testing.assert_allclose(
+            b_multi.advantages, b_single.advantages, atol=1e-6
+        )
+        np.testing.assert_array_equal(b_multi.tokens, b_single.tokens)
+        # rotation changes the partition on the next call
+        before = mw._calls
+        mw.rollout(problems, key=jax.random.key(2))
+        assert mw._calls == before + 1
+        for c in clients:
+            c.close()
+    finally:
+        svc.stop()
