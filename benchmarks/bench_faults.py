@@ -1,0 +1,358 @@
+"""Fault-tolerance benchmark: shard recovery time, degraded-drafting
+acceptance, and fault-tolerant rollout requeue overhead.
+
+Three measurements, emitted to ``BENCH_faults.json``:
+
+1. **Shard recovery time** — kill the shard server, supervisor-restart
+   it (warm, in-process), and measure wall time until the client has
+   fully resynced the restored pack. p50/p90/max over repeated kills.
+
+2. **Degraded-drafting acceptance** — accepted-per-round for the same
+   rollout stream in three regimes: *healthy* (replicated service
+   packs), *degraded* (owning shard DOWN, drafting from the local
+   fallback trees), and *cold* (no history at all). Degraded must land
+   between cold and healthy: the fallback loses the pooled window but
+   keeps the worker's own outage-time rollouts.
+
+3. **Requeue overhead** — wall-time ratio of a fault-tolerant
+   two-worker rollout where one worker stalls on its first slice
+   (problems re-queued to the survivor) vs the no-fault run, with the
+   merged batch verified token-identical.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.drafter import DrafterConfig, SuffixDrafter
+from repro.fault import BackoffPolicy, FlakyWorker, ShardSupervisor
+from repro.history.client import HistoryClient
+from repro.history.service import HistoryService
+
+FAST_BACKOFF = BackoffPolicy(base_s=0.0, max_s=0.0, factor=1.0, jitter=0.0)
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"
+
+
+def _percentiles(xs):
+    if not xs:
+        return {"p50": 0.0, "p90": 0.0, "max": 0.0, "n": 0}
+    arr = np.asarray(xs, np.float64)
+    return {
+        "p50": float(np.percentile(arr, 50)),
+        "p90": float(np.percentile(arr, 90)),
+        "max": float(arr.max()),
+        "n": int(arr.size),
+    }
+
+
+# ---------------------------------------------------------------------------
+# 1) shard recovery time (kill -> supervised restart -> client resynced)
+# ---------------------------------------------------------------------------
+def bench_recovery(n_kills=5, n_docs=20, doc_len=60, seed=0):
+    rng = np.random.default_rng(seed)
+    svc = HistoryService.spawn_in_process(1, window_size=8)
+    sup = ShardSupervisor(svc, seed=0, policy=FAST_BACKOFF)
+    recovery_ms = []
+    try:
+        c = HistoryClient(svc.book, worker_id="w0", rpc_timeout=1.0,
+                          backoff=FAST_BACKOFF)
+        for i, doc in enumerate(
+            [int(t) for t in rng.integers(0, 24, size=doc_len)]
+            for _ in range(n_docs)
+        ):
+            c.publish_rollout("p", doc, i, response_len=len(doc))
+        assert c.flush(), "warmup flush failed"
+        c.sync()
+        want = c.pack_for("p")
+        assert want is not None
+        for k in range(n_kills):
+            svc.servers[0].stop()
+            svc.servers[0].stopped.wait(timeout=5.0)
+            t0 = time.perf_counter()
+            restarted = sup.poll(force=True)
+            assert restarted == [0], f"kill {k}: supervisor did not restart"
+            # first sync may burn on the stale socket (reply lost);
+            # recovery time covers every attempt until the pack lands
+            applied = 0
+            for _ in range(5):
+                applied = c.sync()
+                if applied:
+                    break
+            recovery_ms.append(1e3 * (time.perf_counter() - t0))
+            assert applied >= 1, f"kill {k}: resync applied nothing"
+            got = c.pack_for("p")
+            auth = svc.servers[0].shard.index.tree("p").pack()
+            assert got is not None and got.n_nodes == auth.n_nodes, \
+                f"kill {k}: replica diverged from the restored shard"
+        stats = dict(c.stats)
+        c.close()
+    finally:
+        sup.stop()
+        svc.stop()
+    return {
+        "n_kills": n_kills,
+        "recovery_ms": _percentiles(recovery_ms),
+        "restarts": int(sup.stats["restarts"]),
+        "shard_restarts_seen_by_client": int(stats.get("shard_restarts", 0)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# 2) degraded-drafting acceptance: healthy vs fallback vs cold
+# ---------------------------------------------------------------------------
+def _epoch_rollout(rng, template, noise=0.1, vocab=24):
+    d = template.copy()
+    flips = rng.random(len(d)) < noise
+    d[flips] = rng.integers(0, vocab, size=int(flips.sum()))
+    return [int(t) for t in d]
+
+
+def _drafted_acceptance(drafter, bds, pid, rollout, k=8):
+    bds.open(0, pid)
+    bds.feed(0, rollout[:4])
+    pos = 4
+    accepted = rounds = 0
+    budget = np.array([k])
+    while pos < len(rollout):
+        prop = bds.propose_batch(budget)[0]
+        a = 0
+        for t in prop:
+            if pos + a < len(rollout) and t == rollout[pos + a]:
+                a += 1
+            else:
+                break
+        accepted += a
+        rounds += 1
+        emit = a + 1
+        bds.feed(0, rollout[pos : pos + emit])
+        pos += emit
+    bds.close(0)
+    return accepted, rounds
+
+
+def bench_degraded_acceptance(n_problems=4, doc_len=60, warm_epochs=3,
+                              outage_epochs=3, group=2, seed=0):
+    rng = np.random.default_rng(seed)
+    templates = {
+        f"p{i}": rng.integers(0, 24, size=doc_len)
+        for i in range(n_problems)
+    }
+    cfg = DrafterConfig(scope="problem", window_size=8, min_match=2,
+                        epoch_decay=0.9)
+    svc = HistoryService.spawn_in_process(1, window_size=8,
+                                          epoch_decay=0.9)
+    try:
+        c = HistoryClient(svc.book, worker_id="w0", rpc_timeout=0.5,
+                          backoff=FAST_BACKOFF, suspect_after=2)
+        drafter = SuffixDrafter(cfg, remote=c)
+        cold = SuffixDrafter(cfg)  # observes nothing: acceptance floor
+
+        def epoch(d, e, measure_bds):
+            acc = rounds = 0
+            measure_bds.prewarm()
+            for pid in sorted(templates):
+                for _ in range(group):
+                    roll = _epoch_rollout(rng, templates[pid])
+                    a, r = _drafted_acceptance(d, measure_bds, pid, roll)
+                    acc += a
+                    rounds += r
+                    d.observe_rollout(pid, roll, e, response_len=len(roll))
+            return acc / max(rounds, 1)
+
+        bds = drafter.batched_sessions(1)
+        healthy_traj = []
+        for e in range(warm_epochs):
+            drafter.begin_iteration(e)
+            healthy_traj.append(epoch(drafter, e, bds))
+            assert c.flush(), "healthy-phase flush failed"
+
+        # outage: kill the only shard, drive health to DOWN, keep
+        # rolling out — drafting switches to the local fallback trees
+        svc.servers[0].stop()
+        svc.servers[0].stopped.wait(timeout=5.0)
+        c.sync(), c.sync()
+        assert c.degraded_for("p0"), "shard must be DOWN for the outage arm"
+        degraded_traj = []
+        for e in range(warm_epochs, warm_epochs + outage_epochs):
+            drafter.begin_iteration(e)
+            degraded_traj.append(epoch(drafter, e, bds))
+        degraded_stats = {
+            k: int(v) for k, v in drafter.stats.items()
+            if k.startswith("degraded")
+        }
+
+        # cold floor: same stream, drafter that never keeps history
+        cold_bds = cold.batched_sessions(1)
+        cold.begin_iteration(0)
+        cold_traj = [epoch(cold, 0, cold_bds)]
+        c.close(flush_timeout=0.2)
+    finally:
+        svc.stop()
+    return {
+        "healthy_acceptance": healthy_traj,
+        "degraded_acceptance": degraded_traj,
+        "cold_acceptance": cold_traj,
+        "healthy_last": healthy_traj[-1],
+        "degraded_last": degraded_traj[-1],
+        "cold_first": cold_traj[0],
+        "degraded_stats": degraded_stats,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 3) fault-tolerant requeue overhead (token-identical, measured slowdown)
+# ---------------------------------------------------------------------------
+def bench_requeue_overhead(seed=0):
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.core.spec_engine import EngineConfig, SpecEngine
+    from repro.data.tasks import PatternTask
+    from repro.models import model as M
+    from repro.models.layers import split_tree
+    from repro.rl.rollout import MultiWorkerRollout, RolloutWorker
+
+    cfg = ModelConfig(
+        name="bench-faults", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+        vocab_pad_multiple=8, dtype="float32",
+    )
+    params, _ = split_tree(M.init_params(cfg, jax.random.key(0)))
+    task = PatternTask(n_problems=4, mean_len=6.0, max_len=10, seed=seed)
+    problems = task.problems()
+
+    def mk_worker():
+        # spec off: draft proposals vary call-to-call and lazily compile
+        # new verify shapes, which would swamp the ~ms requeue cost this
+        # bench isolates (chaos tests cover identity WITH drafting on)
+        eng = SpecEngine(
+            params, cfg,
+            EngineConfig(spec_enabled=False, max_new_tokens=10,
+                         eos_token=1, use_budget_solver=False),
+            drafter=SuffixDrafter(DrafterConfig(scope="problem",
+                                                min_match=2)),
+        )
+        return RolloutWorker(eng, task, group_size=2)
+
+    # three warmup calls cover the full rotation of slice shapes, so
+    # the timed fourth call measures steady-state requeue overhead,
+    # not compilation
+    base = MultiWorkerRollout([mk_worker(), mk_worker()])
+    for w in range(3):
+        base.rollout(problems, key=jax.random.key(w))
+    t0 = time.perf_counter()
+    want = base.rollout(problems, key=jax.random.key(3))
+    clean_s = time.perf_counter() - t0
+
+    # worker 0 stalls on EVERY call so the warmups also compile the
+    # survivor's requeued slices
+    faulty = MultiWorkerRollout(
+        [FlakyWorker(mk_worker(), fail_calls=range(4)), mk_worker()],
+        fault_tolerant=True,
+    )
+    for w in range(3):
+        faulty.rollout(problems, key=jax.random.key(w))
+    t0 = time.perf_counter()
+    got = faulty.rollout(problems, key=jax.random.key(3))
+    faulty_s = time.perf_counter() - t0
+
+    identical = (
+        got.responses == want.responses
+        and np.array_equal(got.tokens, want.tokens)
+        and np.array_equal(got.rewards, want.rewards)
+    )
+    return {
+        "clean_s": clean_s,
+        "faulty_s": faulty_s,
+        "overhead_x": faulty_s / max(clean_s, 1e-9),
+        "worker_failures": int(faulty.stats["worker_failures"]),
+        "requeued_problems": int(faulty.stats["requeued_problems"]),
+        "token_identical": bool(identical),
+    }
+
+
+# ---------------------------------------------------------------------------
+def run(quick: bool = True, smoke: bool = False,
+        out: str = "BENCH_faults.json"):
+    if smoke:
+        rec_args = dict(n_kills=3, n_docs=10, doc_len=40)
+        deg_args = dict(n_problems=3, doc_len=40, warm_epochs=2,
+                        outage_epochs=2, group=2)
+    elif quick:
+        rec_args = dict(n_kills=5, n_docs=20, doc_len=60)
+        deg_args = dict(n_problems=4, doc_len=60, warm_epochs=3,
+                        outage_epochs=3, group=2)
+    else:
+        rec_args = dict(n_kills=10, n_docs=40, doc_len=100)
+        deg_args = dict(n_problems=6, doc_len=100, warm_epochs=4,
+                        outage_epochs=4, group=3)
+
+    recovery = bench_recovery(**rec_args)
+    degraded = bench_degraded_acceptance(**deg_args)
+    requeue = bench_requeue_overhead()
+
+    payload = {"recovery": recovery, "degraded_drafting": degraded,
+               "requeue": requeue}
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    assert recovery["restarts"] == recovery["n_kills"], \
+        "every kill must be supervisor-restarted"
+    assert degraded["degraded_stats"].get("degraded_rollouts", 0) > 0, \
+        "outage arm must exercise the fallback path"
+    assert degraded["degraded_last"] > degraded["cold_first"], (
+        "fallback trees must beat cold drafting "
+        f"({degraded['degraded_last']:.3f} vs {degraded['cold_first']:.3f})"
+    )
+    assert requeue["token_identical"], \
+        "requeued rollout must stay token-identical at T=0"
+    assert requeue["worker_failures"] >= 1
+
+    return [
+        row(
+            "bench_faults/recovery",
+            recovery["recovery_ms"]["p50"] * 1e3,
+            f"p50={recovery['recovery_ms']['p50']:.2f}ms;"
+            f"p90={recovery['recovery_ms']['p90']:.2f}ms;"
+            f"max={recovery['recovery_ms']['max']:.2f}ms;"
+            f"restarts={recovery['restarts']}",
+        ),
+        row(
+            "bench_faults/degraded_acceptance",
+            0.0,
+            f"healthy={degraded['healthy_last']:.3f};"
+            f"degraded={degraded['degraded_last']:.3f};"
+            f"cold={degraded['cold_first']:.3f};"
+            f"degraded_rollouts="
+            f"{degraded['degraded_stats'].get('degraded_rollouts', 0)}",
+        ),
+        row(
+            "bench_faults/requeue_overhead",
+            requeue["faulty_s"] * 1e6,
+            f"overhead={requeue['overhead_x']:.2f}x;"
+            f"requeued={requeue['requeued_problems']};"
+            f"identical={requeue['token_identical']}",
+        ),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (seconds)")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_faults.json")
+    args = ap.parse_args()
+    for r in run(quick=not args.full, smoke=args.smoke, out=args.out):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ import traceback
 
 MODULES = [
     "bench_draft",
+    "bench_faults",
     "bench_history",
     "bench_rollout",
     "bench_service",

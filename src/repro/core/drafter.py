@@ -586,6 +586,14 @@ class SuffixDrafter:
         self.index = IncrementalIndex(epoch_decay=self.cfg.epoch_decay)
         self._trie = PrefixTrie() if self.cfg.use_prefix_trie else None
         self.epoch = self.store.epoch
+        # Degraded-drafting fallback (remote mode only, built lazily):
+        # while a key's owning shard is DOWN, this worker's own rollouts
+        # also land in a local store/index pair, so drafting keeps
+        # adapting to the current policy instead of freezing on a stale
+        # replica. Acceptance drops (1/N of the fleet's stream), tokens
+        # never change — drafts only gate acceptance.
+        self._fb_store = None
+        self._fb_index = None
         # Stats for EXPERIMENTS/benchmarks
         self.stats = collections.Counter()
         if remote is not None:
@@ -629,10 +637,14 @@ class SuffixDrafter:
         if self.remote is not None:
             # Remote mode: the owning shard maintains store+index with
             # the SAME apply_rollout routine (bit-identical trees); the
-            # pack comes back on the next sync.
+            # pack comes back on the next sync. The publish also covers
+            # outages: the client outbox resends it once the shard is
+            # back (deduped exactly-once shard-side).
             self.remote.publish_rollout(
                 key, toks, ep, response_len=response_len
             )
+            if self._remote_down(key):
+                self._fb_apply(key, toks, ep)
             return
         from repro.history.incremental import apply_rollout
 
@@ -786,6 +798,52 @@ class SuffixDrafter:
             device = self.cfg.scope != "problem+request"
         return BatchedDraftSessions(self, n_rows, device=device)
 
+    # -- degraded drafting (remote mode, owning shard DOWN) ----------------
+    def _remote_down(self, key) -> bool:
+        fn = getattr(self.remote, "degraded_for", None)
+        return bool(fn(key)) if fn is not None else False
+
+    def _fb_apply(self, key, toks: List[int], ep: int) -> None:
+        """Feed one of this worker's own rollouts into the fallback
+        store/index while the owning shard is DOWN."""
+        from repro.history.incremental import IncrementalIndex, apply_rollout
+        from repro.history.store import RolloutHistoryStore
+
+        if self._fb_store is None:
+            self._fb_store = RolloutHistoryStore(
+                window_size=self._window_size
+            )
+            self._fb_index = IncrementalIndex(
+                epoch_decay=self.cfg.epoch_decay
+            )
+        apply_rollout(
+            self._fb_store, self._fb_index, key, toks, ep,
+            rebuild_epoch=ep,
+        )
+        self.stats["degraded_rollouts"] += 1
+
+    def _fb_pack(self, key):
+        """Fallback pack for ``key`` during an outage, or None.
+
+        On recovery only the fallback *tree* drops (lazily, here); the
+        store log stays, so a later outage of the same shard re-warms
+        the full fallback window via the warm-store-cold-tree rebuild.
+        """
+        if self._fb_index is None:
+            return None
+        if not self._remote_down(key):
+            self._fb_index.drop(key)
+            return None
+        tree = self._fb_index.tree(key)
+        if tree is None and self._fb_store.window(key):
+            tree = self._fb_index.rebuild(
+                key, self._fb_store.window(key), epoch=self.epoch
+            )
+        if tree is None:
+            return None
+        self.stats["degraded_packs"] += 1
+        return tree.pack()
+
     # -- pack source (local trees OR replicated remote packs) -------------
     def pack_for(self, key):
         """Current ``PackedSuffixTree`` for ``key`` — the one pack
@@ -793,9 +851,17 @@ class SuffixDrafter:
         the live tree (version-gated cache inside ``SuffixTree.pack``);
         remote mode returns the client's latest replicated delta. Both
         are identity-stable until the underlying tree actually changes,
-        which is what keys the forest rebuild."""
+        which is what keys the forest rebuild.
+
+        While a key's owning shard is DOWN, the fallback tree (fed by
+        this worker's rollouts since the outage began) takes precedence
+        over the frozen replica — the freshest policy samples accept
+        best; the stale replica still serves keys the fallback has not
+        seen. Either way drafting never stalls on a dead shard.
+        """
         if self.remote is not None:
-            return self.remote.pack_for(key)
+            pk = self._fb_pack(key)
+            return pk if pk is not None else self.remote.pack_for(key)
         tree = self.index.tree(key)
         if tree is None and self.store.window(key):
             # warm store, cold tree (persisted history): build lazily
@@ -807,7 +873,7 @@ class SuffixDrafter:
         packs report their full corpus length (live + not-yet-compacted
         dead text) — an overestimate, so floors only get safer."""
         if self.remote is not None:
-            pk = self.remote.pack_for(key)
+            pk = self.pack_for(key)
             return 0 if pk is None else int(len(pk.corpus))
         tree = self.index.tree(key)
         return 0 if tree is None else tree.n_live_tokens

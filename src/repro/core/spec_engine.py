@@ -457,6 +457,7 @@ class SpecEngine:
         max_new_tokens=None,
         key: Optional[jax.Array] = None,
         collect_effective_batch: bool = False,
+        watchdog=None,
     ) -> Tuple[List[List[int]], RolloutStats]:
         """Synchronous lock-step batched rollout with DAS speculation.
 
@@ -464,8 +465,16 @@ class SpecEngine:
         (generations per row (token lists, EOS-exclusive), stats). This
         is the baseline mode; ``generate_continuous`` serves the same
         requests through the slot-recycling pool.
+
+        ``watchdog`` (a ``repro.fault.RolloutWatchdog``) deadlines the
+        round loop: every round checks in, every completed round counts
+        as progress, and a deadline overrun raises ``StallError`` —
+        which the fault-tolerant rollout layer catches to re-queue this
+        worker's problems to survivors.
         """
         e = self.engine
+        if watchdog is not None:
+            watchdog.arm()
         t0 = time.perf_counter()
         B = len(prompts)
         mn = max_new_tokens if max_new_tokens is not None else e.max_new_tokens
@@ -526,10 +535,12 @@ class SpecEngine:
             cache = self._fused_generate_rounds(
                 bds, cache, key, problem_ids, outputs, active, emitted,
                 max_new_arr, head, rounds_per_row, stats,
-                collect_effective_batch,
+                collect_effective_batch, watchdog=watchdog,
             )
         else:
             while active.any():
+                if watchdog is not None:
+                    watchdog.check("generate round")
                 t_h = time.perf_counter()
                 remaining = max_new_arr - emitted
                 budgets_np = self._round_budgets(
@@ -598,6 +609,8 @@ class SpecEngine:
                 emitted[active] += n_take[active]
                 head = np.where(alive, next_tok, head)
                 active = alive
+                if watchdog is not None:
+                    watchdog.progress()
                 stats.host_time_s += time.perf_counter() - t_h
         stats.n_h2d += bds.xfers.pop("h2d", 0)
         stats.n_d2h += bds.xfers.pop("d2h", 0)
@@ -619,6 +632,7 @@ class SpecEngine:
     def _fused_generate_rounds(
         self, bds, cache, key, problem_ids, outputs, active, emitted,
         max_new_arr, head, rounds_per_row, stats, collect_effective_batch,
+        watchdog=None,
     ):
         """Lock-step round loop on the fused device-resident program.
 
@@ -642,6 +656,8 @@ class SpecEngine:
         stats.n_h2d += 1
         last_ver = bds.repack_version
         while active.any():
+            if watchdog is not None:
+                watchdog.check("fused round")
             t_h = time.perf_counter()
             remaining = max_new_arr - emitted
             budgets_np = self._round_budgets(
@@ -696,6 +712,8 @@ class SpecEngine:
                     outputs[b].extend(cand[b, : n_take[b]].tolist())
                 emitted[mask] += n_take[mask]
                 active &= alive
+            if watchdog is not None:
+                watchdog.progress()
             stats.host_time_s += time.perf_counter() - t_h
         return cache
 
@@ -708,6 +726,7 @@ class SpecEngine:
         key: Optional[jax.Array] = None,
         stats: Optional[RolloutStats] = None,
         collect_effective_batch: bool = False,
+        watchdog=None,
     ) -> Iterator[Request]:
         """Continuous-batching serve loop (generator of finished requests).
 
@@ -1086,7 +1105,11 @@ class SpecEngine:
             for s in np.nonzero(active)[0]:
                 sched.slots[s].rounds += 1
 
+        if watchdog is not None:
+            watchdog.arm()
         while sched.has_work() or pending is not None:
+            if watchdog is not None:
+                watchdog.check("serve round")
             # ---- overlap window: the device executes the in-flight
             # round; the host observes finished rollouts (their drafts
             # immediately help still-running stragglers) and pre-solves
@@ -1107,6 +1130,8 @@ class SpecEngine:
                 sync_forest()
             pre = precompute_budgets() if pending is not None else None
             consume()  # device sync: bookkeeping needs the round result
+            if watchdog is not None:
+                watchdog.progress()  # the in-flight round completed
             # ---- unfused: batched draft propose for the rows that
             # survived the round, dispatched BEFORE admissions so the
             # device suffix walk overlaps the admission prefills. Fused:
@@ -1162,6 +1187,7 @@ class SpecEngine:
         max_new_tokens=None,
         key: Optional[jax.Array] = None,
         collect_effective_batch: bool = False,
+        watchdog=None,
     ) -> Tuple[List[List[int]], RolloutStats]:
         """Drop-in for ``generate`` backed by the continuous engine.
 
@@ -1189,6 +1215,7 @@ class SpecEngine:
         for _ in self.serve(
             reqs, slots=slots, key=key, stats=stats,
             collect_effective_batch=collect_effective_batch,
+            watchdog=watchdog,
         ):
             pass
         outputs = [r.output for r in reqs]

@@ -1,0 +1,56 @@
+"""Fleet fault tolerance: supervision, degraded drafting, watchdogs,
+and deterministic fault injection.
+
+The layer's contract, threaded through history/rollout/serve:
+
+* a dead **shard** degrades drafting (stale replicas + local fallback
+  trees → lower acceptance) but never stalls a round or changes a
+  token; the supervisor restarts it and republishes its address.
+* a dead/stuck **worker** trips the rollout watchdog; its unfinished
+  problems re-queue to survivors and the merged batch stays
+  token-identical at T=0 (greedy verification is worker-independent).
+* every failure path is reachable deterministically via
+  ``fault.inject.FaultPlan`` (seeded, countable, virtual-clocked).
+"""
+
+from .clock import Clock, SystemClock, VirtualClock
+from .health import (
+    DOWN,
+    HEALTHY,
+    RESYNCING,
+    SUSPECT,
+    BackoffPolicy,
+    ShardBackoffError,
+    ShardHealth,
+)
+from .inject import (
+    FaultPlan,
+    FlakyWorker,
+    SilentServer,
+    garble_json_file,
+    truncate_json_file,
+)
+from .supervisor import AddressBook, ShardSupervisor
+from .watchdog import RolloutWatchdog, StallError
+
+__all__ = [
+    "AddressBook",
+    "BackoffPolicy",
+    "Clock",
+    "DOWN",
+    "FaultPlan",
+    "FlakyWorker",
+    "HEALTHY",
+    "RESYNCING",
+    "RolloutWatchdog",
+    "ShardBackoffError",
+    "ShardHealth",
+    "ShardSupervisor",
+    "SilentServer",
+    "StallError",
+    "SUSPECT",
+    "SystemClock",
+    "VirtualClock",
+    "garble_json_file",
+    "truncate_json_file",
+]

@@ -7,9 +7,11 @@ One ``HistoryClient`` per rollout worker. Two independent paths:
   sender thread: the verify round never blocks on the service. Batches
   carry a per-session monotone sequence number, so the at-least-once
   resend after a reconnect is deduped shard-side to exactly-once. A
-  full outbox drops its *oldest* sealed batch (counted in
-  ``stats["dropped_batches"]``) — losing old history is strictly better
-  than stalling the round or growing without bound.
+  full outbox drops its *oldest* sealed batch — losing old history is
+  strictly better than stalling the round or growing without bound;
+  drops are counted per shard (``stats["dropped_batches_s<i>"]``),
+  reported to the shard's telemetry with the next acked batch, and
+  logged once per overflow episode with the episode's count.
 * **sync** — pulls version-gated packed-forest deltas + pooled
   length/accept telemetry from every shard. Deltas older than the
   client's per-key ``(tree version, epoch)`` are ignored (stale-delta
@@ -17,26 +19,62 @@ One ``HistoryClient`` per rollout worker. Two independent paths:
   re-applies its own observations, and merges into whatever
   ``attach()``-ed ``LengthPolicy`` / telemetry store the engine gave us.
 
-Crash/reconnect: every RPC reconnects lazily with no backoff state to
-corrupt; a changed shard ``generation`` (shard restarted, possibly from
-a snapshot) drops that shard's pack cache and delta cursor and triggers
-an immediate full resync, after which drafting proceeds exactly as
-before the crash (the restored trees are query-equivalent).
+Crash/reconnect: every shard has an explicit health state machine
+(``repro.fault.health``: HEALTHY → SUSPECT → DOWN → RESYNCING).
+Failures mark a shard SUSPECT, repeats confirm DOWN; while DOWN, RPC
+attempts are gated by capped exponential backoff with seeded jitter —
+the client fails fast (``ShardBackoffError``) instead of paying a
+connect timeout per call, and drafting proceeds from bounded-stale
+replicas (or the drafter's local fallback trees). The first successful
+RPC after DOWN moves the shard to RESYNCING and the next ``sync``
+*hedges* the re-sync (an immediate second pull) before marking it
+HEALTHY. A changed shard ``generation`` (restart, possibly from a
+snapshot) additionally drops that shard's pack cache and delta cursor
+and triggers a full resync, after which drafting proceeds exactly as
+before the crash (the restored trees are query-equivalent). Addresses
+resolve through a shared ``AddressBook`` on every (re)connect, so a
+supervisor restarting a shard on a new port republishes it to every
+client without coordination.
 """
 
 from __future__ import annotations
 
 import collections
+import logging
 import os
 import socket
 import threading
 import time
-from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+import zlib
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.suffix_tree import PackedSuffixTree
+from repro.fault.clock import Clock, SystemClock
+from repro.fault.health import (
+    DOWN,
+    BackoffPolicy,
+    ShardBackoffError,
+    ShardHealth,
+)
+from repro.fault.supervisor import AddressBook
 
 from . import wire
 from .service import shard_for
+
+log = logging.getLogger("repro.history.client")
+
+
+class ClientStats(collections.Counter):
+    """Counter that is also callable: ``client.stats["key"]`` keeps the
+    cheap hot-path counters, ``client.stats()`` returns the full
+    snapshot (counters + per-shard health/backoff/outbox/drop state)."""
+
+    snapshot_fn: Optional[Callable[[], Dict[str, Any]]] = None
+
+    def __call__(self) -> Dict[str, Any]:
+        if self.snapshot_fn is not None:
+            return self.snapshot_fn()
+        return dict(self)
 
 
 class HistoryClient:
@@ -44,16 +82,25 @@ class HistoryClient:
 
     def __init__(
         self,
-        addresses: Sequence[Tuple[str, int]],
+        addresses,
         worker_id: str = "w0",
         n_problems: Optional[int] = None,
         outbox_cap: int = 128,
         rpc_timeout: float = 10.0,
         start_sender: bool = True,
         skip_initial_telemetry: bool = False,
+        backoff: Optional[BackoffPolicy] = None,
+        suspect_after: int = 2,
+        clock: Optional[Clock] = None,
     ) -> None:
-        self.addresses = [tuple(a) for a in addresses]
-        self.n_shards = len(self.addresses)
+        # Addresses resolve through a (possibly shared) AddressBook on
+        # every connect: a supervisor restarting a shard republishes
+        # the new LISTENING address by mutating the book.
+        self._book = (
+            addresses if isinstance(addresses, AddressBook)
+            else AddressBook(list(addresses))
+        )
+        self.n_shards = len(self._book)
         if self.n_shards < 1:
             raise ValueError("HistoryClient needs at least one shard address")
         self.worker_id = str(worker_id)
@@ -64,6 +111,7 @@ class HistoryClient:
         self.n_problems = n_problems
         self.outbox_cap = int(outbox_cap)
         self.rpc_timeout = float(rpc_timeout)
+        self._clock = clock or SystemClock()
         # Fast-forward past telemetry that predates first contact: set
         # by callers that warm their LengthPolicy straight from restored
         # shard snapshots — replaying the shard's persisted telemetry
@@ -83,6 +131,24 @@ class HistoryClient:
         self._tel_cur = [0] * n
         self._gen: List[Optional[str]] = [None] * n
 
+        # Per-shard health (HEALTHY/SUSPECT/DOWN/RESYNCING) + capped
+        # exponential backoff with jitter seeded by the worker id, so
+        # a fleet of clients never probes a dead shard in lockstep.
+        seed = zlib.crc32(self.worker_id.encode("utf-8"))
+        self.health = [
+            ShardHealth(
+                i, clock=self._clock, policy=backoff,
+                suspect_after=suspect_after, seed=seed,
+            )
+            for i in range(n)
+        ]
+        # shard recovered from DOWN -> next sync owes it a hedged pull
+        self._need_resync = [False] * n
+        # outbox-overflow accounting: drops in the current overflow
+        # episode, and drops not yet reported to the shard's telemetry
+        self._drop_episode = [0] * n
+        self._drops_unreported = [0] * n
+
         # replicated pack cache (what the drafter drafts from)
         self._packs: Dict[Any, PackedSuffixTree] = {}
         self._pack_ver: Dict[Any, Tuple[int, int]] = {}
@@ -94,7 +160,8 @@ class HistoryClient:
         self._length_policy = None
         self._tel_store = None
 
-        self.stats: collections.Counter = collections.Counter()
+        self.stats: ClientStats = ClientStats()
+        self.stats.snapshot_fn = self.stats_snapshot
         # bounded: telemetry must not grow with run length (a multi-day
         # run syncs millions of times); the newest window is plenty for
         # percentile reporting
@@ -113,6 +180,10 @@ class HistoryClient:
             )
             self._sender.start()
 
+    @property
+    def addresses(self) -> List[Tuple[str, int]]:
+        return self._book.snapshot()
+
     # -- wiring ------------------------------------------------------------
     def attach(self, length_policy=None, store=None) -> "HistoryClient":
         """Register pooled-telemetry merge targets: remote response
@@ -127,6 +198,16 @@ class HistoryClient:
 
     def shard_of(self, key) -> int:
         return shard_for(key, self.n_shards, self.n_problems)
+
+    # -- health (drafter/rollout-facing) -----------------------------------
+    def shard_state(self, i: int) -> str:
+        return self.health[i].state
+
+    def degraded_for(self, key) -> bool:
+        """True while the shard owning ``key`` is DOWN — the drafter
+        falls back to its local trees for this key (lower acceptance,
+        never a stall, never a token change)."""
+        return self.health[self.shard_of(key)].state == DOWN
 
     # -- publish (fire-and-forget) ----------------------------------------
     def publish_rollout(
@@ -178,6 +259,9 @@ class HistoryClient:
             while len(self._outbox[i]) > self.outbox_cap:
                 self._outbox[i].popleft()  # bounded: oldest history loses
                 self.stats["dropped_batches"] += 1
+                self.stats[f"dropped_batches_s{i}"] += 1
+                self._drop_episode[i] += 1
+                self._drops_unreported[i] += 1
 
     def _sender_loop(self) -> None:
         while True:
@@ -195,8 +279,14 @@ class HistoryClient:
                 self._seal_pending_locked()
             made_progress = False
             for i in range(self.n_shards):
+                if self._outbox[i] and not self.health[i].should_attempt():
+                    # DOWN shard inside its backoff window: keep the
+                    # batches queued; the next pass past the deadline
+                    # probes with ONE reconnect, not one per batch.
+                    continue
                 while self._outbox[i]:
                     batch = self._outbox[i][0]  # peek: pop only on ack
+                    dropped = self._drops_unreported[i]
                     t0 = time.perf_counter()
                     try:
                         self._rpc(i, {
@@ -207,10 +297,16 @@ class HistoryClient:
                             "epoch": batch["epoch"],
                             "rollouts": batch["rollouts"],
                             "drafts": batch["drafts"],
+                            # overflow drops since the last acked batch:
+                            # surfaced in the shard's service telemetry
+                            "dropped": dropped,
                         })
                     except OSError:
+                        # ShardBackoffError ⊂ OSError: backoff kicked in
+                        # mid-drain; either way keep the batch and retry
+                        # after the (next) deadline.
                         self.stats["publish_failures"] += 1
-                        break  # shard down: keep the batch, retry later
+                        break
                     except RuntimeError:
                         # Shard *rejected* the batch (bad request, not a
                         # transport failure): retrying forever would jam
@@ -221,15 +317,32 @@ class HistoryClient:
                             1e3 * (time.perf_counter() - t0)
                         )
                         self.stats["published_batches"] += 1
+                        self._drops_unreported[i] -= dropped
                     made_progress = True
                     with self._cv:
                         # pop by identity: a cap-overflow drop may have
                         # already evicted the in-flight batch
                         if self._outbox[i] and self._outbox[i][0] is batch:
                             self._outbox[i].popleft()
+                        if (
+                            self._drop_episode[i]
+                            and len(self._outbox[i]) < self.outbox_cap
+                        ):
+                            # The shard caught back up: close the
+                            # overflow episode with ONE log line.
+                            n_drop, self._drop_episode[i] = \
+                                self._drop_episode[i], 0
+                            self.stats["overflow_episodes"] += 1
+                            log.warning(
+                                "history client %s: shard %d outbox "
+                                "overflowed; dropped %d oldest publish "
+                                "batch(es) this episode",
+                                self.worker_id, i, n_drop,
+                            )
                         self._cv.notify_all()
             if not made_progress and any(self._outbox):
-                time.sleep(0.05)  # every reachable shard is down: back off
+                # every shard with queued work is down/backed off
+                self._clock.sleep(0.05)
 
     def flush(self, timeout: float = 10.0) -> bool:
         """Block until every pending/outbox publish is acked (tests and
@@ -246,38 +359,71 @@ class HistoryClient:
         return True
 
     # -- rpc ---------------------------------------------------------------
+    def _rpc_once(
+        self, i: int, msg: Dict[str, Any], reconnect: bool = False
+    ) -> Optional[Dict[str, Any]]:
+        sock = self._socks[i]
+        if sock is None:
+            sock = socket.create_connection(
+                self._book.get(i), timeout=self.rpc_timeout
+            )
+            sock.settimeout(self.rpc_timeout)
+            self._socks[i] = sock
+            self.stats["reconnects" if reconnect else "connects"] += 1
+        wire.send_msg(sock, msg)
+        return wire.recv_msg(sock)
+
     def _rpc(self, i: int, msg: Dict[str, Any]) -> Dict[str, Any]:
+        h = self.health[i]
+        if not h.should_attempt():
+            # DOWN inside the backoff window: fail fast, no socket work.
+            self.stats["backoff_skips"] += 1
+            raise ShardBackoffError(
+                f"shard {i} is down; next probe in {h.retry_in():.3f}s"
+            )
         with self._sock_locks[i]:
-            sock = self._socks[i]
+            self.stats["rpc_attempts"] += 1
             try:
-                if sock is None:
-                    sock = socket.create_connection(
-                        self.addresses[i], timeout=self.rpc_timeout
-                    )
-                    sock.settimeout(self.rpc_timeout)
-                    self._socks[i] = sock
-                    self.stats["connects"] += 1
-                wire.send_msg(sock, msg)
-                resp = wire.recv_msg(sock)
+                resp = self._rpc_once(i, msg)
+            except socket.timeout:
+                # Shard accepted but never replied within rpc_timeout:
+                # no immediate retry (it would just double the wait).
+                self.stats["rpc_timeouts"] += 1
+                self._drop_sock(i)
+                h.record_failure()
+                raise
+            except ValueError:
+                # framing error (torn / oversized frame) — transport-
+                # level corruption, same treatment as a lost connection
+                self.stats["frame_errors"] += 1
+                self._drop_sock(i)
+                h.record_failure()
+                raise
             except OSError:
                 self._drop_sock(i)
                 # One immediate reconnect attempt: the common failure is
                 # a server restart that closed an idle connection.
                 try:
-                    sock = socket.create_connection(
-                        self.addresses[i], timeout=self.rpc_timeout
-                    )
-                    sock.settimeout(self.rpc_timeout)
-                    self._socks[i] = sock
-                    self.stats["reconnects"] += 1
-                    wire.send_msg(sock, msg)
-                    resp = wire.recv_msg(sock)
+                    self.stats["rpc_attempts"] += 1
+                    resp = self._rpc_once(i, msg, reconnect=True)
+                except socket.timeout:
+                    self.stats["rpc_timeouts"] += 1
+                    self._drop_sock(i)
+                    h.record_failure()
+                    raise
                 except OSError:
                     self._drop_sock(i)
+                    h.record_failure()
                     raise
             if resp is None:
                 self._drop_sock(i)
+                h.record_failure()
                 raise ConnectionError(f"shard {i} closed the connection")
+            if h.record_success():
+                # first success after DOWN: replica may be stale — owe
+                # this shard a (hedged) resync on the next sync()
+                self.stats["shard_recoveries"] += 1
+                self._need_resync[i] = True
             if not resp.get("ok"):
                 raise RuntimeError(
                     f"shard {i} rejected {msg.get('op')!r}: "
@@ -294,21 +440,30 @@ class HistoryClient:
                 pass
 
     # -- sync (delta replication) -----------------------------------------
+    def _sync_msg(self, i: int) -> Dict[str, Any]:
+        return {
+            "op": "sync", "session": self.session,
+            "origin": self.worker_id,
+            "delta_cursor": self._delta_cur[i],
+            "tel_cursor": self._tel_cur[i],
+        }
+
     def sync(self) -> int:
         """Pull deltas + pooled telemetry from every shard; returns the
         number of packs applied. Failing shards are skipped — transport
-        errors and shard-side rejections alike (the worker drafts from
-        its last replicated state — bounded staleness, never a stall)."""
+        errors and shard-side rejections alike — and DOWN shards inside
+        their backoff window are skipped without any socket work (the
+        worker drafts from its last replicated state — bounded
+        staleness, never a stall)."""
         applied = 0
         for i in range(self.n_shards):
+            h = self.health[i]
+            if not h.should_attempt():
+                self.stats["sync_skips"] += 1
+                continue
             t0 = time.perf_counter()
             try:
-                resp = self._rpc(i, {
-                    "op": "sync", "session": self.session,
-                    "origin": self.worker_id,
-                    "delta_cursor": self._delta_cur[i],
-                    "tel_cursor": self._tel_cur[i],
-                })
+                resp = self._rpc(i, self._sync_msg(i))
                 if resp["gen"] != self._gen[i]:
                     first = self._gen[i] is None
                     self._gen[i] = resp["gen"]
@@ -328,12 +483,7 @@ class HistoryClient:
                         self._tel_cur[i] = min(
                             self._tel_cur[i], int(resp["tel_cursor"])
                         )
-                        resp = self._rpc(i, {
-                            "op": "sync", "session": self.session,
-                            "origin": self.worker_id,
-                            "delta_cursor": 0,
-                            "tel_cursor": self._tel_cur[i],
-                        })
+                        resp = self._rpc(i, self._sync_msg(i))
                     elif self.skip_initial_telemetry:
                         # first contact already used cursor 0 — just
                         # drop the pre-existing telemetry (the caller
@@ -346,6 +496,20 @@ class HistoryClient:
                 self.stats["sync_failures"] += 1
                 continue
             applied += self._apply_sync(i, resp)
+            if self._need_resync[i]:
+                # Hedged first re-sync after a recovery: one extra pull
+                # right away covers deltas racing the probe (e.g. a
+                # restarted shard still republishing restored packs) —
+                # duplicates are version-gated no-ops.
+                self._need_resync[i] = False
+                self.stats["hedged_resyncs"] += 1
+                try:
+                    applied += self._apply_sync(
+                        i, self._rpc(i, self._sync_msg(i))
+                    )
+                except (OSError, RuntimeError, ValueError):
+                    self.stats["sync_failures"] += 1
+            h.resynced()  # RESYNCING -> HEALTHY once a sync lands
             self.latencies["sync_ms"].append(
                 1e3 * (time.perf_counter() - t0)
             )
@@ -419,13 +583,58 @@ class HistoryClient:
             if k not in self._packs:
                 self._empty_asof[k] = self.sync_count
 
+    # -- introspection -----------------------------------------------------
+    def stats_snapshot(self) -> Dict[str, Any]:
+        """Counters + per-shard health/backoff/outbox/drop view (what
+        ``client.stats()`` returns)."""
+        with self._cv:
+            outbox = [len(q) for q in self._outbox]
+            pending = [len(p) for p in self._pending]
+        snap: Dict[str, Any] = dict(self.stats)
+        snap["shards"] = {
+            i: {
+                **self.health[i].snapshot(),
+                "address": tuple(self._book.get(i)),
+                "outbox": outbox[i],
+                "pending_entries": pending[i],
+                "dropped_batches": int(
+                    self.stats.get(f"dropped_batches_s{i}", 0)
+                ),
+            }
+            for i in range(self.n_shards)
+        }
+        return snap
+
     # -- lifecycle ---------------------------------------------------------
-    def close(self, flush_timeout: float = 5.0) -> None:
-        self.flush(timeout=flush_timeout)
+    def close(self, flush_timeout: float = 5.0) -> int:
+        """Flush and shut down. Returns the number of publish batches
+        that could NOT be flushed (0 on a clean close); a non-zero count
+        is also logged per shard — shutdown data loss must be visible,
+        not silently swallowed with ``flush()``'s return value."""
+        flushed = self.flush(timeout=flush_timeout)
         with self._cv:
             self._closed = True
+            unflushed = [
+                len(self._outbox[i]) + (
+                    1 if (self._pending[i]
+                          or self._pending_epoch[i] is not None) else 0
+                )
+                for i in range(self.n_shards)
+            ]
             self._cv.notify_all()
+        total = 0 if flushed else sum(unflushed)
+        if total:
+            for i, n_un in enumerate(unflushed):
+                if n_un:
+                    log.warning(
+                        "history client %s: closing with %d unflushed "
+                        "publish batch(es) for shard %d (%s) — that "
+                        "history is lost",
+                        self.worker_id, n_un, i, self.health[i].state,
+                    )
+            self.stats["unflushed_batches"] += total
         if self._sender is not None:
             self._sender.join(timeout=2.0)
         for i in range(self.n_shards):
             self._drop_sock(i)
+        return total

@@ -34,20 +34,72 @@ history.
 from __future__ import annotations
 
 import json
+import logging
 import os
 from dataclasses import asdict
 from typing import Any, Dict, List, Optional, Sequence
 
 from .store import RolloutHistoryStore
 
+log = logging.getLogger("repro.history.persist")
+
 SCHEMA_VERSION = 2
 LEGACY_SCHEMA_VERSIONS = (1,)
 HISTORY_FILENAME = "history.json"
 MANIFEST_FILENAME = "history_manifest.json"
+QUARANTINE_SUFFIX = ".corrupt"
 
 
 class HistorySchemaError(RuntimeError):
     """Raised when a persisted history blob has the wrong schema."""
+
+
+class HistoryCorruptError(HistorySchemaError):
+    """Raised when a persisted history file is unreadable (truncated /
+    garbled JSON, or not a history payload at all). The offending file
+    has already been quarantined by the time this propagates. Subclasses
+    ``HistorySchemaError``: corrupt bytes are the extreme case of "not a
+    loadable history payload", so callers guarding loads with
+    ``except HistorySchemaError`` keep rejecting them."""
+
+
+def _quarantine(path: str, reason: str) -> str:
+    """Move a corrupt history file aside (``<name>.corrupt``) so the
+    next save — and the next load — start clean, while the bytes stay
+    on disk for post-mortem. Returns the quarantine path."""
+    qpath = path + QUARANTINE_SUFFIX
+    try:
+        os.replace(path, qpath)
+    except OSError:
+        qpath = path  # unremovable (perms?) — leave in place, still loud
+    log.warning(
+        "history file %s is corrupt (%s); quarantined to %s — the shard "
+        "cold-starts and will re-warm from the fleet's rollout stream",
+        path, reason, qpath,
+    )
+    return qpath
+
+
+def _load_checked_json(path: str, *, kind: str = "payload") -> Dict[str, Any]:
+    """Read + schema-check one history JSON file; corrupt bytes or a
+    non-history document quarantine the file and raise
+    ``HistoryCorruptError``. A *well-formed* payload from a FUTURE
+    schema is NOT corruption — it raises ``HistorySchemaError`` and
+    stays on disk untouched (a newer build's valid data must survive a
+    rollback)."""
+    try:
+        with open(path) as f:
+            state = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as exc:
+        _quarantine(path, f"unparseable JSON: {exc}")
+        raise HistoryCorruptError(f"{path}: unparseable {kind}") from exc
+    if not isinstance(state, dict) or "schema_version" not in state:
+        _quarantine(path, "not a history payload (missing schema_version)")
+        raise HistoryCorruptError(
+            f"{path}: not a history {kind} (missing schema_version)"
+        )
+    _check_schema(state, path)  # unknown future schema: raise, no quarantine
+    return state
 
 
 def _check_schema(state: Dict[str, Any], origin: str) -> None:
@@ -212,11 +264,11 @@ def save_history(dir_or_file: str, state: Optional[Dict] = None, **kwargs) -> st
 
 
 def load_history(dir_or_file: str) -> Dict[str, Any]:
-    path = history_path(dir_or_file)
-    with open(path) as f:
-        state = json.load(f)
-    _check_schema(state, path)
-    return state
+    """Load ``<dir>/history.json``. Corrupt bytes (truncated / garbled
+    JSON, or a document that is not a history payload) quarantine the
+    file to ``history.json.corrupt`` and raise ``HistoryCorruptError``;
+    a missing file raises ``FileNotFoundError`` as before."""
+    return _load_checked_json(history_path(dir_or_file), kind="history")
 
 
 # -- sharded service persistence -------------------------------------------
@@ -259,36 +311,63 @@ def save_service_history(
 
 def load_service_history(dir_path: str) -> Dict[str, Any]:
     """Load a sharded history save: ``{"n_shards", "shards": [state...],
-    "meta", "legacy"}``.
+    "meta", "legacy", "quarantined": [path...]}``.
 
     Legacy path: a directory holding only a schema-1 single-store
     ``history.json`` (pre-manifest saves) loads as one shard — the
     service then owns the whole problem space under shard 0 of 1.
+
+    Corruption never takes the fleet down: a corrupt / truncated /
+    missing **shard file** is quarantined (renamed ``*.corrupt``) and
+    its slot loads as ``None`` — ``reshard_states`` / the service
+    cold-start that shard and it re-warms from the live rollout stream.
+    A corrupt **manifest** quarantines and the whole save loads empty
+    (shard files without a trustworthy manifest could belong to any
+    geometry). Only a well-formed payload from an unknown FUTURE schema
+    still raises ``HistorySchemaError`` — that is someone else's valid
+    data, not corruption, and must not be destroyed or half-loaded.
     """
+    quarantined: List[str] = []
     mpath = os.path.join(dir_path, MANIFEST_FILENAME)
     if not os.path.exists(mpath):
-        legacy = load_history(dir_path)  # raises if absent — loudly
+        legacy = load_history(dir_path)  # raises if absent/corrupt — loudly
         return {
             "n_shards": 1, "shards": [legacy],
             "meta": dict(legacy.get("meta", {})), "legacy": True,
+            "quarantined": quarantined,
         }
-    with open(mpath) as f:
-        manifest = json.load(f)
-    _check_schema(manifest, mpath)
-    if manifest.get("kind") != "history_manifest":
-        raise HistorySchemaError(f"{mpath}: not a history manifest")
-    states = []
+    try:
+        manifest = _load_checked_json(mpath, kind="manifest")
+        if manifest.get("kind") != "history_manifest":
+            _quarantine(mpath, f"kind={manifest.get('kind')!r}")
+            raise HistoryCorruptError(f"{mpath}: not a history manifest")
+    except HistoryCorruptError:
+        # No trustworthy shard list -> empty (cold) fleet, loud log.
+        quarantined.append(mpath + QUARANTINE_SUFFIX)
+        return {
+            "n_shards": 0, "shards": [], "meta": {}, "legacy": False,
+            "quarantined": quarantined,
+        }
+    states: List[Optional[Dict[str, Any]]] = []
     for entry in manifest["shards"]:
         spath = os.path.join(dir_path, entry["file"])
-        with open(spath) as f:
-            state = json.load(f)
-        _check_schema(state, spath)
-        states.append(state)
+        try:
+            states.append(_load_checked_json(spath, kind="shard snapshot"))
+        except FileNotFoundError:
+            log.warning(
+                "history shard file %s listed in manifest is missing; "
+                "shard %s cold-starts", spath, entry.get("shard_id"),
+            )
+            states.append(None)
+        except HistoryCorruptError:
+            quarantined.append(spath + QUARANTINE_SUFFIX)
+            states.append(None)
     return {
         "n_shards": int(manifest["n_shards"]),
         "shards": states,
         "meta": dict(manifest.get("meta", {})),
         "legacy": False,
+        "quarantined": quarantined,
     }
 
 

@@ -43,9 +43,12 @@ import hashlib
 import os
 import socket
 import threading
-from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+import time
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.fault.supervisor import AddressBook
 
 from . import wire
 from .incremental import IncrementalIndex, apply_rollout
@@ -129,15 +132,21 @@ def reshard_states(
     """
     states = list(states)
     n_shards = int(n_shards)
+    # None entries are quarantined (corrupt) shard files: with unchanged
+    # geometry they pass through and that shard cold-starts; otherwise
+    # the surviving shards merge and re-route as usual.
+    present = [st for st in states if st is not None]
     if len(states) == n_shards and all(
-        int(st.get("n_shards", -1)) == n_shards for st in states
+        int(st.get("n_shards", -1)) == n_shards for st in present
     ):
         return states
-    merged = merge_store_states(states)
+    if not present:
+        return [None] * n_shards
+    merged = merge_store_states(present)
     buckets: List[List] = [[] for _ in range(n_shards)]
     for key, log in merged["problems"]:
         buckets[shard_for(key, n_shards, n_problems)].append([key, log])
-    decay = _state_decay(states[0]) if states else 0.9
+    decay = _state_decay(present[0])
     return [
         {
             "schema_version": SHARD_SCHEMA_VERSION,
@@ -204,6 +213,7 @@ class HistoryShard:
         rollouts: Sequence[Dict[str, Any]] = (),
         drafts: Sequence[Dict[str, Any]] = (),
         epoch: Optional[int] = None,
+        dropped: int = 0,
     ) -> Dict[str, Any]:
         """Apply one publish batch (idempotent per ``(session, seq)``)."""
         if seq is not None:
@@ -212,6 +222,12 @@ class HistoryShard:
                 self.stats["dup_batches"] += 1
                 return {"ok": True, "dup": True}
             self._last_pub[session] = int(seq)
+        if dropped:
+            # Outbox-overflow drops the client reported with this batch.
+            # Counted only on fresh (non-dup) batches: the client clears
+            # its unreported counter exactly when this batch acks, so a
+            # lost-reply resend never double-counts.
+            self.stats["client_dropped_batches"] += int(dropped)
         if epoch is not None:
             self._begin_epoch(int(epoch))
         for r in rollouts:
@@ -364,12 +380,23 @@ class HistoryShard:
 
 # -- socket server ----------------------------------------------------------
 class ShardServer:
-    """Thread-per-connection RPC server around one ``HistoryShard``."""
+    """Thread-per-connection RPC server around one ``HistoryShard``.
+
+    ``fault_hook`` is the chaos-suite injection point (see
+    ``repro.fault.inject.FaultPlan.server_hook``): called with the op
+    name after every handled request, it may return ``"kill"`` (stop the
+    server without replying — a crash mid-RPC), ``"drop"`` (close this
+    connection without replying), ``"truncate"`` (send a torn frame), or
+    ``("delay", seconds)`` (reply late). ``None`` (the default, and the
+    only value in production) replies normally.
+    """
 
     def __init__(
-        self, shard: HistoryShard, host: str = "127.0.0.1", port: int = 0
+        self, shard: HistoryShard, host: str = "127.0.0.1", port: int = 0,
+        fault_hook: Optional[Callable[[str], Any]] = None,
     ) -> None:
         self.shard = shard
+        self.fault_hook = fault_hook
         self._lock = threading.RLock()  # serializes all shard access
         self._lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -390,8 +417,11 @@ class ShardServer:
         return self
 
     def _accept_loop(self) -> None:
-        self._lsock.settimeout(0.2)
         try:
+            # settimeout races stop() closing the listener (a server
+            # killed immediately after start): that is a clean shutdown,
+            # not a thread crash.
+            self._lsock.settimeout(0.2)
             while not self._stop.is_set():
                 try:
                     sock, _ = self._lsock.accept()
@@ -404,6 +434,8 @@ class ShardServer:
                 threading.Thread(
                     target=self._serve_conn, args=(sock,), daemon=True
                 ).start()
+        except OSError:
+            pass  # listener closed under us mid-setup
         finally:
             try:
                 self._lsock.close()
@@ -417,7 +449,25 @@ class ShardServer:
                 msg = wire.recv_msg(sock)
                 if msg is None:
                     break
-                wire.send_msg(sock, self._handle(msg))
+                resp = self._handle(msg)
+                # Fault injection AFTER the handler: the shard applied
+                # the request but the client never learns — exercising
+                # the resend/dedup path, not just clean failures.
+                action = (
+                    self.fault_hook(msg.get("op"))
+                    if self.fault_hook is not None else None
+                )
+                if action == "kill":
+                    self.stop()
+                    break
+                if action == "drop":
+                    break
+                if action == "truncate":
+                    wire.send_truncated(sock, resp)
+                    break
+                if isinstance(action, tuple) and action[0] == "delay":
+                    time.sleep(float(action[1]))
+                wire.send_msg(sock, resp)
                 if msg.get("op") == "stop":
                     self.stop()
                     break
@@ -445,6 +495,7 @@ class ShardServer:
                         rollouts=msg.get("rollouts", ()),
                         drafts=msg.get("drafts", ()),
                         epoch=msg.get("epoch"),
+                        dropped=msg.get("dropped", 0) or 0,
                     )
                 if op == "sync":
                     return self.shard.sync(
@@ -478,28 +529,72 @@ class ShardServer:
 
 
 # -- service launcher -------------------------------------------------------
+def _spawn_shard_subprocess(i: int, spec: Dict[str, Any]):
+    """Launch one shard child per ``spec`` (also the respawn path):
+    returns ``(proc, (host, port))`` once the child prints LISTENING."""
+    import subprocess
+    import sys
+
+    cmd = [
+        sys.executable, "-m", "repro.history.service",
+        "--shard-id", str(i), "--n-shards", str(spec["n_shards"]),
+        "--window-size", str(spec["window_size"]),
+        "--epoch-decay", str(spec["epoch_decay"]),
+    ]
+    if spec.get("load_dir"):
+        cmd += ["--load", spec["load_dir"]]
+    env = dict(os.environ)
+    src_dir = os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))
+    ))
+    env["PYTHONPATH"] = src_dir + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, text=True, env=env)
+    line = proc.stdout.readline().strip()
+    parts = line.split()
+    if len(parts) != 3 or parts[0] != "LISTENING":
+        proc.terminate()
+        raise RuntimeError(
+            f"history shard {i} failed to start (got {line!r})"
+        )
+    return proc, (parts[1], int(parts[2]))
+
+
 class HistoryService:
     """Launcher/handle for a set of shards (in-process or subprocess).
 
     ``addresses`` (one ``(host, port)`` per shard, shard order) is the
-    only thing a ``HistoryClient`` needs.
+    only thing a ``HistoryClient`` needs; handing the client ``book``
+    instead additionally republishes restarted shards' new addresses
+    live. ``shard_alive``/``respawn_shard`` are the hooks a
+    ``repro.fault.ShardSupervisor`` drives.
     """
 
     def __init__(
         self,
-        addresses: List[Tuple[str, int]],
+        addresses,
         servers: Optional[List[ShardServer]] = None,
         procs: Optional[List] = None,
         n_problems: Optional[int] = None,
+        spawn_spec: Optional[Dict[str, Any]] = None,
     ) -> None:
-        self.addresses = [tuple(a) for a in addresses]
+        self.book = (
+            addresses if isinstance(addresses, AddressBook)
+            else AddressBook([tuple(a) for a in addresses])
+        )
         self.servers = servers or []
         self.procs = procs or []
         self.n_problems = n_problems
+        self.closed = False
+        # How the shards were spawned — enough to respawn one in kind.
+        self._spec = dict(spawn_spec or {})
+
+    @property
+    def addresses(self) -> List[Tuple[str, int]]:
+        return self.book.snapshot()
 
     @property
     def n_shards(self) -> int:
-        return len(self.addresses)
+        return len(self.book)
 
     # -- spawning ----------------------------------------------------------
     @classmethod
@@ -510,16 +605,19 @@ class HistoryService:
         epoch_decay: float = 0.9,
         states: Optional[Sequence[Dict[str, Any]]] = None,
         n_problems: Optional[int] = None,
+        fault_hooks: Optional[Sequence] = None,
     ) -> "HistoryService":
         """Shards as daemon threads in this process (tests, trainer)."""
         if states is not None:
             # adapt to the current geometry: a shard-count change (or a
             # legacy single-store payload) re-routes every problem log
-            # through the current shard map
+            # through the current shard map; None entries (quarantined
+            # shard files) cold-start
             states = reshard_states(states, n_shards, n_problems)
         servers = []
         for i in range(int(n_shards)):
-            if states is not None and i < len(states):
+            if states is not None and i < len(states) \
+                    and states[i] is not None:
                 shard = HistoryShard.from_state(states[i])
                 shard.shard_id, shard.n_shards = i, int(n_shards)
             else:
@@ -527,10 +625,15 @@ class HistoryService:
                     shard_id=i, n_shards=int(n_shards),
                     window_size=window_size, epoch_decay=epoch_decay,
                 )
-            servers.append(ShardServer(shard).start())
+            hook = fault_hooks[i] if fault_hooks is not None else None
+            servers.append(ShardServer(shard, fault_hook=hook).start())
         return cls(
             [s.address for s in servers], servers=servers,
             n_problems=n_problems,
+            spawn_spec={
+                "mode": "thread", "window_size": int(window_size),
+                "epoch_decay": float(epoch_decay),
+            },
         )
 
     @classmethod
@@ -544,37 +647,70 @@ class HistoryService:
     ) -> "HistoryService":
         """Shards as subprocesses (real runs): each child binds port 0
         and reports ``LISTENING host port`` on stdout."""
-        import subprocess
-        import sys
-
+        spec = {
+            "mode": "subprocess", "n_shards": int(n_shards),
+            "window_size": int(window_size),
+            "epoch_decay": float(epoch_decay),
+            "load_dir": load_dir or None,
+        }
         procs, addresses = [], []
         for i in range(int(n_shards)):
-            cmd = [
-                sys.executable, "-m", "repro.history.service",
-                "--shard-id", str(i), "--n-shards", str(n_shards),
-                "--window-size", str(window_size),
-                "--epoch-decay", str(epoch_decay),
-            ]
-            if load_dir:
-                cmd += ["--load", load_dir]
-            env = dict(os.environ)
-            src_dir = os.path.dirname(os.path.dirname(
-                os.path.dirname(os.path.abspath(__file__))
-            ))
-            env["PYTHONPATH"] = src_dir + os.pathsep + env.get("PYTHONPATH", "")
-            proc = subprocess.Popen(
-                cmd, stdout=subprocess.PIPE, text=True, env=env
-            )
-            line = proc.stdout.readline().strip()
-            parts = line.split()
-            if len(parts) != 3 or parts[0] != "LISTENING":
-                proc.terminate()
-                raise RuntimeError(
-                    f"history shard {i} failed to start (got {line!r})"
-                )
+            proc, addr = _spawn_shard_subprocess(i, spec)
             procs.append(proc)
-            addresses.append((parts[1], int(parts[2])))
-        return cls(addresses, procs=procs, n_problems=n_problems)
+            addresses.append(addr)
+        return cls(
+            addresses, procs=procs, n_problems=n_problems, spawn_spec=spec
+        )
+
+    # -- supervision -------------------------------------------------------
+    def shard_alive(self, i: int) -> bool:
+        """Liveness of shard ``i``: listener thread still accepting
+        (thread mode) / child process running (subprocess mode). An
+        address-only handle has no liveness signal and reports True."""
+        if self.servers:
+            return not self.servers[i].stopped.is_set()
+        if self.procs:
+            return self.procs[i].poll() is None
+        return True
+
+    def respawn_shard(
+        self, i: int, state: Optional[Dict[str, Any]] = None
+    ) -> Tuple[str, int]:
+        """Replace a dead shard and republish its new address through
+        ``book`` (every client resolves addresses there on reconnect).
+
+        Thread mode restarts **warm** by default: the dead server's
+        shard state machine is still in memory, so its snapshot — trees,
+        telemetry log, and the per-session publish-dedup cursors —
+        seeds the replacement, which means outbox batches the fleet
+        resends stay exactly-once. The fresh ``generation`` still forces
+        a client full resync. Subprocess restarts re-run the original
+        spawn spec (cold, or warm from its ``load_dir``); pass ``state``
+        to override either.
+        """
+        if self.servers:
+            old = self.servers[i]
+            old.stop()
+            st = state if state is not None else old.shard.state_dict()
+            shard = HistoryShard.from_state(st)
+            shard.shard_id, shard.n_shards = i, self.n_shards
+            server = ShardServer(shard, fault_hook=old.fault_hook).start()
+            self.servers[i] = server
+            self.book.set(i, server.address)
+            return server.address
+        if self.procs:
+            try:
+                self.procs[i].terminate()
+                self.procs[i].wait(timeout=2.0)
+            except Exception:
+                pass
+            proc, addr = _spawn_shard_subprocess(i, self._spec)
+            self.procs[i] = proc
+            self.book.set(i, addr)
+            return addr
+        raise RuntimeError(
+            "cannot respawn a shard on an address-only service handle"
+        )
 
     # -- management --------------------------------------------------------
     def _rpc(self, address: Tuple[str, int], msg: Dict[str, Any]) -> Dict:
@@ -608,6 +744,7 @@ class HistoryService:
         )
 
     def stop(self) -> None:
+        self.closed = True  # tells any supervisor to stand down
         for s in self.servers:
             s.stop()
         for p in self.procs:
@@ -654,7 +791,7 @@ def main() -> None:
             persist.load_service_history(args.load)["shards"],
             args.n_shards,
         )
-        if args.shard_id < len(states):
+        if args.shard_id < len(states) and states[args.shard_id] is not None:
             shard = HistoryShard.from_state(states[args.shard_id])
             shard.shard_id = args.shard_id
             shard.n_shards = args.n_shards

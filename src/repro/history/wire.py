@@ -118,6 +118,16 @@ def send_msg(sock: socket.socket, obj: Any) -> None:
     sock.sendall(struct.pack(">I", len(payload)) + payload)
 
 
+def send_truncated(sock: socket.socket, obj: Any, keep: float = 0.5) -> None:
+    """Fault-injection only: send a header promising the full payload
+    but deliver a prefix, then let the caller close the socket — the
+    peer's ``_recv_exact`` sees EOF mid-frame (a torn frame), exactly
+    what a server crash between ``sendall`` calls produces."""
+    payload = dumps(obj)
+    cut = max(0, min(len(payload) - 1, int(len(payload) * float(keep))))
+    sock.sendall(struct.pack(">I", len(payload)) + payload[:cut])
+
+
 def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
     buf = bytearray()
     while len(buf) < n:

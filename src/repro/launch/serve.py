@@ -83,6 +83,12 @@ def main() -> None:
                     choices=["process", "thread"],
                     help="spawn shards as subprocesses (real runs) or "
                          "in-process threads (debug)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run a shard supervisor: dead shards restart "
+                         "with backoff and republish their addresses")
+    ap.add_argument("--watchdog-deadline", type=float, default=120.0,
+                    help="per-worker rollout watchdog deadline in "
+                         "seconds (0 disables the watchdog)")
     args = ap.parse_args()
     if args.save_history and not args.history_dir:
         ap.error("--save-history requires --history-dir")
@@ -198,6 +204,11 @@ def _serve_with_service(args, cfg, params) -> None:
             f"{args.history_dir}"
             + (" (legacy single-store payload)" if loaded["legacy"] else "")
         )
+        if loaded.get("quarantined"):
+            print(
+                f"quarantined {len(loaded['quarantined'])} corrupt "
+                f"history file(s); affected shards cold-start"
+            )
     if args.service_mode == "thread":
         svc = HistoryService.spawn_in_process(
             args.shards, window_size=16, states=states
@@ -211,11 +222,22 @@ def _serve_with_service(args, cfg, params) -> None:
     # publishing regressed epochs would decay the session's own rollouts
     # into near-invisibility against the warm trees.
     epoch0 = max(
-        (int(st["store"]["epoch"]) for st in states or []), default=0
+        (int(st["store"]["epoch"]) for st in states or []
+         if st is not None),
+        default=0,
     )
+    supervisor = None
+    if args.supervise:
+        from repro.fault.supervisor import ShardSupervisor
+
+        supervisor = ShardSupervisor(svc, seed=0)
+        supervisor.start(interval_s=1.0)
+    watchdogs = []
     engines, clients = [], []
     for w in range(args.workers):
-        client = HistoryClient(svc.addresses, worker_id=f"w{w}")
+        # svc.book is live: a supervised restart republishes the new
+        # shard address to every client without reconstructing them.
+        client = HistoryClient(svc.book, worker_id=f"w{w}")
         engines.append(SpecEngine(
             params, cfg,
             EngineConfig(spec_enabled=True, max_new_tokens=32, eos_token=1,
@@ -227,6 +249,12 @@ def _serve_with_service(args, cfg, params) -> None:
         ))
         engines[-1].epoch = engines[-1].drafter.epoch = epoch0
         clients.append(client)
+        if args.watchdog_deadline > 0:
+            from repro.fault.watchdog import RolloutWatchdog
+
+            watchdogs.append(RolloutWatchdog(args.watchdog_deadline))
+        else:
+            watchdogs.append(None)
     print(
         f"history service: {args.shards} shard(s) "
         f"[{args.service_mode}] x {args.workers} worker(s) at "
@@ -249,7 +277,8 @@ def _serve_with_service(args, cfg, params) -> None:
                     )
                     pids.append(f"q{seed}")
                 outs, st = eng.generate(
-                    prompts, pids, key=jax.random.key(rnd * 31 + w)
+                    prompts, pids, key=jax.random.key(rnd * 31 + w),
+                    watchdog=watchdogs[w],
                 )
                 clients[w].flush()
                 fwd += st.n_fwd
@@ -268,6 +297,10 @@ def _serve_with_service(args, cfg, params) -> None:
             path = svc.save(args.history_dir)
             print(f"saved sharded history manifest -> {path}")
     finally:
+        if supervisor is not None:
+            # stop before the service so the restart loop never races
+            # an intentional shutdown
+            supervisor.stop()
         for c in clients:
             c.close()
         svc.stop()

@@ -17,6 +17,8 @@ stragglers mid-rollout. Outputs are token-identical at temperature 0.
 
 from __future__ import annotations
 
+import collections
+import logging
 import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -27,7 +29,10 @@ import numpy as np
 from repro.core.spec_engine import RolloutStats, SpecEngine
 from repro.data.tasks import Problem, Task
 from repro.data.tokenizer import PAD
+from repro.fault.watchdog import StallError
 from repro.rl.grpo import group_advantages
+
+log = logging.getLogger("repro.rl.rollout")
 
 
 @dataclass
@@ -69,12 +74,18 @@ class RolloutWorker:
         *,
         continuous: bool = False,
         slots: Optional[int] = None,
+        watchdog=None,
     ):
         self.engine = engine
         self.task = task
         self.G = group_size
         self.continuous = continuous
         self.slots = slots  # pool size; None = one slot per request
+        # Optional repro.fault.RolloutWatchdog: deadlines this worker's
+        # verify rounds; a stall raises StallError out of rollout(),
+        # which the fault-tolerant MultiWorkerRollout turns into a
+        # re-queue to the surviving workers.
+        self.watchdog = watchdog
 
     def rollout(
         self,
@@ -96,11 +107,13 @@ class RolloutWorker:
                 prompts, pids, slots=self.slots,
                 max_new_tokens=max_new_tokens, key=key,
                 collect_effective_batch=collect_effective_batch,
+                watchdog=self.watchdog,
             )
         else:
             outs, stats = self.engine.generate(
                 prompts, pids, max_new_tokens=max_new_tokens, key=key,
                 collect_effective_batch=collect_effective_batch,
+                watchdog=self.watchdog,
             )
         gen_time = time.perf_counter() - t0
         rewards = np.array(
@@ -159,9 +172,33 @@ class MultiWorkerRollout:
     The merged ``RolloutBatch`` is in the original request order with
     group advantages recomputed over the merged rewards, so the trainer
     cannot tell it from a single-worker batch.
+
+    With ``fault_tolerant=True`` a worker that stalls (``StallError``
+    from its watchdog), dies mid-slice, or loses its shards does not
+    sink the step: the worker is expired for this call and its slice
+    re-queues — with the slice's ORIGINAL sampling key — to a survivor,
+    so at T=0 the merged batch is token-identical to the no-failure run
+    (greedy verification makes outputs worker-independent; at T>0 the
+    sampling stream is slice-bound, so determinism per slice holds
+    too). A ``supervisor`` (``repro.fault.ShardSupervisor``) is polled
+    once per call and after every failure, so dead shards restart at
+    step granularity even without the background supervision thread.
+    The only residual effect of a mid-slice failure is duplicate
+    publishes from the dead worker's completed rows — which the shards
+    dedup, and which could only influence drafting (acceptance), never
+    verified tokens.
     """
 
-    def __init__(self, workers: Sequence[RolloutWorker], rotate: bool = True):
+    def __init__(
+        self,
+        workers: Sequence[RolloutWorker],
+        rotate: bool = True,
+        *,
+        fault_tolerant: bool = False,
+        supervisor=None,
+        flush_timeout: float = 10.0,
+        flush_retries: int = 3,
+    ):
         if not workers:
             raise ValueError("MultiWorkerRollout needs >= 1 worker")
         gs = {w.G for w in workers}
@@ -170,6 +207,11 @@ class MultiWorkerRollout:
         self.workers = list(workers)
         self.G = self.workers[0].G
         self.rotate = bool(rotate)
+        self.fault_tolerant = bool(fault_tolerant)
+        self.supervisor = supervisor
+        self.flush_timeout = float(flush_timeout)
+        self.flush_retries = int(flush_retries)
+        self.stats: collections.Counter = collections.Counter()
         self._calls = 0
 
     @property
@@ -179,13 +221,30 @@ class MultiWorkerRollout:
 
     def _flush_worker(self, worker: RolloutWorker) -> None:
         remote = worker.engine.drafter.remote
-        if remote is not None and not remote.flush():
+        if remote is None or remote.flush(timeout=self.flush_timeout):
+            return
+        if not self.fault_tolerant:
             # The barrier is what keeps shard trees oracle-identical;
             # proceeding with unacked publishes would silently diverge.
             raise RuntimeError(
                 "history-service publish flush timed out: a shard is "
                 "unreachable and the epoch barrier cannot be enforced"
             )
+        # Fault-tolerant: force-restart dead shards between attempts
+        # (the client's outbox resends, shards dedup), then degrade —
+        # a weaker barrier only staggers when peers see this worker's
+        # history, which affects drafting, never tokens.
+        for _ in range(self.flush_retries):
+            if self.supervisor is not None:
+                self.supervisor.poll(force=True)
+            if remote.flush(timeout=self.flush_timeout):
+                return
+        self.stats["degraded_flushes"] += 1
+        log.warning(
+            "publish flush still timing out after %d shard-restart "
+            "attempts; continuing with a degraded epoch barrier (peers "
+            "see this worker's rollouts late)", self.flush_retries,
+        )
 
     def rollout(
         self,
@@ -204,18 +263,52 @@ class MultiWorkerRollout:
         for j, p in enumerate(problems):
             assign[(j + off) % N].append(j)
         keys = jax.random.split(key, N)
-        parts: List[Optional[RolloutBatch]] = [None] * N
-        for w, idxs in enumerate(assign):
-            if not idxs:
+        if self.supervisor is not None:
+            self.supervisor.poll()  # restart dead shards before the step
+        # Work queue of (worker, slice, slice key): a failed worker's
+        # slice goes back on the queue addressed to a survivor.
+        queue = collections.deque(
+            (w, idxs, keys[w]) for w, idxs in enumerate(assign) if idxs
+        )
+        expired: set = set()
+        slices: List[Tuple[List[int], RolloutBatch]] = []
+        while queue:
+            w, idxs, wkey = queue.popleft()
+            try:
+                part = self.workers[w].rollout(
+                    [problems[j] for j in idxs], key=wkey,
+                    max_new_tokens=max_new_tokens,
+                    collect_effective_batch=collect_effective_batch,
+                )
+            except (StallError, RuntimeError, OSError) as exc:
+                # StallError: watchdog expired the worker. RuntimeError/
+                # OSError: the worker's engine or its service connection
+                # died mid-slice.
+                if not self.fault_tolerant:
+                    raise
+                expired.add(w)
+                self.stats["worker_failures"] += 1
+                survivors = [v for v in range(N) if v not in expired]
+                if not survivors:
+                    raise  # nobody left to hand the work to
+                if self.supervisor is not None:
+                    # the root cause may be a dead shard, not the worker
+                    self.supervisor.poll()
+                # Re-queue under the slice's ORIGINAL key: outputs stay
+                # identical at T=0 regardless of executor, and at T>0
+                # the sampling stream follows the slice, not the worker.
+                v = survivors[w % len(survivors)]
+                queue.append((v, idxs, wkey))
+                self.stats["requeued_problems"] += len(idxs)
+                log.warning(
+                    "rollout worker %d expired (%s); re-queued %d "
+                    "problem(s) to worker %d", w, exc, len(idxs), v,
+                )
                 continue
-            parts[w] = self.workers[w].rollout(
-                [problems[j] for j in idxs], key=keys[w],
-                max_new_tokens=max_new_tokens,
-                collect_effective_batch=collect_effective_batch,
-            )
             # Epoch barrier semantics: the next worker (and the next
             # trainer step) must see these rollouts on the shards.
             self._flush_worker(self.workers[w])
+            slices.append((idxs, part))
 
         # -- reassemble in original problem order --------------------------
         G = self.G
@@ -223,8 +316,7 @@ class MultiWorkerRollout:
         rewards = np.zeros(len(problems) * G, np.float32)
         probs: List[Problem] = [None] * (len(problems) * G)
         prompts: List[List[int]] = [None] * (len(problems) * G)
-        for w, idxs in enumerate(assign):
-            part = parts[w]
+        for idxs, part in slices:
             for local, j in enumerate(idxs):
                 for g in range(G):
                     src = local * G + g
@@ -235,9 +327,7 @@ class MultiWorkerRollout:
                     prompts[dst] = list(problems[j].prompt)
         adv = group_advantages(rewards, G)
         tokens, resp_mask = pack_train_arrays(prompts, outs)
-        stats = merge_rollout_stats(
-            [p.stats for p in parts if p is not None]
-        )
+        stats = merge_rollout_stats([part.stats for _, part in slices])
         stats.per_row_emitted = np.array([len(o) for o in outs])
         return RolloutBatch(
             tokens=tokens,

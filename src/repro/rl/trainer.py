@@ -69,6 +69,15 @@ class TrainerConfig:
     # worker's rollouts. history_shards sets the shard count.
     n_workers: int = 1
     history_shards: int = 2
+    # Fault tolerance (n_workers > 1): a ShardSupervisor restarts dead
+    # shards (and republishes their addresses), per-worker watchdogs
+    # deadline stuck verify rounds, and MultiWorkerRollout re-queues an
+    # expired worker's slice to survivors (token-identical at T=0).
+    fault_tolerant: bool = False
+    watchdog_deadline_s: float = 60.0
+    # Background supervision poll interval; 0 disables the thread (the
+    # rollout layer still polls once per step and on every failure).
+    supervise_interval_s: float = 1.0
 
 
 class Trainer:
@@ -91,6 +100,7 @@ class Trainer:
         tcfg.engine.temperature = tcfg.temperature
         tcfg.engine.max_new_tokens = tcfg.max_new_tokens
         self.service = None  # sharded history service (n_workers > 1)
+        self.supervisor = None  # shard supervisor (fault_tolerant)
         self._clients = []
         self._build_workers()
         self.loader = PromptLoader(task, tcfg.prompts_per_step, seed=tcfg.seed)
@@ -157,11 +167,19 @@ class Trainer:
                 for key, d in st["store"]["problems"]
                 if d["lengths"]
             ]
+        if tcfg.fault_tolerant:
+            from repro.fault import ShardSupervisor
+
+            self.supervisor = ShardSupervisor(self.service, seed=tcfg.seed)
+            if tcfg.supervise_interval_s > 0:
+                self.supervisor.start(tcfg.supervise_interval_s)
         self.engines = []
         self._clients = []
         for w in range(tcfg.n_workers):
             client = HistoryClient(
-                self.service.addresses, worker_id=f"w{w}",
+                # the service's live AddressBook: a supervisor restart
+                # republishes the new shard address to every client
+                self.service.book, worker_id=f"w{w}",
                 n_problems=self.service.n_problems,
                 # warm_lengths already carries the fleet's telemetry;
                 # replaying the shards' persisted telemetry logs on top
@@ -180,14 +198,33 @@ class Trainer:
             self._clients.append(client)
             self.engines.append(eng)
         self.engine = self.engines[0]
-        self.worker = MultiWorkerRollout([
-            RolloutWorker(e, self.task, tcfg.group_size)
-            for e in self.engines
-        ])
+        if tcfg.fault_tolerant:
+            from repro.fault import RolloutWatchdog
+
+            workers = [
+                RolloutWorker(
+                    e, self.task, tcfg.group_size,
+                    watchdog=RolloutWatchdog(tcfg.watchdog_deadline_s),
+                )
+                for e in self.engines
+            ]
+            self.worker = MultiWorkerRollout(
+                workers, fault_tolerant=True, supervisor=self.supervisor
+            )
+        else:
+            self.worker = MultiWorkerRollout([
+                RolloutWorker(e, self.task, tcfg.group_size)
+                for e in self.engines
+            ])
 
     def close(self) -> None:
         """Stop the history service and its clients (no-op when
         single-worker)."""
+        if self.supervisor is not None:
+            # stand down BEFORE the service stops: a supervisor racing
+            # shutdown would "restart" deliberately stopped shards
+            self.supervisor.stop()
+            self.supervisor = None
         for c in self._clients:
             try:
                 c.close()
