@@ -59,6 +59,7 @@ def make_engine(
     temperature: float = 0.0,
     epoch_decay: float = 0.9,
     fuse_rounds: str = "auto",
+    telemetry=None,
 ) -> SpecEngine:
     return SpecEngine(
         params, cfg,
@@ -75,6 +76,7 @@ def make_engine(
             )
         ),
         length_policy=LengthPolicy(),
+        telemetry=telemetry,
     )
 
 

@@ -4,7 +4,16 @@ The adaptive drafter refreshes from recent rollouts every iteration; the
 static baseline is frozen after epoch 0 (a stand-in for a pre-trained
 neural drafter that is never re-calibrated). Acceptance of the adaptive
 drafter grows with training; the static one stays flat/decays as the
-policy drifts."""
+policy drifts.
+
+Acceptance accounting comes from the engines' ``repro.obs`` telemetry:
+each engine gets its own ``Telemetry`` and the per-epoch acceptance is
+the registry counter delta (``das_tokens_accepted_total`` /
+``das_fwd_total``) over that epoch's rollout — the same counters the
+``/metrics`` endpoint exports, so the figure and a live scrape can
+never disagree. The adaptive engine additionally reports acceptance by
+``LengthPolicy`` class (``das_accepted_tokens{length_class}``) and
+per-problem acceptance drift (``das_problem_acceptance``)."""
 
 from __future__ import annotations
 
@@ -12,7 +21,18 @@ import jax
 import numpy as np
 
 from benchmarks.common import make_engine, make_params, make_task, row
+from repro import obs
+from repro.core.length_policy import CLASS_NAMES
 from repro.rl.rollout import RolloutWorker
+
+
+def _epoch_acceptance(reg, prev):
+    """Accepted-per-forward over the counter delta since ``prev``;
+    returns (value, new_cursor)."""
+    acc = reg.value("das_tokens_accepted_total")
+    fwd = reg.value("das_fwd_total")
+    d_acc, d_fwd = acc - prev[0], fwd - prev[1]
+    return d_acc / max(d_fwd, 1.0), (acc, fwd)
 
 
 def run(quick: bool = True):
@@ -22,12 +42,14 @@ def run(quick: bool = True):
     probs = task.problems()
     n_epochs = 4 if quick else 8
 
-    adaptive = make_engine(p0, spec=True, max_new=32)
-    static = make_engine(p0, spec=True, max_new=32)
+    tel_a, tel_s = obs.Telemetry(), obs.Telemetry()
+    adaptive = make_engine(p0, spec=True, max_new=32, telemetry=tel_a)
+    static = make_engine(p0, spec=True, max_new=32, telemetry=tel_s)
     wa = RolloutWorker(adaptive, task, group_size=1)
     ws = RolloutWorker(static, task, group_size=1)
 
     acc_a, acc_s = [], []
+    cur_a = cur_s = (0.0, 0.0)
     for e in range(n_epochs):
         t = e / max(n_epochs - 1, 1) * 0.3
         params = jax.tree.map(lambda a, b: (1 - t) * a + t * b, p0, p1)
@@ -37,15 +59,33 @@ def run(quick: bool = True):
         # static: freeze the drafter after its first epoch of history
         if e <= 1:
             static.begin_iteration(e)
-        ba = wa.rollout(probs, key=jax.random.key(7 + e))
-        bs = ws.rollout(probs, key=jax.random.key(7 + e))
-        acc_a.append(ba.stats.mean_accepted_per_fwd)
-        acc_s.append(bs.stats.mean_accepted_per_fwd)
-        if e >= 1 and not quick:
-            pass
+        wa.rollout(probs, key=jax.random.key(7 + e))
+        ws.rollout(probs, key=jax.random.key(7 + e))
+        va, cur_a = _epoch_acceptance(tel_a.registry, cur_a)
+        vs, cur_s = _epoch_acceptance(tel_s.registry, cur_s)
+        acc_a.append(va)
+        acc_s.append(vs)
         # the static drafter stops observing new rollouts after epoch 1
         if e >= 1:
             static.drafter.observe_rollout = lambda *a, **k: None
+
+    # Accepted tokens per round by LengthPolicy class, adaptive engine
+    # (the das_accepted_tokens histograms the /metrics endpoint serves).
+    by_class = []
+    for name in CLASS_NAMES:
+        h = tel_a.registry.get(
+            "das_accepted_tokens", (("length_class", name),)
+        )
+        if h is not None and h.count:
+            by_class.append(f"{name}={h.mean:.2f}(n={h.count})")
+    # Per-problem acceptance drift gauges (export-time callbacks).
+    drift = []
+    for (nm, _help, fns) in tel_a.registry.callbacks():
+        if nm != "das_problem_acceptance":
+            continue
+        for fn in fns:
+            for labels, v in sorted(fn().items()):
+                drift.append(f"{labels[0][1]}={v:.2f}")
     return [
         row(
             "fig04/accepted_per_fwd_adaptive",
@@ -59,5 +99,15 @@ def run(quick: bool = True):
             ";".join(f"e{e}={v:.2f}" for e, v in enumerate(acc_s))
             + f";final={acc_s[-1]:.2f};adaptive_wins="
             f"{acc_a[-1] >= acc_s[-1]}",
+        ),
+        row(
+            "fig04/accept_by_length_class",
+            0.0,
+            ";".join(by_class) or "none",
+        ),
+        row(
+            "fig04/problem_acceptance_drift",
+            0.0,
+            ";".join(drift[:8]) or "none",
         ),
     ]

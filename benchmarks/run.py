@@ -16,6 +16,7 @@ MODULES = [
     "bench_draft",
     "bench_faults",
     "bench_history",
+    "bench_obs",
     "bench_rollout",
     "bench_service",
     "fig01_batch_collapse",

@@ -594,12 +594,31 @@ class SuffixDrafter:
         # never change — drafts only gate acceptance.
         self._fb_store = None
         self._fb_index = None
-        # Stats for EXPERIMENTS/benchmarks
-        self.stats = collections.Counter()
+        # Stats for EXPERIMENTS/benchmarks. Counter-shaped; when an
+        # engine attaches telemetry the same writes also feed the
+        # registry (``das_drafter_stat_total{key=...}``) — every
+        # existing ``stats["k"] += n`` call site is unchanged.
+        from repro import obs
+
+        self.telemetry = obs.NULL
+        self.stats = obs.MirroredCounter()
         if remote is not None:
             # the local store becomes a telemetry mirror: pooled accept
             # counters merge into it on sync (fleet-wide acceptance())
             remote.attach(store=self.store)
+
+    def attach_telemetry(self, telemetry) -> None:
+        """Route the stat bag into ``telemetry``'s registry
+        (``das_drafter_stat_total{key=...}``) and propagate to the
+        remote history client when present. Idempotent; re-attaching
+        swaps the sink."""
+        self.telemetry = telemetry
+        sink = telemetry.mirror_sink(
+            "das_drafter_stat_total", "SuffixDrafter counters by key"
+        )
+        self.stats.set_sink(sink)
+        if self.remote is not None and hasattr(self.remote, "attach_telemetry"):
+            self.remote.attach_telemetry(telemetry)
 
     @property
     def _trees(self) -> Dict[object, SuffixTree]:

@@ -56,6 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core.budget import LatencyModel, solve_budgets
 from repro.core.drafter import DrafterConfig, SuffixDrafter
@@ -66,7 +67,11 @@ from repro.core.fused_round import (
     unpack_round_out,
     verify_step,
 )
-from repro.core.length_policy import LengthPolicy, LengthPolicyConfig
+from repro.core.length_policy import (
+    CLASS_NAMES,
+    LengthPolicy,
+    LengthPolicyConfig,
+)
 from repro.core.scheduler import Request, SlotScheduler
 from repro.core.verify import sample_token, sample_token_rows, verify_block
 from repro.models import model as M
@@ -225,6 +230,7 @@ class SpecEngine:
         drafter: Optional[SuffixDrafter] = None,
         length_policy: Optional[LengthPolicy] = None,
         latency: Optional[LatencyModel] = None,
+        telemetry=None,
     ) -> None:
         self.params = params
         self.cfg = cfg
@@ -252,6 +258,105 @@ class SpecEngine:
         self._pred_memo: Dict[Any, float] = {}
         self._memo_version = -1
         self.epoch = 0
+        # Telemetry (repro.obs): NULL by default, so the instrumented
+        # paths cost a handful of no-op calls per round unless a real
+        # Telemetry is injected (or the process default was enabled).
+        self.telemetry = (
+            telemetry if telemetry is not None else obs.get_telemetry()
+        )
+        self._init_obs()
+
+    def _init_obs(self) -> None:
+        """Resolve registry handles once; hot paths touch handles only.
+
+        The drafter (and, through it, the remote history client) adopts
+        this engine's telemetry so one worker's `/metrics` endpoint
+        aggregates engine + drafter + client + fault gauges.
+        """
+        tel = self.telemetry
+        self.drafter.attach_telemetry(tel)
+        c, h = tel.counter, tel.histogram
+        self._mx = {
+            "rounds": c("das_rounds_total", "Verify rounds dispatched"),
+            "fwd": c("das_fwd_total", "Forward passes (prefill + verify)"),
+            "proposed": c("das_tokens_proposed_total",
+                          "Block tokens proposed over active rows"),
+            "drafted": c("das_tokens_drafted_total",
+                         "Draft tokens offered for verification"),
+            "accepted": c("das_tokens_accepted_total",
+                          "Draft tokens accepted by verification"),
+            "emitted": c("das_tokens_emitted_total",
+                         "Tokens emitted into finished outputs"),
+            "h2d": c("das_h2d_transfers_total",
+                     "Host-to-device array crossings"),
+            "d2h": c("das_d2h_transfers_total",
+                     "Device-to-host array crossings"),
+            "round_host": h("das_round_host_seconds",
+                            "Host bookkeeping time per round dispatch"),
+        }
+        fam = tel.registry.histogram_family(
+            "das_accepted_tokens",
+            "Accepted tokens per active row per round, by the row's "
+            "current LengthPolicy class",
+            ("length_class",), buckets=obs.TOKEN_BUCKETS,
+        )
+        self._accept_class_hist = tuple(
+            fam.labels(name) for name in CLASS_NAMES
+        )
+        self._active_gauge = tel.gauge(
+            "das_active_slots", "Rows active in the current round"
+        )
+        tel.registry.callback_gauge(
+            "das_problem_acceptance",
+            "Per-problem draft acceptance rate (accepted/drafted) from "
+            "the drafter's history store",
+            self._problem_acceptance_gauge,
+        )
+        tel.registry.callback_gauge(
+            "das_compiled_programs",
+            "compile_count(): jit programs attributable to this engine",
+            lambda: float(self.compile_count()),
+        )
+
+    def _problem_acceptance_gauge(self):
+        store = getattr(self.drafter, "store", None)
+        if store is None:
+            return {}
+        try:
+            keys = list(store.keys())
+        except Exception:
+            return {}
+        # Bounded cardinality: acceptance drift for the first 64 problem
+        # keys (deterministic order) — enough for dashboards without
+        # letting a million-problem run explode the exposition.
+        out = {}
+        for k in keys[:64]:
+            try:
+                out[(("problem", str(k)),)] = float(store.acceptance(k))
+            except Exception:
+                continue
+        return out
+
+    def _note_round_obs(self, budgets, accepted, mask, emitted_before) -> None:
+        """Mirror one verify round into the registry — called only when
+        telemetry is enabled, with the same arrays the RolloutStats
+        bookkeeping just used (no recompute on the hot path)."""
+        mx = self._mx
+        mx["rounds"].inc()
+        mx["fwd"].inc()
+        mx["proposed"].inc(float((1 + budgets[mask]).sum()))
+        mx["drafted"].inc(float(budgets[mask].sum()))
+        mx["accepted"].inc(float(accepted[mask].sum()))
+        lp = self.length_policy
+        hists = self._accept_class_hist
+        by_cls: List[List[float]] = [[], [], []]
+        for b in np.nonzero(mask)[0]:
+            by_cls[lp.classify_length(float(emitted_before[b]))].append(
+                float(accepted[b])
+            )
+        for cls_i, vals in enumerate(by_cls):
+            if vals:
+                hists[cls_i].observe_many(vals)
 
     # -- jitted device steps ------------------------------------------------
     def _get_prefill(self, Tp: int, max_len: int):
@@ -538,80 +643,102 @@ class SpecEngine:
                 collect_effective_batch, watchdog=watchdog,
             )
         else:
+            tel = self.telemetry
             while active.any():
                 if watchdog is not None:
                     watchdog.check("generate round")
-                t_h = time.perf_counter()
-                remaining = max_new_arr - emitted
-                budgets_np = self._round_budgets(
-                    problem_ids, emitted, active, remaining
-                )
-                kmax = int(budgets_np.max()) if active.any() else 0
-                K = self._bucket(kmax)
-                # ---- drafting: one batched propose for all active
-                # rows; the device walk overlaps the block assembly ----
-                prop_handle = bds.dispatch(budgets_np)
-                block = np.zeros((B, K + 1), np.int32)
-                block[:, 0] = head
-                props = bds.consume(prop_handle)
-                for b in np.nonzero(active)[0]:
-                    prop = props[b]
-                    budgets_np[b] = len(prop)
-                    if prop:
-                        block[b, 1 : 1 + len(prop)] = prop
-                kv = key
-                if e.temperature > 0:  # greedy verify never uses the key
-                    key, kv = jax.random.split(key)
-                block_dev = jnp.asarray(block)
-                budgets_dev = jnp.asarray(budgets_np.astype(np.int32))
-                active_dev = jnp.asarray(active)
-                stats.host_time_s += time.perf_counter() - t_h
-                stats.n_h2d += 3  # block + budgets + active uploads
-                res, cache = self._get_verify(K)(
-                    self.params, cache, block_dev, budgets_dev,
-                    active_dev, kv,
-                )
-                accepted = np.asarray(res.accepted).astype(np.int64)
-                next_tok = np.asarray(res.next_token).astype(np.int32)
-                stats.n_d2h += 2
-                # ---- host bookkeeping (vectorized EOS/emit scan) ----
-                t_h = time.perf_counter()
-                stats.n_rounds += 1
-                stats.n_fwd += 1
-                stats.n_toks_proposed += int((1 + budgets_np[active]).sum())
-                stats.n_drafted += int(budgets_np[active].sum())
-                stats.n_accepted += int(accepted[active].sum())
-                stats.round_accepts.append(
-                    float(accepted[active].mean()) if active.any() else 0.0
-                )
-                if collect_effective_batch:
-                    stats.effective_batch.append(int(active.sum()))
-                cand = np.zeros((B, K + 1), np.int32)
-                cand[:, :K] = block[:, 1:]
-                cand[np.arange(B), accepted] = next_tok
-                n_take, alive = _emit_scan(
-                    cand, accepted + 1, max_new_arr - emitted, e.eos_token
-                )
-                alive &= active
-                for b in np.nonzero(active)[0]:
-                    rounds_per_row[b] += 1
-                    if budgets_np[b] > 0:  # per-prompt accept telemetry
-                        self.drafter.note_draft(
-                            problem_ids[b], int(budgets_np[b]),
-                            int(accepted[b]),
+                host0 = stats.host_time_s
+                with tel.span("round"):
+                    t_h = time.perf_counter()
+                    with tel.span("budget_solve"):
+                        remaining = max_new_arr - emitted
+                        budgets_np = self._round_budgets(
+                            problem_ids, emitted, active, remaining
                         )
-                    take = cand[b, : n_take[b]].tolist()
-                    outputs[b].extend(take)
-                    if alive[b]:
-                        bds.feed(b, take)
-                    else:
-                        bds.close(b)
-                emitted[active] += n_take[active]
-                head = np.where(alive, next_tok, head)
-                active = alive
-                if watchdog is not None:
-                    watchdog.progress()
-                stats.host_time_s += time.perf_counter() - t_h
+                    kmax = int(budgets_np.max()) if active.any() else 0
+                    K = self._bucket(kmax)
+                    # ---- drafting: one batched propose for all active
+                    # rows; the device walk overlaps block assembly ----
+                    with tel.span("draft_dispatch"):
+                        prop_handle = bds.dispatch(budgets_np)
+                        block = np.zeros((B, K + 1), np.int32)
+                        block[:, 0] = head
+                        props = bds.consume(prop_handle)
+                        for b in np.nonzero(active)[0]:
+                            prop = props[b]
+                            budgets_np[b] = len(prop)
+                            if prop:
+                                block[b, 1 : 1 + len(prop)] = prop
+                    kv = key
+                    if e.temperature > 0:  # greedy never uses the key
+                        key, kv = jax.random.split(key)
+                    block_dev = jnp.asarray(block)
+                    budgets_dev = jnp.asarray(budgets_np.astype(np.int32))
+                    active_dev = jnp.asarray(active)
+                    stats.host_time_s += time.perf_counter() - t_h
+                    stats.n_h2d += 3  # block + budgets + active uploads
+                    # verify_forward includes the device wait: acceptance
+                    # + cache commit run inside the jitted verify step.
+                    with tel.span("verify_forward") as sp_v:
+                        sp_v.set(h2d=3, d2h=2)
+                        res, cache = self._get_verify(K)(
+                            self.params, cache, block_dev, budgets_dev,
+                            active_dev, kv,
+                        )
+                        accepted = np.asarray(res.accepted).astype(np.int64)
+                        next_tok = np.asarray(res.next_token).astype(np.int32)
+                    stats.n_d2h += 2
+                    # ---- host bookkeeping (vectorized EOS/emit scan) ----
+                    t_h = time.perf_counter()
+                    with tel.span("accept_emit"):
+                        stats.n_rounds += 1
+                        stats.n_fwd += 1
+                        stats.n_toks_proposed += int(
+                            (1 + budgets_np[active]).sum()
+                        )
+                        stats.n_drafted += int(budgets_np[active].sum())
+                        stats.n_accepted += int(accepted[active].sum())
+                        stats.round_accepts.append(
+                            float(accepted[active].mean())
+                            if active.any() else 0.0
+                        )
+                        if collect_effective_batch:
+                            stats.effective_batch.append(int(active.sum()))
+                        if tel.enabled:
+                            self._note_round_obs(
+                                budgets_np, accepted, active, emitted
+                            )
+                        cand = np.zeros((B, K + 1), np.int32)
+                        cand[:, :K] = block[:, 1:]
+                        cand[np.arange(B), accepted] = next_tok
+                        n_take, alive = _emit_scan(
+                            cand, accepted + 1, max_new_arr - emitted,
+                            e.eos_token,
+                        )
+                        alive &= active
+                        for b in np.nonzero(active)[0]:
+                            rounds_per_row[b] += 1
+                            if budgets_np[b] > 0:  # per-prompt telemetry
+                                self.drafter.note_draft(
+                                    problem_ids[b], int(budgets_np[b]),
+                                    int(accepted[b]),
+                                )
+                            take = cand[b, : n_take[b]].tolist()
+                            outputs[b].extend(take)
+                            if alive[b]:
+                                bds.feed(b, take)
+                            else:
+                                bds.close(b)
+                        emitted[active] += n_take[active]
+                        head = np.where(alive, next_tok, head)
+                        active = alive
+                    if watchdog is not None:
+                        watchdog.progress()
+                    stats.host_time_s += time.perf_counter() - t_h
+                if tel.enabled:
+                    self._mx["round_host"].observe(
+                        stats.host_time_s - host0
+                    )
         stats.n_h2d += bds.xfers.pop("h2d", 0)
         stats.n_d2h += bds.xfers.pop("d2h", 0)
         # strip EOS and observe history
@@ -627,6 +754,12 @@ class SpecEngine:
         stats.per_row_rounds = rounds_per_row
         stats.per_row_emitted = np.array([len(o) for o in outputs])
         stats.wall_time_s = time.perf_counter() - t0
+        if self.telemetry.enabled:
+            # transfer counters mirror as one delta per call: a fresh
+            # RolloutStats accumulates them, the registry keeps totals
+            self._mx["h2d"].inc(stats.n_h2d)
+            self._mx["d2h"].inc(stats.n_d2h)
+            self._mx["emitted"].inc(stats.n_toks_emitted)
         return outputs, stats
 
     def _fused_generate_rounds(
@@ -644,6 +777,7 @@ class SpecEngine:
         bookkeeping syncs every R rounds. Returns the updated cache.
         """
         e = self.engine
+        tel_obs = self.telemetry
         B = len(outputs)
         R = int(e.micro_rounds)
         bds.prewarm()  # pack every open row's tree before round one
@@ -658,63 +792,78 @@ class SpecEngine:
         while active.any():
             if watchdog is not None:
                 watchdog.check("fused round")
-            t_h = time.perf_counter()
-            remaining = max_new_arr - emitted
-            budgets_np = self._round_budgets(
-                problem_ids, emitted, active, remaining
-            )
-            K = self._bucket(int(budgets_np.max()))
-            rows = np.nonzero(active & (budgets_np > 0))[0]
-            bds.refresh_for(rows)
-            if bds.repack_version != last_ver:
-                last_ver = bds.repack_version
-                forest = bds.forest_arrays()
-                roots_dev = jnp.asarray(bds.roots_array())
-                stats.n_h2d += 1
-            kv = key
-            if e.temperature > 0:  # greedy verify never uses the key
-                key, kv = jax.random.split(key)
-            stats.host_time_s += time.perf_counter() - t_h
-            stats.n_h2d += 1  # the (B,) budget vector
-            cache, state, outs_dev, ndone_dev = self._get_fused(K, R)(
-                self.params, forest, cache, state, roots_dev,
-                budgets_np.astype(np.int32), kv,
-            )
-            outs = np.asarray(outs_dev)
-            n_done = int(ndone_dev)
-            stats.n_d2h += 2
-            if K > 0 and len(rows) > 0:  # each micro-round proposed once
-                self.drafter.stats["batched_proposes"] += n_done
-            t_h = time.perf_counter()
-            for r in range(n_done):
-                cand, acc, n_take, alive, n_prop = unpack_round_out(
-                    outs[r], K
-                )
-                mask = active.copy()
-                stats.n_rounds += 1
-                stats.n_fwd += 1
-                stats.n_toks_proposed += int((1 + n_prop[mask]).sum())
-                stats.n_drafted += int(n_prop[mask].sum())
-                stats.n_accepted += int(acc[mask].sum())
-                stats.round_accepts.append(
-                    float(acc[mask].mean()) if mask.any() else 0.0
-                )
-                if collect_effective_batch:
-                    stats.effective_batch.append(int(mask.sum()))
-                rounds_per_row[mask] += 1
-                tel = np.nonzero(mask & (n_prop > 0))[0]
-                if tel.size:  # per-prompt acceptance telemetry, batched
-                    self.drafter.note_draft_rows(
-                        [problem_ids[b] for b in tel], n_prop[tel],
-                        acc[tel],
+            host0 = stats.host_time_s
+            with tel_obs.span("round"):
+                t_h = time.perf_counter()
+                with tel_obs.span("budget_solve"):
+                    remaining = max_new_arr - emitted
+                    budgets_np = self._round_budgets(
+                        problem_ids, emitted, active, remaining
                     )
-                for b in np.nonzero(mask & (n_take > 0))[0]:
-                    outputs[b].extend(cand[b, : n_take[b]].tolist())
-                emitted[mask] += n_take[mask]
-                active &= alive
-            if watchdog is not None:
-                watchdog.progress()
-            stats.host_time_s += time.perf_counter() - t_h
+                K = self._bucket(int(budgets_np.max()))
+                with tel_obs.span("forest_refresh"):
+                    rows = np.nonzero(active & (budgets_np > 0))[0]
+                    bds.refresh_for(rows)
+                    if bds.repack_version != last_ver:
+                        last_ver = bds.repack_version
+                        forest = bds.forest_arrays()
+                        roots_dev = jnp.asarray(bds.roots_array())
+                        stats.n_h2d += 1
+                kv = key
+                if e.temperature > 0:  # greedy verify never uses the key
+                    key, kv = jax.random.split(key)
+                stats.host_time_s += time.perf_counter() - t_h
+                stats.n_h2d += 1  # the (B,) budget vector
+                # One dispatch = propose → verify → accept → cache
+                # commit → emit scan, all device-side (R micro-rounds).
+                with tel_obs.span("fused_dispatch") as sp_f:
+                    sp_f.set(h2d=1, d2h=2)
+                    cache, state, outs_dev, ndone_dev = self._get_fused(
+                        K, R
+                    )(
+                        self.params, forest, cache, state, roots_dev,
+                        budgets_np.astype(np.int32), kv,
+                    )
+                    outs = np.asarray(outs_dev)
+                    n_done = int(ndone_dev)
+                stats.n_d2h += 2
+                if K > 0 and len(rows) > 0:  # each micro-round proposed
+                    self.drafter.stats["batched_proposes"] += n_done
+                t_h = time.perf_counter()
+                with tel_obs.span("accept_emit"):
+                    for r in range(n_done):
+                        cand, acc, n_take, alive, n_prop = unpack_round_out(
+                            outs[r], K
+                        )
+                        mask = active.copy()
+                        stats.n_rounds += 1
+                        stats.n_fwd += 1
+                        stats.n_toks_proposed += int((1 + n_prop[mask]).sum())
+                        stats.n_drafted += int(n_prop[mask].sum())
+                        stats.n_accepted += int(acc[mask].sum())
+                        stats.round_accepts.append(
+                            float(acc[mask].mean()) if mask.any() else 0.0
+                        )
+                        if collect_effective_batch:
+                            stats.effective_batch.append(int(mask.sum()))
+                        if tel_obs.enabled:
+                            self._note_round_obs(n_prop, acc, mask, emitted)
+                        rounds_per_row[mask] += 1
+                        tel = np.nonzero(mask & (n_prop > 0))[0]
+                        if tel.size:  # per-prompt accept telemetry
+                            self.drafter.note_draft_rows(
+                                [problem_ids[b] for b in tel], n_prop[tel],
+                                acc[tel],
+                            )
+                        for b in np.nonzero(mask & (n_take > 0))[0]:
+                            outputs[b].extend(cand[b, : n_take[b]].tolist())
+                        emitted[mask] += n_take[mask]
+                        active &= alive
+                if watchdog is not None:
+                    watchdog.progress()
+                stats.host_time_s += time.perf_counter() - t_h
+            if tel_obs.enabled:
+                self._mx["round_host"].observe(stats.host_time_s - host0)
         return cache
 
     # -- continuous-batching mode --------------------------------------------
@@ -760,11 +909,15 @@ class SpecEngine:
         ``generate_continuous`` wrapper fills.
         """
         e = self.engine
+        tel_obs = self.telemetry
         reqs = list(requests)
         if stats is None:
             stats = RolloutStats()
         if not reqs:
             return
+        # ``stats`` may accumulate across serve() calls: mirror the
+        # transfer counters into the registry as end-of-serve deltas.
+        h2d0, d2h0 = stats.n_h2d, stats.n_d2h
         n_slots = max(1, min(int(slots) if slots else len(reqs), len(reqs)))
         sched = SlotScheduler(n_slots, self.length_policy)
         for r in reqs:
@@ -819,6 +972,13 @@ class SpecEngine:
             stats.n_toks_emitted += req.emitted
             sched.release(req)
             finalize_q.append(req)
+            if tel_obs.enabled:
+                self._mx["emitted"].inc(req.emitted)
+                tel_obs.emit(
+                    "request_done", rid=req.rid, slot=req.slot,
+                    emitted=req.emitted,
+                    rounds=req.finish_round - req.admit_round,
+                )
 
         roots_dirty = True  # row→tree mapping changed since last upload
 
@@ -906,6 +1066,11 @@ class SpecEngine:
                             max_new_arr[s] = req.max_new_tokens
                             active[s] = True
                             admitted.append(req)
+                            if tel_obs.enabled:
+                                tel_obs.emit(
+                                    "admit", rid=req.rid, slot=s,
+                                    round=round_no,
+                                )
                 if fused and admitted:
                     kk = len(admitted)
                     kb = 1 << max(kk - 1, 0).bit_length()  # pow2 ceiling
@@ -971,6 +1136,23 @@ class SpecEngine:
             stats.round_accepts.append(
                 float(accepted[mask].mean()) if mask.any() else 0.0
             )
+            if tel_obs.enabled:
+                # rounds/fwd already counted at dispatch; mirror the
+                # token counters + length-class histograms here where
+                # acceptance is known
+                mx = self._mx
+                mx["proposed"].inc(float((1 + budgets[mask]).sum()))
+                mx["drafted"].inc(float(budgets[mask].sum()))
+                mx["accepted"].inc(float(accepted[mask].sum()))
+                lp = self.length_policy
+                by_cls: List[List[float]] = [[], [], []]
+                for s in np.nonzero(mask)[0]:
+                    by_cls[lp.classify_length(float(emitted[s]))].append(
+                        float(accepted[s])
+                    )
+                for cls_i, vals in enumerate(by_cls):
+                    if vals:
+                        self._accept_class_hist[cls_i].observe_many(vals)
             emitted[mask] += n_take[mask]
             active[mask & ~alive] = False
             if not fused:  # device tails advance inside the fused round
@@ -997,37 +1179,42 @@ class SpecEngine:
             to the request admitted into it afterwards."""
             if not active.any():
                 return None
-            rem = max_new_arr - emitted
-            return (
-                self._round_budgets(pids, emitted, active, rem),
-                active.copy(),
-                list(sched.slots),
-            )
+            with tel_obs.span("budget_solve"):
+                rem = max_new_arr - emitted
+                return (
+                    self._round_budgets(pids, emitted, active, rem),
+                    active.copy(),
+                    list(sched.slots),
+                )
 
         def solve_budgets(pre) -> np.ndarray:
             """Round budgets for currently-active rows (post-consume):
             merge the overlap-window precompute where the slot occupant
             is unchanged, solve fresh for the rest, clamp against fresh
             emission limits."""
-            remaining = max_new_arr - emitted
-            budgets = np.zeros(n_slots, np.int64)
-            if pre is not None:
-                pb, pmask, pocc = pre
-                same = np.fromiter(
-                    (sched.slots[s] is pocc[s] for s in range(n_slots)),
-                    bool, n_slots,
+            with tel_obs.span("budget_solve"):
+                remaining = max_new_arr - emitted
+                budgets = np.zeros(n_slots, np.int64)
+                if pre is not None:
+                    pb, pmask, pocc = pre
+                    same = np.fromiter(
+                        (sched.slots[s] is pocc[s] for s in range(n_slots)),
+                        bool, n_slots,
+                    )
+                    use = pmask & active & same
+                    budgets[use] = pb[use]
+                    fresh_rows = active & ~use
+                else:
+                    fresh_rows = active.copy()
+                if fresh_rows.any():  # rows recycled since the precompute
+                    fb = self._round_budgets(
+                        pids, emitted, fresh_rows, remaining
+                    )
+                    budgets[fresh_rows] = fb[fresh_rows]
+                return np.where(
+                    active,
+                    np.minimum(budgets, np.maximum(remaining - 1, 0)), 0,
                 )
-                use = pmask & active & same
-                budgets[use] = pb[use]
-                fresh_rows = active & ~use
-            else:
-                fresh_rows = active.copy()
-            if fresh_rows.any():  # rows recycled since the precompute
-                fb = self._round_budgets(pids, emitted, fresh_rows, remaining)
-                budgets[fresh_rows] = fb[fresh_rows]
-            return np.where(
-                active, np.minimum(budgets, np.maximum(remaining - 1, 0)), 0
-            )
 
         def sync_forest() -> None:
             """Refresh the packed forest + per-row root handles after
@@ -1036,12 +1223,14 @@ class SpecEngine:
             and the roots upload hide behind the in-flight round; the
             dispatch-side call is a startup/late-repack fallback."""
             nonlocal forest, roots_dev, last_ver, roots_dirty
-            bds.prewarm()
-            last_ver = bds.repack_version
-            roots_dirty = False
-            forest = bds.forest_arrays()
-            roots_dev = jnp.asarray(bds.roots_array())
-            stats.n_h2d += 1
+            with tel_obs.span("history_sync") as sp_s:
+                bds.prewarm()
+                last_ver = bds.repack_version
+                roots_dirty = False
+                forest = bds.forest_arrays()
+                roots_dev = jnp.asarray(bds.roots_array())
+                stats.n_h2d += 1
+                sp_s.set(h2d=1)
 
         def dispatch(budgets, prop_handle, fresh_roots: bool = False) -> None:
             nonlocal pending, cache, key, round_no, state
@@ -1100,6 +1289,10 @@ class SpecEngine:
             round_no += 1
             stats.n_rounds += 1
             stats.n_fwd += 1
+            if tel_obs.enabled:
+                self._mx["rounds"].inc()
+                self._mx["fwd"].inc()
+                self._active_gauge.set(float(active.sum()))
             if collect_effective_batch:
                 stats.effective_batch.append(int(active.sum()))
             for s in np.nonzero(active)[0]:
@@ -1110,56 +1303,68 @@ class SpecEngine:
         while sched.has_work() or pending is not None:
             if watchdog is not None:
                 watchdog.check("serve round")
-            # ---- overlap window: the device executes the in-flight
-            # round; the host observes finished rollouts (their drafts
-            # immediately help still-running stragglers) and pre-solves
-            # the next round's budgets.
-            if finalize_q:
-                while finalize_q:
-                    req = finalize_q.popleft()
-                    self._finalize_request(req)
-                    done_q.append(req)
-                # repack mutated trees while the round is in flight so
-                # the next dispatch stays cache-hit (once, after ALL of
-                # the round's observations mutated trees)
-                bds.prewarm()
-            if fused and (roots_dirty or bds.repack_version != last_ver):
-                # also in the overlap window: the roots/forest upload
-                # for last iteration's admissions rides the in-flight
-                # round (their budgets stay 0 until the next solve)
-                sync_forest()
-            pre = precompute_budgets() if pending is not None else None
-            consume()  # device sync: bookkeeping needs the round result
-            if watchdog is not None:
-                watchdog.progress()  # the in-flight round completed
-            # ---- unfused: batched draft propose for the rows that
-            # survived the round, dispatched BEFORE admissions so the
-            # device suffix walk overlaps the admission prefills. Fused:
-            # the propose runs inside the round dispatch below. Either
-            # way, rows admitted below draft from their next round on
-            # (one draft-free warmup round per admission).
-            budgets = prop_handle = None
-            if active.any():
-                t_h = time.perf_counter()
-                budgets = solve_budgets(pre)
-                if not fused:
-                    prop_handle = bds.dispatch(budgets)
-                stats.host_time_s += time.perf_counter() - t_h
-            admit()  # recycle freed slots before the next round
-            if active.any():
-                fresh_roots = False
-                if budgets is None:
-                    # The pool was empty before admissions (startup or
-                    # full drain): nothing was in flight to overlap
-                    # with, so solve + propose for the freshly admitted
-                    # batch now — warm history drafts from round one.
+            with tel_obs.span("serve_round"):
+                # ---- overlap window: the device executes the in-flight
+                # round; the host observes finished rollouts (their
+                # drafts immediately help still-running stragglers) and
+                # pre-solves the next round's budgets.
+                if finalize_q:
+                    with tel_obs.span("history_publish") as sp_p:
+                        n_fin = 0
+                        while finalize_q:
+                            req = finalize_q.popleft()
+                            self._finalize_request(req)
+                            done_q.append(req)
+                            n_fin += 1
+                        # repack mutated trees while the round is in
+                        # flight so the next dispatch stays cache-hit
+                        # (once, after ALL of the round's observations
+                        # mutated trees)
+                        bds.prewarm()
+                        sp_p.set(finished=n_fin)
+                if fused and (roots_dirty or bds.repack_version != last_ver):
+                    # also in the overlap window: the roots/forest
+                    # upload for last iteration's admissions rides the
+                    # in-flight round (their budgets stay 0 until the
+                    # next solve)
+                    sync_forest()
+                pre = precompute_budgets() if pending is not None else None
+                # device sync: bookkeeping needs the round result
+                with tel_obs.span("consume"):
+                    consume()
+                if watchdog is not None:
+                    watchdog.progress()  # the in-flight round completed
+                # ---- unfused: batched draft propose for the rows that
+                # survived the round, dispatched BEFORE admissions so
+                # the device suffix walk overlaps the admission
+                # prefills. Fused: the propose runs inside the round
+                # dispatch below. Either way, rows admitted below draft
+                # from their next round on (one draft-free warmup round
+                # per admission).
+                budgets = prop_handle = None
+                if active.any():
                     t_h = time.perf_counter()
-                    budgets = solve_budgets(None)
+                    budgets = solve_budgets(pre)
                     if not fused:
                         prop_handle = bds.dispatch(budgets)
                     stats.host_time_s += time.perf_counter() - t_h
-                    fresh_roots = True
-                dispatch(budgets, prop_handle, fresh_roots)
+                admit()  # recycle freed slots before the next round
+                if active.any():
+                    fresh_roots = False
+                    if budgets is None:
+                        # The pool was empty before admissions (startup
+                        # or full drain): nothing was in flight to
+                        # overlap with, so solve + propose for the
+                        # freshly admitted batch now — warm history
+                        # drafts from round one.
+                        t_h = time.perf_counter()
+                        budgets = solve_budgets(None)
+                        if not fused:
+                            prop_handle = bds.dispatch(budgets)
+                        stats.host_time_s += time.perf_counter() - t_h
+                        fresh_roots = True
+                    with tel_obs.span("verify_dispatch"):
+                        dispatch(budgets, prop_handle, fresh_roots)
             while done_q:
                 yield done_q.popleft()
         while finalize_q:  # tail: rows that finished in the last round
@@ -1169,6 +1374,9 @@ class SpecEngine:
         stats.n_h2d += bds.xfers.pop("h2d", 0)
         stats.n_d2h += bds.xfers.pop("d2h", 0)
         stats.wall_time_s = time.perf_counter() - t_serve0
+        if tel_obs.enabled:
+            self._mx["h2d"].inc(float(stats.n_h2d - h2d0))
+            self._mx["d2h"].inc(float(stats.n_d2h - d2h0))
 
     def _finalize_request(self, req: Request) -> None:
         """Observe a finished rollout (drafter window + length history)."""

@@ -92,6 +92,10 @@ class ShardHealth:
         # herd), while a replayed chaos test jitters identically.
         self._rng = random.Random((int(seed) << 16) ^ self.shard_id)
         self._lock = threading.Lock()
+        # Optional observer called as on_transition(shard_id, old, new)
+        # AFTER the lock is released whenever the state changes — the
+        # telemetry layer hangs its shard-state event stream here.
+        self.on_transition: Optional[Any] = None
         self.state = HEALTHY
         self.consecutive_failures = 0
         self.total_failures = 0
@@ -116,10 +120,19 @@ class ShardHealth:
             return max(0.0, self._next_try - self.clock.now())
 
     # -- transitions -------------------------------------------------------
+    def _notify(self, old: str, new: str) -> None:
+        cb = self.on_transition
+        if cb is not None and old != new:
+            try:
+                cb(self.shard_id, old, new)
+            except Exception:  # observers must never break RPC paths
+                pass
+
     def record_failure(self) -> str:
         """One failed RPC (connect refused, timeout, torn frame).
         Returns the resulting state."""
         with self._lock:
+            old = self.state
             self.consecutive_failures += 1
             self.total_failures += 1
             if self.state == DOWN or \
@@ -137,13 +150,16 @@ class ShardHealth:
                 # RESYNCING that fails again is back to SUSPECT — the
                 # recovery did not stick.
                 self.state = SUSPECT
-            return self.state
+            new = self.state
+        self._notify(old, new)
+        return new
 
     def record_success(self) -> bool:
         """One successful RPC. Returns True when this success is a
         *recovery* from DOWN — the caller owes the shard a (hedged)
         resync before trusting its replica again."""
         with self._lock:
+            old = self.state
             was_down = self.state == DOWN
             self.consecutive_failures = 0
             self._next_try = 0.0
@@ -153,13 +169,18 @@ class ShardHealth:
                 self._down_since = None
             elif self.state == SUSPECT:
                 self.state = HEALTHY
-            return was_down
+            new = self.state
+        self._notify(old, new)
+        return was_down
 
     def resynced(self) -> None:
         """The post-recovery full sync completed: RESYNCING → HEALTHY."""
         with self._lock:
+            old = self.state
             if self.state == RESYNCING:
                 self.state = HEALTHY
+            new = self.state
+        self._notify(old, new)
 
     # -- introspection -----------------------------------------------------
     def snapshot(self) -> Dict[str, Any]:

@@ -43,13 +43,27 @@ TRUNCATE = "truncate"  # reply with a torn frame, then close
 class FaultPlan:
     """Seeded, countable fault schedule."""
 
-    def __init__(self, seed: int = 0) -> None:
+    def __init__(self, seed: int = 0, telemetry=None) -> None:
+        from repro import obs
+
         self.seed = int(seed)
+        self.telemetry = telemetry if telemetry is not None else obs.NULL
         # (shard, op) -> {count k -> action}; ops counted per shard.
         self._shard_faults: Dict[Tuple[int, str], Dict[int, Any]] = {}
         self._counts: collections.Counter = collections.Counter()
         self._lock = threading.Lock()
         self.fired: List[Dict[str, Any]] = []
+
+    def _record(self, rec: Dict[str, Any]) -> None:
+        """Append to ``fired`` (caller holds the lock) and mirror into
+        the structured event log."""
+        self.fired.append(rec)
+        if self.telemetry.enabled:
+            self.telemetry.emit(
+                "fault_injected",
+                **{k: (v if isinstance(v, (int, float, str)) else str(v))
+                   for k, v in rec.items()},
+            )
 
     # -- declaration -------------------------------------------------------
     def kill_shard(self, shard: int, *, op: str = "publish",
@@ -89,7 +103,7 @@ class FaultPlan:
                 k = self._counts[(shard, op)]
                 action = self._shard_faults.get((shard, op), {}).pop(k, None)
                 if action is not None:
-                    self.fired.append({
+                    self._record({
                         "kind": "shard", "shard": shard, "op": op,
                         "at": k, "action": action,
                     })
@@ -120,7 +134,7 @@ class FaultPlan:
             if wd.checks == target:
                 wd.clock.advance(jump)
                 with self._lock:
-                    self.fired.append({
+                    self._record({
                         "kind": "watchdog", "at_check": target,
                         "advance_s": jump,
                     })

@@ -21,11 +21,12 @@ granularity.
 
 from __future__ import annotations
 
-import collections
 import logging
 import random
 import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro import obs
 
 from .clock import Clock, SystemClock
 from .health import BackoffPolicy
@@ -76,8 +77,12 @@ class ShardSupervisor:
         seed: int = 0,
         max_restarts: Optional[int] = None,
         snapshot_provider: Optional[Callable[[int], Optional[Dict]]] = None,
+        telemetry=None,
     ) -> None:
         self.service = service
+        self.telemetry = (
+            telemetry if telemetry is not None else obs.get_telemetry()
+        )
         self.clock = clock or SystemClock()
         # Restarts are heavyweight next to RPC retries: back off slower.
         self.policy = policy or BackoffPolicy(base_s=0.5, max_s=30.0)
@@ -91,9 +96,26 @@ class ShardSupervisor:
         ]
         self._attempts = [0] * n
         self._next_try = [0.0] * n
-        self.stats: collections.Counter = collections.Counter()
+        # Counter-shaped view mirrored into the registry (the existing
+        # ``sup.stats["restarts"]`` reads keep working unchanged).
+        self.stats = obs.MirroredCounter(
+            sink=self.telemetry.mirror_sink(
+                "das_supervisor_stat_total", "ShardSupervisor counters"
+            )
+        )
+        self.telemetry.registry.callback_gauge(
+            "das_service_shard_alive",
+            "1 while the supervised shard's server is alive",
+            self._alive_gauge,
+        )
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+
+    def _alive_gauge(self):
+        return {
+            (("shard", str(i)),): float(self.service.shard_alive(i))
+            for i in range(self.service.n_shards)
+        }
 
     # -- liveness ----------------------------------------------------------
     def alive(self, i: int) -> bool:
@@ -109,6 +131,11 @@ class ShardSupervisor:
         self.stats["polls"] += 1
         if getattr(self.service, "closed", False):
             return []
+        with self.telemetry.span("supervisor_probe"):
+            restarted = self._poll_once(force)
+        return restarted
+
+    def _poll_once(self, force: bool) -> List[int]:
         restarted: List[int] = []
         now = self.clock.now()
         for i in range(self.service.n_shards):
@@ -133,6 +160,10 @@ class ShardSupervisor:
                 addr = self.service.respawn_shard(i, state=state)
             except Exception as exc:
                 self.stats["restart_failures"] += 1
+                self.telemetry.emit(
+                    "shard_restart_failed", shard=i,
+                    attempt=self._attempts[i], error=str(exc),
+                )
                 self._next_try[i] = self.clock.now() + self.policy.delay(
                     self._attempts[i], self._rng[i]
                 )
@@ -143,6 +174,7 @@ class ShardSupervisor:
                 )
                 continue
             self.stats["restarts"] += 1
+            self.telemetry.emit("shard_restart", shard=i, address=str(addr))
             self._attempts[i] = 0
             self._next_try[i] = 0.0
             restarted.append(i)

@@ -48,6 +48,7 @@ import time
 import zlib
 from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro import obs
 from repro.core.suffix_tree import PackedSuffixTree
 from repro.fault.clock import Clock, SystemClock
 from repro.fault.health import (
@@ -64,10 +65,13 @@ from .service import shard_for
 log = logging.getLogger("repro.history.client")
 
 
-class ClientStats(collections.Counter):
+class ClientStats(obs.MirroredCounter):
     """Counter that is also callable: ``client.stats["key"]`` keeps the
     cheap hot-path counters, ``client.stats()`` returns the full
-    snapshot (counters + per-shard health/backoff/outbox/drop state)."""
+    snapshot (counters + per-shard health/backoff/outbox/drop state).
+    Registry-backed once ``attach_telemetry`` wires a sink — every
+    increment then also lands in
+    ``das_history_client_stat_total{key=...}``."""
 
     snapshot_fn: Optional[Callable[[], Dict[str, Any]]] = None
 
@@ -160,6 +164,8 @@ class HistoryClient:
         self._length_policy = None
         self._tel_store = None
 
+        self.telemetry = obs.NULL
+        self._lat_hist: Optional[Dict[str, Any]] = None
         self.stats: ClientStats = ClientStats()
         self.stats.snapshot_fn = self.stats_snapshot
         # bounded: telemetry must not grow with run length (a multi-day
@@ -195,6 +201,72 @@ class HistoryClient:
         if store is not None:
             self._tel_store = store
         return self
+
+    def attach_telemetry(self, telemetry) -> "HistoryClient":
+        """Wire this client into a telemetry instance: the stat bag
+        mirrors into ``das_history_client_stat_total{key=...}``, RPC
+        latencies feed ``das_history_rpc_seconds{op=...}``, per-shard
+        health / outbox depth export as callback gauges (labeled by
+        worker so a fleet can share one registry), and every health
+        state transition lands in the event log.
+
+        Idempotent per telemetry instance: launchers attach clients
+        explicitly AND the engine's drafter propagates its telemetry to
+        its remote — re-attaching the same instance must not register
+        the callback gauges twice (duplicate Prometheus series)."""
+        if telemetry is self.telemetry:
+            return self
+        self.telemetry = telemetry
+        self.stats.set_sink(telemetry.mirror_sink(
+            "das_history_client_stat_total", "HistoryClient counters by key"
+        ))
+        if not telemetry.enabled:
+            self._lat_hist = None
+            return self
+        fam = telemetry.registry.histogram_family(
+            "das_history_rpc_seconds",
+            "History-service RPC wall time by op",
+            ("op",), buckets=obs.exp_buckets(1e-4, 2.0, 14),
+        )
+        self._lat_hist = {
+            "publish_ms": fam.labels("publish"),
+            "sync_ms": fam.labels("sync"),
+        }
+        telemetry.registry.callback_gauge(
+            "das_shard_state",
+            "1 for each (worker, shard)'s current health state",
+            self._shard_state_gauge,
+        )
+        telemetry.registry.callback_gauge(
+            "das_shard_outbox",
+            "Queued publish batches per (worker, shard)",
+            self._shard_outbox_gauge,
+        )
+        wid = self.worker_id
+
+        def on_transition(shard_id: int, old: str, new: str) -> None:
+            telemetry.emit(
+                "shard_state", worker=wid, shard=shard_id, old=old, new=new
+            )
+
+        for h in self.health:
+            h.on_transition = on_transition
+        return self
+
+    def _shard_state_gauge(self):
+        return {
+            (("worker", self.worker_id), ("shard", str(i)),
+             ("state", h.state)): 1.0
+            for i, h in enumerate(self.health)
+        }
+
+    def _shard_outbox_gauge(self):
+        with self._cv:
+            depths = [len(q) for q in self._outbox]
+        return {
+            (("worker", self.worker_id), ("shard", str(i))): float(d)
+            for i, d in enumerate(depths)
+        }
 
     def shard_of(self, key) -> int:
         return shard_for(key, self.n_shards, self.n_problems)
@@ -313,9 +385,10 @@ class HistoryClient:
                         # the outbox — drop it and move on.
                         self.stats["rejected_batches"] += 1
                     else:
-                        self.latencies["publish_ms"].append(
-                            1e3 * (time.perf_counter() - t0)
-                        )
+                        dt = time.perf_counter() - t0
+                        self.latencies["publish_ms"].append(1e3 * dt)
+                        if self._lat_hist is not None:
+                            self._lat_hist["publish_ms"].observe(dt)
                         self.stats["published_batches"] += 1
                         self._drops_unreported[i] -= dropped
                     made_progress = True
@@ -510,9 +583,10 @@ class HistoryClient:
                 except (OSError, RuntimeError, ValueError):
                     self.stats["sync_failures"] += 1
             h.resynced()  # RESYNCING -> HEALTHY once a sync lands
-            self.latencies["sync_ms"].append(
-                1e3 * (time.perf_counter() - t0)
-            )
+            dt = time.perf_counter() - t0
+            self.latencies["sync_ms"].append(1e3 * dt)
+            if self._lat_hist is not None:
+                self._lat_hist["sync_ms"].observe(dt)
         self.sync_count += 1
         return applied
 

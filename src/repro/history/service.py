@@ -596,6 +596,32 @@ class HistoryService:
     def n_shards(self) -> int:
         return len(self.book)
 
+    # -- telemetry ---------------------------------------------------------
+    def attach_telemetry(self, telemetry) -> None:
+        """Export per-shard server counters as a callback gauge (read
+        only at scrape time; in-process shards only — subprocess shards
+        expose theirs through the ``stats`` RPC instead). Idempotent
+        per telemetry instance."""
+        if getattr(self, "_attached_telemetry", None) is telemetry:
+            return
+        self._attached_telemetry = telemetry
+        telemetry.registry.callback_gauge(
+            "das_service_shard_stat",
+            "HistoryShard server counters (in-process shards)",
+            self._shard_stat_gauge,
+        )
+
+    def _shard_stat_gauge(self):
+        out = {}
+        for i, s in enumerate(self.servers):
+            try:
+                stats = dict(s.shard.stats)
+            except Exception:
+                continue
+            for k, v in stats.items():
+                out[(("shard", str(i)), ("key", str(k)))] = float(v)
+        return out
+
     # -- spawning ----------------------------------------------------------
     @classmethod
     def spawn_in_process(

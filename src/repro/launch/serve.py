@@ -10,7 +10,7 @@
 on CPU (suffix-tree drafter warmed by repeated requests). With
 ``--continuous`` the request stream flows through the slot-recycling
 pool (``--slots`` device rows, longest-predicted-first admission) and
-completions are printed as they stream out — the serving shape for
+completions are logged as they stream out — the serving shape for
 heavy traffic. ``--dry-run`` lowers+compiles the full config's serve
 step on the production mesh.
 
@@ -33,11 +33,47 @@ sharded manifest format (``history_manifest.json`` +
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
         --smoke --history-service --shards 2 --workers 2 --scope problem
+
+**Observability** — ``--metrics-port P`` attaches a ``repro.obs``
+``Telemetry`` (metrics registry + round-phase tracer + event log) and
+serves Prometheus text on ``http://127.0.0.1:P/metrics`` (``P`` = 0
+binds an ephemeral port; the chosen port is logged). Multi-worker runs
+get ONE endpoint PER worker at ``P + w``, each aggregating that
+worker's engine round phases, drafter/client counters and fault
+gauges. ``--log-every N`` logs round-timing lines every N rounds
+through ``logging`` (they also land in the structured event log).
 """
 
 from __future__ import annotations
 
 import argparse
+import logging
+
+log = logging.getLogger("repro.launch.serve")
+
+
+def _setup_logging() -> None:
+    if not logging.getLogger().handlers:
+        logging.basicConfig(
+            level=logging.INFO,
+            format="%(asctime)s %(name)s %(levelname)s %(message)s",
+        )
+
+
+def _make_telemetry(args, worker: int = 0):
+    """One (Telemetry, MetricsServer) pair per worker when
+    ``--metrics-port`` is set; the NULL no-op telemetry otherwise."""
+    from repro import obs
+
+    if args.metrics_port < 0:
+        return obs.NULL, None
+    tel = obs.Telemetry()
+    server = obs.MetricsServer(
+        tel,
+        port=(args.metrics_port + worker if args.metrics_port else 0),
+    ).start()
+    log.info("worker %d metrics at %s/metrics", worker, server.url)
+    return tel, server
 
 
 def main() -> None:
@@ -89,6 +125,13 @@ def main() -> None:
     ap.add_argument("--watchdog-deadline", type=float, default=120.0,
                     help="per-worker rollout watchdog deadline in "
                          "seconds (0 disables the watchdog)")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="serve Prometheus /metrics on this port "
+                         "(0 = ephemeral; multi-worker runs bind one "
+                         "endpoint per worker at PORT+w; default off)")
+    ap.add_argument("--log-every", type=int, default=1,
+                    help="log round-timing lines every N rounds "
+                         "(0 silences them; events still recorded)")
     args = ap.parse_args()
     if args.save_history and not args.history_dir:
         ap.error("--save-history requires --history-dir")
@@ -108,7 +151,7 @@ def main() -> None:
             cmd.append("--multi-pod")
         raise SystemExit(subprocess.call(cmd))
 
-    import time
+    _setup_logging()
 
     import jax
     import numpy as np
@@ -130,6 +173,7 @@ def main() -> None:
     if args.history_service:
         _serve_with_service(args, cfg, params)
         return
+    tel, metrics_server = _make_telemetry(args)
     eng = SpecEngine(
         params, cfg,
         EngineConfig(spec_enabled=True, max_new_tokens=32, eos_token=1,
@@ -137,6 +181,7 @@ def main() -> None:
                      fuse_rounds=args.fuse),
         drafter=SuffixDrafter(DrafterConfig(scope=args.scope,
                                             min_match=2)),
+        telemetry=tel,
     )
     if args.history_dir:
         import os
@@ -145,33 +190,43 @@ def main() -> None:
 
         if os.path.exists(persist.history_path(args.history_dir)):
             persist.load_engine_history(eng, args.history_dir)
-            print(
-                f"warm start: {eng.drafter.store.n_rollouts} rollouts / "
-                f"{eng.drafter.store.n_problems} problems from "
-                f"{args.history_dir} (epoch cursor "
-                f"{eng.drafter.store.epoch}, accept "
-                f"{eng.drafter.store.acceptance():.2f})"
+            log.info(
+                "warm start: %d rollouts / %d problems from %s (epoch "
+                "cursor %d, accept %.2f)",
+                eng.drafter.store.n_rollouts, eng.drafter.store.n_problems,
+                args.history_dir, eng.drafter.store.epoch,
+                eng.drafter.store.acceptance(),
             )
         else:
-            print(f"cold start: no history at {args.history_dir}")
+            log.info("cold start: no history at %s", args.history_dir)
 
     def _persist_history() -> None:
         if args.history_dir and args.save_history:
             from repro.history import persist
 
             path = persist.save_engine_history(eng, args.history_dir)
-            print(
-                f"saved history: {eng.drafter.store.n_rollouts} rollouts "
-                f"-> {path}"
+            log.info(
+                "saved history: %d rollouts -> %s",
+                eng.drafter.store.n_rollouts, path,
             )
 
     rng = np.random.default_rng(0)
     try:
-        _serve_rounds(args, eng, rng)
+        _serve_rounds(args, eng, rng, tel)
     finally:
         # Persist whatever history accumulated, interrupted or not —
         # losing a long session's rollouts defeats the warm start.
         _persist_history()
+        if metrics_server is not None:
+            metrics_server.stop()
+
+
+def _log_round(args, tel, rnd: int, msg: str, *fmt_args, **event) -> None:
+    """Round-timing line: always recorded in the structured event log,
+    printed through ``logging`` every ``--log-every`` rounds."""
+    tel.emit("serve_round_done", round=rnd, **event)
+    if args.log_every > 0 and rnd % args.log_every == 0:
+        log.info(msg, *fmt_args)
 
 
 def _serve_with_service(args, cfg, params) -> None:
@@ -199,15 +254,15 @@ def _serve_with_service(args, cfg, params) -> None:
     ):
         loaded = persist.load_service_history(args.history_dir)
         states = loaded["shards"]
-        print(
-            f"warm start: {loaded['n_shards']} shard(s) from "
-            f"{args.history_dir}"
-            + (" (legacy single-store payload)" if loaded["legacy"] else "")
+        log.info(
+            "warm start: %d shard(s) from %s%s",
+            loaded["n_shards"], args.history_dir,
+            " (legacy single-store payload)" if loaded["legacy"] else "",
         )
         if loaded.get("quarantined"):
-            print(
-                f"quarantined {len(loaded['quarantined'])} corrupt "
-                f"history file(s); affected shards cold-start"
+            log.warning(
+                "quarantined %d corrupt history file(s); affected "
+                "shards cold-start", len(loaded["quarantined"]),
             )
     if args.service_mode == "thread":
         svc = HistoryService.spawn_in_process(
@@ -226,11 +281,22 @@ def _serve_with_service(args, cfg, params) -> None:
          if st is not None),
         default=0,
     )
+    # Per-worker telemetry: one registry + /metrics endpoint per worker
+    # (PORT+w), each aggregating that worker's engine, drafter, client
+    # and fault gauges. The service and supervisor report through the
+    # lead worker's registry.
+    tels, metric_servers = [], []
+    for w in range(args.workers):
+        tel, srv = _make_telemetry(args, worker=w)
+        tels.append(tel)
+        metric_servers.append(srv)
+    if tels[0].enabled:
+        svc.attach_telemetry(tels[0])
     supervisor = None
     if args.supervise:
         from repro.fault.supervisor import ShardSupervisor
 
-        supervisor = ShardSupervisor(svc, seed=0)
+        supervisor = ShardSupervisor(svc, seed=0, telemetry=tels[0])
         supervisor.start(interval_s=1.0)
     watchdogs = []
     engines, clients = [], []
@@ -238,6 +304,8 @@ def _serve_with_service(args, cfg, params) -> None:
         # svc.book is live: a supervised restart republishes the new
         # shard address to every client without reconstructing them.
         client = HistoryClient(svc.book, worker_id=f"w{w}")
+        if tels[w].enabled:
+            client.attach_telemetry(tels[w])
         engines.append(SpecEngine(
             params, cfg,
             EngineConfig(spec_enabled=True, max_new_tokens=32, eos_token=1,
@@ -246,6 +314,7 @@ def _serve_with_service(args, cfg, params) -> None:
             drafter=SuffixDrafter(
                 DrafterConfig(scope=args.scope, min_match=2), remote=client
             ),
+            telemetry=tels[w],
         ))
         engines[-1].epoch = engines[-1].drafter.epoch = epoch0
         clients.append(client)
@@ -255,10 +324,9 @@ def _serve_with_service(args, cfg, params) -> None:
             watchdogs.append(RolloutWatchdog(args.watchdog_deadline))
         else:
             watchdogs.append(None)
-    print(
-        f"history service: {args.shards} shard(s) "
-        f"[{args.service_mode}] x {args.workers} worker(s) at "
-        f"{svc.addresses}"
+    log.info(
+        "history service: %d shard(s) [%s] x %d worker(s) at %s",
+        args.shards, args.service_mode, args.workers, svc.addresses,
     )
     rng = np.random.default_rng(0)
     try:
@@ -285,9 +353,12 @@ def _serve_with_service(args, cfg, params) -> None:
                 acc += st.n_accepted
                 rds += st.n_rounds
             dt = time.perf_counter() - t0
-            print(
-                f"round {rnd}: {dt*1e3:8.1f} ms  fwd={fwd:4d} "
-                f"accept/round={acc/max(rds,1):6.2f}"
+            _log_round(
+                args, tels[0], rnd,
+                "round %d: %8.1f ms  fwd=%4d accept/round=%6.2f",
+                rnd, dt * 1e3, fwd, acc / max(rds, 1),
+                ms=dt * 1e3, fwd=fwd,
+                accept_per_round=acc / max(rds, 1),
             )
             for eng in engines:
                 eng.begin_iteration(base_epoch + rnd + 1)
@@ -295,7 +366,7 @@ def _serve_with_service(args, cfg, params) -> None:
             for c in clients:
                 c.flush()
             path = svc.save(args.history_dir)
-            print(f"saved sharded history manifest -> {path}")
+            log.info("saved sharded history manifest -> %s", path)
     finally:
         if supervisor is not None:
             # stop before the service so the restart loop never races
@@ -304,9 +375,12 @@ def _serve_with_service(args, cfg, params) -> None:
         for c in clients:
             c.close()
         svc.stop()
+        for srv in metric_servers:
+            if srv is not None:
+                srv.stop()
 
 
-def _serve_rounds(args, eng, rng) -> None:
+def _serve_rounds(args, eng, rng, tel) -> None:
     import time
 
     import jax
@@ -334,18 +408,22 @@ def _serve_rounds(args, eng, rng) -> None:
             t0 = time.perf_counter()
             for fin in eng.serve(reqs, slots=args.slots,
                                  key=jax.random.key(rnd), stats=st):
-                print(
-                    f"  req {fin.rid:3d} ({fin.problem_id}) done: "
-                    f"{len(fin.output):3d} toks, rounds "
-                    f"{fin.admit_round}->{fin.finish_round}"
+                log.info(
+                    "  req %3d (%s) done: %3d toks, rounds %d->%d",
+                    fin.rid, fin.problem_id, len(fin.output),
+                    fin.admit_round, fin.finish_round,
                 )
             dt = time.perf_counter() - t0
             toks = st.n_toks_emitted
-            print(
-                f"round {rnd}: {dt*1e3:8.1f} ms  {n_req} reqs / "
-                f"{args.slots} slots  makespan={st.n_rounds} rounds "
-                f"fwd={st.n_fwd:4d} tok/s={toks/max(dt,1e-9):7.1f} "
-                f"accept/round={st.acceptance_per_round:6.2f}"
+            _log_round(
+                args, tel, rnd,
+                "round %d: %8.1f ms  %d reqs / %d slots  makespan=%d "
+                "rounds fwd=%4d tok/s=%7.1f accept/round=%6.2f",
+                rnd, dt * 1e3, n_req, args.slots, st.n_rounds, st.n_fwd,
+                toks / max(dt, 1e-9), st.acceptance_per_round,
+                ms=dt * 1e3, reqs=n_req, fwd=st.n_fwd,
+                tok_per_s=toks / max(dt, 1e-9),
+                accept_per_round=st.acceptance_per_round,
             )
             eng.begin_iteration(base_epoch + rnd + 1)
         return
@@ -358,9 +436,13 @@ def _serve_rounds(args, eng, rng) -> None:
             pids.append(f"q{seed}")
         t0 = time.perf_counter()
         outs, st = eng.generate(prompts, pids, key=jax.random.key(rnd))
-        print(
-            f"round {rnd}: {(time.perf_counter()-t0)*1e3:8.1f} ms "
-            f"fwd={st.n_fwd:4d} accept/round={st.acceptance_per_round:6.2f}"
+        dt = time.perf_counter() - t0
+        _log_round(
+            args, tel, rnd,
+            "round %d: %8.1f ms fwd=%4d accept/round=%6.2f",
+            rnd, dt * 1e3, st.n_fwd, st.acceptance_per_round,
+            ms=dt * 1e3, fwd=st.n_fwd,
+            accept_per_round=st.acceptance_per_round,
         )
         eng.begin_iteration(base_epoch + rnd + 1)
 

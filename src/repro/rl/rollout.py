@@ -198,7 +198,10 @@ class MultiWorkerRollout:
         supervisor=None,
         flush_timeout: float = 10.0,
         flush_retries: int = 3,
+        telemetry=None,
     ):
+        from repro import obs
+
         if not workers:
             raise ValueError("MultiWorkerRollout needs >= 1 worker")
         gs = {w.G for w in workers}
@@ -211,7 +214,16 @@ class MultiWorkerRollout:
         self.supervisor = supervisor
         self.flush_timeout = float(flush_timeout)
         self.flush_retries = int(flush_retries)
-        self.stats: collections.Counter = collections.Counter()
+        self.telemetry = (
+            telemetry if telemetry is not None else obs.get_telemetry()
+        )
+        # Counter-shaped fleet view mirrored into the registry — the
+        # existing ``mw.stats["worker_failures"]`` reads are unchanged.
+        self.stats = obs.MirroredCounter(
+            sink=self.telemetry.mirror_sink(
+                "das_rollout_stat_total", "MultiWorkerRollout counters"
+            )
+        )
         self._calls = 0
 
     @property
@@ -240,6 +252,10 @@ class MultiWorkerRollout:
             if remote.flush(timeout=self.flush_timeout):
                 return
         self.stats["degraded_flushes"] += 1
+        self.telemetry.emit(
+            "degraded_flush", retries=self.flush_retries,
+            timeout_s=self.flush_timeout,
+        )
         log.warning(
             "publish flush still timing out after %d shard-restart "
             "attempts; continuing with a degraded epoch barrier (peers "
@@ -300,6 +316,10 @@ class MultiWorkerRollout:
                 v = survivors[w % len(survivors)]
                 queue.append((v, idxs, wkey))
                 self.stats["requeued_problems"] += len(idxs)
+                self.telemetry.emit(
+                    "watchdog_requeue", worker=w, to_worker=v,
+                    n_problems=len(idxs), error=str(exc),
+                )
                 log.warning(
                     "rollout worker %d expired (%s); re-queued %d "
                     "problem(s) to worker %d", w, exc, len(idxs), v,

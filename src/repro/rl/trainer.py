@@ -87,10 +87,16 @@ class Trainer:
         task: Task,
         tcfg: TrainerConfig,
         params=None,
+        telemetry=None,
     ) -> None:
+        from repro import obs
+
         self.cfg = cfg
         self.task = task
         self.tcfg = tcfg
+        self.telemetry = (
+            telemetry if telemetry is not None else obs.get_telemetry()
+        )
         key = jax.random.key(tcfg.seed)
         if params is None:
             ptree = M.init_params(cfg, key)
@@ -141,6 +147,7 @@ class Trainer:
                 self.params, cfg, tcfg.engine,
                 drafter=SuffixDrafter(tcfg.drafter),
                 length_policy=LengthPolicy(),
+                telemetry=self.telemetry,
             )]
             self.engine = self.engines[0]
             self.worker = RolloutWorker(
@@ -157,6 +164,8 @@ class Trainer:
             states=service_states,
             n_problems=len(self.task.problems()),
         )
+        if self.telemetry.enabled:
+            self.service.attach_telemetry(self.telemetry)
         warm_lengths = []
         if service_states is not None:
             # Pooled warm priors, extracted ONCE from the restored shard
@@ -170,7 +179,9 @@ class Trainer:
         if tcfg.fault_tolerant:
             from repro.fault import ShardSupervisor
 
-            self.supervisor = ShardSupervisor(self.service, seed=tcfg.seed)
+            self.supervisor = ShardSupervisor(
+                self.service, seed=tcfg.seed, telemetry=self.telemetry
+            )
             if tcfg.supervise_interval_s > 0:
                 self.supervisor.start(tcfg.supervise_interval_s)
         self.engines = []
@@ -186,10 +197,13 @@ class Trainer:
                 # would double-count every peer observation
                 skip_initial_telemetry=service_states is not None,
             )
+            if self.telemetry.enabled:
+                client.attach_telemetry(self.telemetry)
             eng = SpecEngine(
                 self.params, cfg, tcfg.engine,
                 drafter=SuffixDrafter(tcfg.drafter, remote=client),
                 length_policy=LengthPolicy(),
+                telemetry=self.telemetry,
             )
             for key, lens in warm_lengths:
                 eng.length_policy.observe_many(key, lens)
@@ -209,13 +223,17 @@ class Trainer:
                 for e in self.engines
             ]
             self.worker = MultiWorkerRollout(
-                workers, fault_tolerant=True, supervisor=self.supervisor
+                workers, fault_tolerant=True, supervisor=self.supervisor,
+                telemetry=self.telemetry,
             )
         else:
-            self.worker = MultiWorkerRollout([
-                RolloutWorker(e, self.task, tcfg.group_size)
-                for e in self.engines
-            ])
+            self.worker = MultiWorkerRollout(
+                [
+                    RolloutWorker(e, self.task, tcfg.group_size)
+                    for e in self.engines
+                ],
+                telemetry=self.telemetry,
+            )
 
     def close(self) -> None:
         """Stop the history service and its clients (no-op when
@@ -347,6 +365,8 @@ class Trainer:
                     "grad_norm": float(metrics["grad_norm"]),
                 }
                 self.history.append(rec)
+                if self.telemetry.enabled:
+                    self._note_step_obs(rec)
                 self._step += 1
                 self._batch_idx = bi + 1
                 if (
@@ -361,6 +381,32 @@ class Trainer:
                 self._epoch += 1
                 self._batch_idx = 0
         return self.history
+
+    def _note_step_obs(self, rec: Dict[str, Any]) -> None:
+        """Per-iteration telemetry rollup: last-step gauges + one
+        ``train_step`` event (the per-round detail is already in the
+        engines' registries — same ``Telemetry`` instance)."""
+        reg = self.telemetry.registry
+        gauges = {
+            "das_train_step": ("Last completed trainer step", "step"),
+            "das_train_reward_mean": (
+                "Mean reward of the last rollout batch", "reward_mean"),
+            "das_train_loss": ("Last GRPO loss", "loss"),
+            "das_train_gen_seconds": (
+                "Rollout wall time of the last step", "gen_time_s"),
+            "das_train_update_seconds": (
+                "Train-step wall time of the last step", "train_time_s"),
+            "das_train_accept_per_round": (
+                "Mean accepted tokens per round, last step",
+                "accept_per_round"),
+        }
+        for name, (help_, field_) in gauges.items():
+            reg.gauge(name, help_).set(float(rec[field_]))
+        self.telemetry.emit(
+            "train_step", step=rec["step"], epoch=rec["epoch"],
+            reward_mean=rec["reward_mean"], loss=rec["loss"],
+            gen_time_s=rec["gen_time_s"], train_time_s=rec["train_time_s"],
+        )
 
     # -- persistence -------------------------------------------------------
     def save_checkpoint(self, path: str) -> str:
