@@ -1,0 +1,37 @@
+"""dascheck: repo-native static analysis for the DAS serving stack.
+
+The Python type system cannot see the three invariants this codebase
+actually lives on: zero steady-state recompiles in the fused round,
+lock-guarded cross-thread state, and injectable clocks.  ``dascheck``
+enforces them at review time with four AST-based rule families:
+
+  DAS0xx  trace hygiene    host syncs / tracer branches / recompile
+                           hazards in jit-traced or ``# das: hot-path``
+                           marked code
+  DAS1xx  lock discipline  ``# guarded-by: self._lock`` annotated
+                           attributes accessed outside their lock
+  DAS2xx  clock discipline raw ``time.sleep``/``time.monotonic``/
+                           ``time.time`` outside ``fault/clock.py``
+  DAS3xx  project lints    ``das_`` metric prefix, exception taxonomy,
+                           ``except Exception`` justification, stray
+                           ``print``
+
+Run it with ``python -m repro.analysis [--baseline FILE] [paths]``.
+Suppress a finding in place with a justified comment on the flagged
+line::
+
+    x = np.asarray(outs)  # dascheck: disable=DAS001 -- the round's one download
+
+The package is stdlib-only on purpose: CI lints the tree without
+installing jax.
+"""
+
+from .core import (  # noqa: F401
+    Finding,
+    Project,
+    Rule,
+    all_rules,
+    analyze,
+    register,
+)
+from .main import main  # noqa: F401

@@ -1,0 +1,364 @@
+"""Hot-path index: which functions are jit-traced, which are host-hot.
+
+Two notions, built per Project and shared by the trace-hygiene rules:
+
+* **traced** — the function body runs under `jax.jit` tracing: it is
+  decorated with / wrapped in `jax.jit` (including
+  `functools.partial(jax.jit, ...)` decorators and `x = jax.jit(f)`
+  assignments), passed to a tracing higher-order function
+  (`jax.vmap`, `jax.lax.scan` ...), lexically nested inside a traced
+  function, or called from one (transitively, across modules via
+  imports).  Tracer values flow through these bodies, so host syncs
+  AND Python branches on traced values are bugs.
+
+* **hot** — superset of traced: additionally any function carrying a
+  `# das: hot-path` marker comment.  Markers tag host-side round
+  loops; they are *not* transitive through calls (a round loop may
+  legitimately call slow-path helpers), but lexically nested
+  functions inherit the marker.  In hot-but-untraced code only
+  explicit device syncs are flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .core import Module, Project
+
+HOT_MARKER = "das: hot-path"
+
+# Names whose call arguments are traced by jax.
+_TRACING_HOFS = {
+    "vmap", "pmap", "scan", "while_loop", "fori_loop", "cond", "switch",
+    "checkpoint", "remat", "shard_map", "grad", "value_and_grad",
+    "pallas_call", "custom_vjp", "custom_jvp",
+}
+
+# Parameter names that are static-by-convention in this repo: jitted
+# cores pass arrays positionally and config/flags as keyword-only args;
+# `cfg`/`config` objects are hashable dataclasses closed over or passed
+# static.
+CONVENTION_STATIC = {"self", "cls", "cfg", "config", "mcfg", "ecfg", "dcfg"}
+
+
+def _terminal_attr(node: ast.AST) -> str:
+    """'jax.lax.while_loop' -> 'while_loop'; Name -> its id."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted repr ('functools.partial'), '' if not a chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def is_jit_expr(node: ast.AST) -> Tuple[bool, Set[str]]:
+    """Does this decorator/call expression wrap its target in jax.jit?
+
+    Returns (is_jit, static_argnames).  Recognizes:
+      @jax.jit                      @jit
+      @functools.partial(jax.jit, static_argnames=(...))
+      @partial(jit, ...)            jax.jit(f, ...)
+    """
+    if _terminal_attr(node) == "jit":
+        return True, set()
+    if isinstance(node, ast.Call):
+        fn = _terminal_attr(node.func)
+        if fn == "jit":
+            return True, _static_argnames(node)
+        if fn == "partial" and node.args and _terminal_attr(node.args[0]) == "jit":
+            return True, _static_argnames(node)
+    return False, set()
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                out.add(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                for elt in v.elts:
+                    if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                        out.add(elt.value)
+    return out
+
+
+@dataclass
+class FuncInfo:
+    qualname: str                        # "SpecEngine.generate" / "serve.<locals>.consume"
+    module: str                          # dotted module name
+    node: ast.AST                        # FunctionDef | AsyncFunctionDef | Lambda
+    parent: Optional["FuncInfo"]         # lexical parent function
+    cls: Optional[str]                   # enclosing class name
+    jit: bool = False
+    marker: bool = False
+    static_argnames: Set[str] = field(default_factory=set)
+    calls: Set[str] = field(default_factory=set)     # local keys it may call
+
+    @property
+    def key(self) -> str:
+        return f"{self.module}:{self.qualname}"
+
+
+@dataclass
+class ModuleGraph:
+    module: Module
+    funcs: Dict[str, FuncInfo] = field(default_factory=dict)   # key -> info
+    by_name: Dict[str, List[FuncInfo]] = field(default_factory=dict)
+    import_alias: Dict[str, str] = field(default_factory=dict)  # local -> dotted module
+    from_imports: Dict[str, Tuple[str, str]] = field(default_factory=dict)  # local -> (module, name)
+    aliases: Dict[str, str] = field(default_factory=dict)       # local name -> func simple name
+
+
+class _Indexer(ast.NodeVisitor):
+    def __init__(self, module: Module, graph: ModuleGraph):
+        self.module = module
+        self.graph = graph
+        self.func_stack: List[FuncInfo] = []
+        self.class_stack: List[str] = []
+
+    # -- imports ----------------------------------------------------------
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            self.graph.import_alias[a.asname or a.name.split(".")[0]] = a.name
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        base = node.module or ""
+        if node.level:
+            # relative import: anchor to this module's package
+            pkg = self.module.name.rsplit(".", node.level)[0]
+            base = f"{pkg}.{base}" if base else pkg
+        for a in node.names:
+            self.graph.from_imports[a.asname or a.name] = (base, a.name)
+        self.generic_visit(node)
+
+    # -- functions --------------------------------------------------------
+    def _qualname(self, name: str) -> str:
+        parts: List[str] = []
+        if self.class_stack:
+            parts.append(".".join(self.class_stack))
+        if self.func_stack:
+            parts.append(self.func_stack[-1].qualname.split(".")[-1] + ".<locals>")
+        parts.append(name)
+        return ".".join(parts) if len(parts) > 1 else name
+
+    def _handle_func(self, node) -> None:
+        qual = self._qualname(node.name)
+        jit = False
+        statics: Set[str] = set()
+        for dec in getattr(node, "decorator_list", []):
+            is_j, s = is_jit_expr(dec)
+            if is_j:
+                jit = True
+                statics |= s
+        marker = self.module.comment_on_or_above(node.lineno, HOT_MARKER)
+        info = FuncInfo(
+            qualname=qual,
+            module=self.module.name,
+            node=node,
+            parent=self.func_stack[-1] if self.func_stack else None,
+            cls=self.class_stack[-1] if self.class_stack else None,
+            jit=jit,
+            marker=marker,
+            static_argnames=statics,
+        )
+        self.graph.funcs[info.key] = info
+        self.graph.by_name.setdefault(node.name, []).append(info)
+        self.func_stack.append(info)
+        for child in node.body:
+            self.visit(child)
+        self.func_stack.pop()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._handle_func(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._handle_func(node)
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.class_stack.append(node.name)
+        for child in node.body:
+            self.visit(child)
+        self.class_stack.pop()
+
+    # -- calls / aliases --------------------------------------------------
+    def visit_Assign(self, node: ast.Assign) -> None:
+        # `core = functools.partial(fused_round_core, ...)` aliases core->fn
+        # `f = jax.jit(g)` marks g traced (recorded as an alias + jit call).
+        if isinstance(node.value, ast.Call) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            fn = _terminal_attr(node.value.func)
+            if isinstance(tgt, ast.Name) and fn == "partial" and node.value.args:
+                inner = _terminal_attr(node.value.args[0])
+                if inner:
+                    self.graph.aliases[tgt.id] = inner
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if self.func_stack:
+            cur = self.func_stack[-1]
+            fn = node.func
+            name = _terminal_attr(fn)
+            if isinstance(fn, ast.Name):
+                cur.calls.add(fn.id)
+            elif isinstance(fn, ast.Attribute):
+                if isinstance(fn.value, ast.Name):
+                    if fn.value.id == "self":
+                        cur.calls.add(f"self.{fn.attr}")
+                    else:
+                        cur.calls.add(f"{fn.value.id}.{fn.attr}")
+            # jax.jit(f) / jax.vmap(f) / lax.scan(f, ...): arguments that are
+            # plain names enter tracing.
+            if name == "jit" or name in _TRACING_HOFS:
+                for arg in node.args:
+                    t = _terminal_attr(arg)
+                    if t:
+                        cur.calls.add(f"<traced>{t}")
+        self.generic_visit(node)
+
+
+def build_module_graph(module: Module) -> ModuleGraph:
+    graph = ModuleGraph(module=module)
+    _Indexer(module, graph).visit(module.tree)
+    return graph
+
+
+class HotIndex:
+    """Project-wide traced/hot function sets."""
+
+    def __init__(self, project: Project):
+        self.graphs: Dict[str, ModuleGraph] = {
+            m.name: build_module_graph(m) for m in project.modules
+        }
+        self.traced: Set[str] = set()
+        self.hot: Set[str] = set()
+        self._propagate()
+
+    # -- resolution -------------------------------------------------------
+    def _resolve_call(self, g: ModuleGraph, caller: FuncInfo, ref: str) -> List[FuncInfo]:
+        traced_arg = ref.startswith("<traced>")
+        if traced_arg:
+            ref = ref[len("<traced>"):]
+        ref = g.aliases.get(ref, ref)
+        out: List[FuncInfo] = []
+        if ref.startswith("self."):
+            meth = ref[5:]
+            if caller.cls:
+                for cand in g.by_name.get(meth, []):
+                    if cand.cls == caller.cls:
+                        out.append(cand)
+            return out
+        if "." in ref:
+            head, _, tail = ref.partition(".")
+            target_mod = g.import_alias.get(head)
+            if target_mod is None and head in g.from_imports:
+                base, name = g.from_imports[head]
+                target_mod = f"{base}.{name}"
+            if target_mod is not None:
+                tg = self._graph_for(target_mod)
+                if tg is not None:
+                    out.extend(c for c in tg.by_name.get(tail, []) if c.cls is None)
+            return out
+        # bare name: same module first, then from-imports
+        for cand in g.by_name.get(ref, []):
+            if cand.cls is None or caller.cls == cand.cls:
+                out.append(cand)
+        if not out and ref in g.from_imports:
+            base, name = g.from_imports[ref]
+            tg = self._graph_for(base)
+            if tg is not None:
+                out.extend(c for c in tg.by_name.get(name, []) if c.cls is None)
+        return out
+
+    def _graph_for(self, dotted: str) -> Optional[ModuleGraph]:
+        if dotted in self.graphs:
+            return self.graphs[dotted]
+        for name, g in self.graphs.items():
+            if name.endswith("." + dotted) or dotted.endswith("." + name):
+                return g
+        return None
+
+    # -- propagation ------------------------------------------------------
+    def _propagate(self) -> None:
+        work: List[FuncInfo] = []
+        for g in self.graphs.values():
+            for info in g.funcs.values():
+                if info.jit or self._jit_wrapped(g, info):
+                    self.traced.add(info.key)
+                    work.append(info)
+                if info.marker:
+                    self.hot.add(info.key)
+        # lexical nesting: children of traced/hot functions inherit
+        def inherit(pred_set: Set[str]) -> None:
+            changed = True
+            while changed:
+                changed = False
+                for g in self.graphs.values():
+                    for info in g.funcs.values():
+                        if info.key in pred_set:
+                            continue
+                        if info.parent is not None and info.parent.key in pred_set:
+                            pred_set.add(info.key)
+                            if pred_set is self.traced:
+                                work.append(info)
+                            changed = True
+
+        inherit(self.traced)
+        # call-graph closure over traced (markers are not transitive)
+        seen = set(self.traced)
+        while work:
+            info = work.pop()
+            g = self.graphs[info.module]
+            for ref in info.calls:
+                for callee in self._resolve_call(g, info, ref):
+                    if callee.key not in seen:
+                        seen.add(callee.key)
+                        self.traced.add(callee.key)
+                        work.append(callee)
+        inherit(self.traced)
+        inherit(self.hot)
+        self.hot |= self.traced
+
+    def _jit_wrapped(self, g: ModuleGraph, info: FuncInfo) -> bool:
+        """`f` defined here and later wrapped: x = jax.jit(f, ...)."""
+        for other in g.funcs.values():
+            if f"<traced>{info.node.name}" in other.calls and other.cls in (None, info.cls):
+                return True
+        # module-level wraps are not inside any function; scan top-level stmts
+        for node in ast.walk(g.module.tree):
+            if isinstance(node, ast.Call):
+                is_j, _ = is_jit_expr(node)
+                name = _terminal_attr(node.func)
+                if (is_j or name in _TRACING_HOFS) and node.args:
+                    if _terminal_attr(node.args[0]) == info.node.name:
+                        return True
+        return False
+
+    # -- queries ----------------------------------------------------------
+    def functions(self, module: Module) -> List[FuncInfo]:
+        return list(self.graphs[module.name].funcs.values())
+
+    def is_traced(self, info: FuncInfo) -> bool:
+        return info.key in self.traced
+
+    def is_hot(self, info: FuncInfo) -> bool:
+        return info.key in self.hot
+
+
+def hot_index(project: Project) -> HotIndex:
+    return project.cache("hot_index", lambda: HotIndex(project))

@@ -1,0 +1,337 @@
+"""Core machinery for dascheck: findings, suppressions, baseline, registry.
+
+Stdlib-only.  Rules live in ``repro.analysis.rules``; each registers a
+``Rule`` subclass via the ``@register`` decorator and gets handed one
+``Module`` at a time plus the whole ``Project`` for cross-module lookups.
+"""
+
+from __future__ import annotations
+
+import ast
+import hashlib
+import io
+import json
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+# --------------------------------------------------------------------------
+# findings
+
+_SEVERITIES = ("error", "warning")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str            # "DAS001"
+    path: str            # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    symbol: str = ""     # enclosing qualname ("SpecEngine.generate")
+
+    def render(self) -> str:
+        where = f" [{self.symbol}]" if self.symbol else ""
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}{where}"
+
+    def fingerprint(self, line_text: str) -> str:
+        # Line numbers drift; the (rule, file, symbol, normalized text)
+        # tuple survives unrelated edits above the finding.
+        norm = " ".join(line_text.split())
+        raw = f"{self.rule}|{self.path}|{self.symbol}|{norm}"
+        return hashlib.sha1(raw.encode("utf-8")).hexdigest()[:16]
+
+
+# --------------------------------------------------------------------------
+# suppressions
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*dascheck:\s*disable=(?P<rules>[A-Z0-9,\s]+?)"
+    r"(?:--\s*(?P<why>.*))?$"
+)
+
+
+@dataclass
+class Suppression:
+    rules: Tuple[str, ...]
+    justification: str
+    line: int
+    used: bool = False
+
+    def covers(self, rule_id: str) -> bool:
+        return rule_id in self.rules or "*" in self.rules
+
+
+def _parse_suppression(comment: str, line: int) -> Optional[Suppression]:
+    m = _SUPPRESS_RE.search(comment)
+    if not m:
+        return None
+    rules = tuple(r.strip() for r in m.group("rules").split(",") if r.strip())
+    why = (m.group("why") or "").strip()
+    return Suppression(rules=rules, justification=why, line=line)
+
+
+# --------------------------------------------------------------------------
+# per-module model
+
+
+@dataclass
+class Module:
+    path: Path                     # absolute
+    rel: str                       # repo-relative posix path (for output)
+    name: str                      # dotted module name ("repro.history.client")
+    source: str
+    tree: ast.Module
+    lines: List[str]
+    comments: Dict[int, str] = field(default_factory=dict)       # line -> text
+    suppressions: Dict[int, Suppression] = field(default_factory=dict)
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1]
+        return ""
+
+    def comment_on_or_above(self, line: int, needle: str) -> bool:
+        """True if `needle` appears in a comment on `line` or on a run of
+        pure comment/decorator lines immediately above it."""
+        if needle in self.comments.get(line, ""):
+            return True
+        ln = line - 1
+        while ln >= 1:
+            text = self.lines[ln - 1].strip()
+            if needle in self.comments.get(ln, ""):
+                return True
+            if text.startswith("#") or text.startswith("@") or not text:
+                ln -= 1
+                continue
+            break
+        return False
+
+
+def load_module(path: Path, repo_root: Path) -> Module:
+    source = path.read_text(encoding="utf-8")
+    tree = ast.parse(source, filename=str(path))
+    try:
+        rel = path.resolve().relative_to(repo_root.resolve()).as_posix()
+    except ValueError:
+        rel = path.as_posix()
+    name = _dotted_name(path)
+    mod = Module(
+        path=path,
+        rel=rel,
+        name=name,
+        source=source,
+        tree=tree,
+        lines=source.splitlines(),
+    )
+    for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+        if tok.type == tokenize.COMMENT:
+            line = tok.start[0]
+            mod.comments[line] = tok.string
+            sup = _parse_suppression(tok.string, line)
+            if sup is not None:
+                mod.suppressions[line] = sup
+    return mod
+
+
+def _dotted_name(path: Path) -> str:
+    parts = list(path.with_suffix("").parts)
+    for anchor in ("repro",):
+        if anchor in parts:
+            return ".".join(parts[parts.index(anchor):])
+    return path.stem
+
+
+# --------------------------------------------------------------------------
+# project
+
+
+class Project:
+    """All analyzed modules plus shared cross-module indices."""
+
+    def __init__(self, modules: Sequence[Module]):
+        self.modules: List[Module] = list(modules)
+        self.by_name: Dict[str, Module] = {m.name: m for m in modules}
+        self._caches: Dict[str, object] = {}
+
+    def cache(self, key: str, build):
+        """Memoize a cross-module index (e.g. the hot-path call graph)."""
+        if key not in self._caches:
+            self._caches[key] = build()
+        return self._caches[key]
+
+    def resolve(self, dotted: str) -> Optional[Module]:
+        """Find a module by dotted name, accepting suffix matches so
+        `repro.models.model` resolves from an alias index of `models.model`."""
+        if dotted in self.by_name:
+            return self.by_name[dotted]
+        for name, mod in self.by_name.items():
+            if name.endswith("." + dotted) or dotted.endswith("." + name):
+                return mod
+        return None
+
+
+# --------------------------------------------------------------------------
+# rules
+
+class Rule:
+    id: str = ""
+    name: str = ""
+    family: str = ""
+    description: str = ""
+
+    def check(self, module: Module, project: Project) -> Iterable[Finding]:
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(cls):
+    inst = cls()
+    if not inst.id:
+        raise ValueError(f"rule {cls.__name__} has no id")
+    if inst.id in _REGISTRY:
+        raise ValueError(f"duplicate rule id {inst.id}")
+    _REGISTRY[inst.id] = inst
+    return cls
+
+
+def all_rules() -> Dict[str, Rule]:
+    # Import for side effects: each rules module registers itself.
+    from . import rules  # noqa: F401
+
+    return dict(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# baseline
+
+def load_baseline(path: Path) -> Dict[str, List[str]]:
+    data = json.loads(path.read_text(encoding="utf-8"))
+    if not isinstance(data, dict) or "entries" not in data:
+        raise ValueError(f"malformed baseline file: {path}")
+    return {e["fingerprint"]: e for e in data["entries"]}
+
+
+def write_baseline(path: Path, findings: Sequence[Tuple[Finding, str]]) -> None:
+    entries = [
+        {
+            "fingerprint": f.fingerprint(line_text),
+            "rule": f.rule,
+            "path": f.path,
+            "symbol": f.symbol,
+        }
+        for f, line_text in findings
+    ]
+    payload = {"version": 1, "entries": entries}
+    path.write_text(json.dumps(payload, indent=2) + "\n", encoding="utf-8")
+
+
+# --------------------------------------------------------------------------
+# driver
+
+
+@dataclass
+class Report:
+    findings: List[Finding]                       # actionable (not suppressed/baselined)
+    suppressed: int
+    baselined: int
+    bad_suppressions: List[Finding]               # disable= without justification
+    files: int
+
+
+def collect_files(paths: Sequence[str], repo_root: Path) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        pp = Path(p)
+        if not pp.is_absolute():
+            pp = repo_root / pp
+        if pp.is_dir():
+            out.extend(sorted(f for f in pp.rglob("*.py") if "__pycache__" not in f.parts))
+        elif pp.suffix == ".py":
+            out.append(pp)
+    return out
+
+
+def analyze(
+    paths: Sequence[str],
+    repo_root: Optional[Path] = None,
+    baseline: Optional[Path] = None,
+    select: Optional[Sequence[str]] = None,
+) -> Report:
+    root = repo_root or Path.cwd()
+    files = collect_files(paths, root)
+    modules = [load_module(f, root) for f in files]
+    project = Project(modules)
+    rules = all_rules()
+    if select:
+        rules = {rid: r for rid, r in rules.items() if rid in select}
+
+    base = load_baseline(baseline) if baseline else {}
+
+    actionable: List[Finding] = []
+    bad_suppressions: List[Finding] = []
+    n_suppressed = 0
+    n_baselined = 0
+    for mod in modules:
+        for rule in rules.values():
+            for f in rule.check(mod, project):
+                sup = mod.suppressions.get(f.line)
+                if sup is not None and sup.covers(f.rule):
+                    if sup.justification:
+                        sup.used = True
+                        n_suppressed += 1
+                        continue
+                    bad_suppressions.append(
+                        Finding(
+                            rule=f.rule,
+                            path=f.path,
+                            line=f.line,
+                            col=f.col,
+                            message=(
+                                f"suppression for {f.rule} has no justification "
+                                "(write `# dascheck: disable="
+                                f"{f.rule} -- <why>`)"
+                            ),
+                            symbol=f.symbol,
+                        )
+                    )
+                    continue
+                fp = f.fingerprint(mod.line_text(f.line))
+                if fp in base:
+                    n_baselined += 1
+                    continue
+                actionable.append(f)
+
+    actionable.extend(bad_suppressions)
+    actionable.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return Report(
+        findings=actionable,
+        suppressed=n_suppressed,
+        baselined=n_baselined,
+        bad_suppressions=bad_suppressions,
+        files=len(modules),
+    )
+
+
+def analyze_for_baseline(
+    paths: Sequence[str], repo_root: Optional[Path] = None
+) -> List[Tuple[Finding, str]]:
+    """Like analyze() but returns (finding, line_text) pairs with no
+    baseline filtering, for --write-baseline."""
+    root = repo_root or Path.cwd()
+    files = collect_files(paths, root)
+    modules = [load_module(f, root) for f in files]
+    project = Project(modules)
+    out: List[Tuple[Finding, str]] = []
+    for mod in modules:
+        for rule in all_rules().values():
+            for f in rule.check(mod, project):
+                sup = mod.suppressions.get(f.line)
+                if sup is not None and sup.covers(f.rule) and sup.justification:
+                    continue
+                out.append((f, mod.line_text(f.line)))
+    return out

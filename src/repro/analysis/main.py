@@ -1,0 +1,94 @@
+"""dascheck CLI: ``python -m repro.analysis [--baseline FILE] [paths]``."""
+# das: entrypoint
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from .core import (
+    all_rules,
+    analyze,
+    analyze_for_baseline,
+    write_baseline,
+)
+
+
+def _find_repo_root(start: Path) -> Path:
+    cur = start.resolve()
+    for cand in (cur, *cur.parents):
+        if (cand / ".git").exists() or (cand / "ROADMAP.md").exists():
+            return cand
+    return start
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="dascheck: static analysis for DAS hot-path, lock and clock invariants",
+    )
+    ap.add_argument("paths", nargs="*", default=None, help="files or directories (default: src)")
+    ap.add_argument("--baseline", type=Path, default=None, help="JSON baseline of accepted findings")
+    ap.add_argument("--write-baseline", type=Path, default=None, metavar="FILE",
+                    help="write current findings as the new baseline and exit 0")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--select", nargs="*", default=None, metavar="DASxxx",
+                    help="run only these rule ids")
+    ap.add_argument("--list-rules", action="store_true", help="print the rule catalog and exit")
+    ap.add_argument("--root", type=Path, default=None, help="repo root (default: auto-detect)")
+    return ap
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for rid, rule in sorted(all_rules().items()):
+            print(f"{rid}  [{rule.family}] {rule.name}")
+            print(f"        {rule.description}")
+        return 0
+
+    paths: List[str] = list(args.paths) or ["src"]
+    root = args.root or _find_repo_root(Path.cwd())
+
+    if args.write_baseline is not None:
+        pairs = analyze_for_baseline(paths, repo_root=root)
+        write_baseline(args.write_baseline, pairs)
+        print(f"dascheck: wrote {len(pairs)} baseline entries to {args.write_baseline}")
+        return 0
+
+    report = analyze(paths, repo_root=root, baseline=args.baseline, select=args.select)
+
+    if args.format == "json":
+        payload = {
+            "findings": [
+                {
+                    "rule": f.rule,
+                    "path": f.path,
+                    "line": f.line,
+                    "col": f.col,
+                    "message": f.message,
+                    "symbol": f.symbol,
+                }
+                for f in report.findings
+            ],
+            "files": report.files,
+            "suppressed": report.suppressed,
+            "baselined": report.baselined,
+        }
+        print(json.dumps(payload, indent=2))
+    else:
+        for f in report.findings:
+            print(f.render())
+        tail = (
+            f"dascheck: {len(report.findings)} finding(s) in {report.files} file(s)"
+            f" ({report.suppressed} suppressed, {report.baselined} baselined)"
+        )
+        print(tail, file=sys.stderr)
+    return 1 if report.findings else 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    raise SystemExit(main())

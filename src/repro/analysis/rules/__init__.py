@@ -1,0 +1,6 @@
+"""Rule families register themselves on import."""
+
+from . import trace_hygiene  # noqa: F401
+from . import lock_discipline  # noqa: F401
+from . import clock_discipline  # noqa: F401
+from . import project_invariants  # noqa: F401

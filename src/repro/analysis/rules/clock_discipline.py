@@ -1,0 +1,110 @@
+"""DAS2xx — clock discipline.
+
+The chaos suite runs on injectable clocks (``repro.fault.clock.Clock``):
+a raw ``time.sleep`` in a code path under test silently reintroduces
+real-time waits and makes deterministic fault schedules flaky, and raw
+``time.monotonic``/``time.time`` deadlines can never be advanced by a
+``VirtualClock``.  DAS201 flags those three calls everywhere outside
+``fault/clock.py`` (the one sanctioned wrapper).  Pure *duration
+measurement* is exempt: ``time.perf_counter`` is allowed — benchmarks
+and phase tracers measure, they never wait.
+
+Whitelisted wall-clock timestamp sites (metric export timestamps, event
+logs) carry an inline justified suppression instead of a baseline
+entry, so every exemption is visible at the call site.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Set
+
+from ..core import Finding, Module, Project, Rule, register
+
+_BANNED = {"sleep", "time", "monotonic", "monotonic_ns", "time_ns"}
+_EXEMPT_SUFFIX = ("fault/clock.py",)
+
+
+def _time_aliases(module: Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "time":
+                    out.add(a.asname or "time")
+    return out
+
+
+def _enclosing_symbol(module: Module, node: ast.AST) -> str:
+    """Qualname of the innermost def containing ``node`` ('' at module
+    scope) — anchors the baseline fingerprint to the function, so two
+    textually identical calls in different functions never collide."""
+    best = None
+    for d in ast.walk(module.tree):
+        if not isinstance(d, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if d.lineno <= node.lineno <= (d.end_lineno or d.lineno):
+            if best is None or d.lineno > best.lineno:
+                best = d
+    return best.name if best is not None else ""
+
+
+def _from_time_names(module: Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "time":
+            for a in node.names:
+                if a.name in _BANNED:
+                    out.add(a.asname or a.name)
+    return out
+
+
+@register
+class RawClockRule(Rule):
+    id = "DAS201"
+    name = "raw-clock-call"
+    family = "clock-discipline"
+    description = (
+        "`time.sleep`/`time.time`/`time.monotonic` outside fault/clock.py; "
+        "take a `repro.fault.clock.Clock` and use `clock.sleep()`/"
+        "`clock.now()` so chaos tests stay sleep-free and deterministic "
+        "(`time.perf_counter` stays legal for duration measurement)."
+    )
+
+    def check(self, module: Module, project: Project):
+        if module.rel.endswith(_EXEMPT_SUFFIX):
+            return
+        aliases = _time_aliases(module)
+        bare = _from_time_names(module)
+        if not aliases and not bare:
+            return
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            name = None
+            if (
+                isinstance(fn, ast.Attribute)
+                and isinstance(fn.value, ast.Name)
+                and fn.value.id in aliases
+                and fn.attr in _BANNED
+            ):
+                name = f"{fn.value.id}.{fn.attr}"
+            elif isinstance(fn, ast.Name) and fn.id in bare:
+                name = fn.id
+            if name is None:
+                continue
+            hint = (
+                "clock.sleep(...)" if name.endswith("sleep") else "clock.now()"
+            )
+            yield Finding(
+                rule=self.id,
+                path=module.rel,
+                line=node.lineno,
+                col=node.col_offset,
+                message=(
+                    f"raw `{name}()` — inject a `Clock` and call `{hint}` "
+                    "(or justify a wall-clock timestamp with a suppression)"
+                ),
+                symbol=_enclosing_symbol(module, node),
+            )

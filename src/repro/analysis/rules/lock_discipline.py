@@ -1,0 +1,185 @@
+"""DAS1xx — lock discipline.
+
+Annotation-driven: declare the lock that guards an attribute on the line
+where it is initialized::
+
+    self._outbox = [...]  # guarded-by: self._cv
+
+Every subsequent ``self._outbox`` access (read or write, including
+``self._outbox[i].append(...)``) must then sit either
+
+* inside ``with self._cv:`` (plain locks, RLocks and Conditions all use
+  the same syntax; per-element lock tables like ``with
+  self._sock_locks[i]:`` match the attribute name), or
+* in a method annotated ``# das: holds-lock(self._cv)`` — an assertion
+  that every caller already holds the lock (the usual ``*_locked``
+  helper convention), or
+* in ``__init__`` (single-threaded construction, before any worker
+  thread that the checker infers from ``threading.Thread(target=...)``
+  / ``ThreadingHTTPServer`` handlers can exist).
+
+Anything else is DAS101.  The checker deliberately has no may-alias
+analysis: a local alias like ``cv = self._cv; with cv:`` does not count
+as holding the lock — spell the attribute out.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set
+
+from ..core import Finding, Module, Project, Rule, register
+
+_GUARDED_RE = re.compile(r"guarded-by:\s*self\.(\w+)")
+_HOLDS_RE = re.compile(r"das:\s*holds-lock\(self\.(\w+)\)")
+
+
+@dataclass
+class _ClassGuards:
+    attrs: Dict[str, str]          # attr name -> lock attr name
+    thread_entries: Set[str]       # method names handed to Thread(target=...)
+
+
+def _collect_guards(module: Module) -> Dict[str, _ClassGuards]:
+    """class name -> guard map, from `# guarded-by:` comments sitting on
+    `self.X = ...` lines."""
+    out: Dict[str, _ClassGuards] = {}
+    for cls in ast.walk(module.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        guards = _ClassGuards(attrs={}, thread_entries=set())
+        for node in ast.walk(cls):
+            targets: List[ast.expr] = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AnnAssign):
+                targets = [node.target]
+            else:
+                continue
+            # the comment may sit on the first or last physical line of
+            # the (possibly wrapped) statement
+            lock = None
+            for ln in range(node.lineno, getattr(node, "end_lineno", node.lineno) + 1):
+                m = _GUARDED_RE.search(module.comments.get(ln, ""))
+                if m:
+                    lock = m.group(1)
+                    break
+            if lock is None:
+                continue
+            for tgt in targets:
+                if (
+                    isinstance(tgt, ast.Attribute)
+                    and isinstance(tgt.value, ast.Name)
+                    and tgt.value.id == "self"
+                ):
+                    guards.attrs[tgt.attr] = lock
+        if guards.attrs:
+            out[cls.name] = guards
+    return out
+
+
+def _with_lock_attr(item: ast.withitem) -> Optional[str]:
+    """`with self._cv:` -> "_cv"; `with self._locks[i]:` -> "_locks"."""
+    expr = item.context_expr
+    if isinstance(expr, ast.Subscript):
+        expr = expr.value
+    if (
+        isinstance(expr, ast.Attribute)
+        and isinstance(expr.value, ast.Name)
+        and expr.value.id == "self"
+    ):
+        return expr.attr
+    return None
+
+
+def _holds_locks(module: Module, fn: ast.AST) -> Set[str]:
+    """Locks asserted held for this def via `# das: holds-lock(...)`."""
+    out: Set[str] = set()
+    # trailing comment on the def line, or a comment line just above
+    for ln in (fn.lineno,):
+        m = _HOLDS_RE.search(module.comments.get(ln, ""))
+        if m:
+            out.add(m.group(1))
+    ln = fn.lineno - 1
+    while ln >= 1:
+        text = module.lines[ln - 1].strip()
+        m = _HOLDS_RE.search(module.comments.get(ln, ""))
+        if m:
+            out.add(m.group(1))
+        if text.startswith("#") or text.startswith("@") or not text:
+            ln -= 1
+            continue
+        break
+    return out
+
+
+@register
+class GuardedAttributeRule(Rule):
+    id = "DAS101"
+    name = "guarded-attribute-outside-lock"
+    family = "lock-discipline"
+    description = (
+        "Access to a `# guarded-by: self._lock` annotated attribute on a "
+        "path that does not hold the declared lock (not inside `with "
+        "self._lock:`, not in a `# das: holds-lock(...)` method, not in "
+        "__init__)."
+    )
+
+    def check(self, module: Module, project: Project):
+        guards = _collect_guards(module)
+        if not guards:
+            return
+        for cls in ast.walk(module.tree):
+            if not isinstance(cls, ast.ClassDef) or cls.name not in guards:
+                continue
+            cg = guards[cls.name]
+            for method in cls.body:
+                if not isinstance(method, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                yield from self._check_method(module, cls.name, cg, method)
+
+    def _check_method(self, module: Module, cls_name: str, cg: _ClassGuards, method):
+        held0 = _holds_locks(module, method)
+        is_init = method.name == "__init__"
+
+        def walk(node: ast.AST, held: Set[str], symbol: str):
+            for child in ast.iter_child_nodes(node):
+                child_held = held
+                sym = symbol
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    # nested closure: inherits currently-held locks plus
+                    # its own holds-lock annotation
+                    sym = f"{symbol}.<locals>.{child.name}"
+                    child_held = held | _holds_locks(module, child)
+                elif isinstance(child, ast.With):
+                    acquired = {
+                        a for a in (_with_lock_attr(i) for i in child.items) if a
+                    }
+                    child_held = held | acquired
+                elif (
+                    isinstance(child, ast.Attribute)
+                    and isinstance(child.value, ast.Name)
+                    and child.value.id == "self"
+                    and child.attr in cg.attrs
+                ):
+                    lock = cg.attrs[child.attr]
+                    if lock not in held and not is_init:
+                        yield Finding(
+                            rule=self.id,
+                            path=module.rel,
+                            line=child.lineno,
+                            col=child.col_offset,
+                            message=(
+                                f"`self.{child.attr}` is guarded-by "
+                                f"`self.{lock}` but this access does not "
+                                f"hold it (wrap in `with self.{lock}:` or "
+                                f"annotate the method "
+                                f"`# das: holds-lock(self.{lock})`)"
+                            ),
+                            symbol=f"{cls_name}.{sym}",
+                        )
+                yield from walk(child, child_held, sym)
+
+        yield from walk(method, held0, method.name)

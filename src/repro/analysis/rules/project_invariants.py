@@ -1,0 +1,217 @@
+"""DAS3xx — project-invariant lints.
+
+  DAS301  metric names registered through the telemetry facade or the
+          metrics registry must be `das_`-prefixed (the /metrics
+          exporter and the dashboards key on that namespace).
+  DAS302  exception classes must subclass the sanctioned taxonomy: a
+          concrete builtin (`RuntimeError`, `ConnectionError`, ...) or
+          an existing project `*Error` — never bare `Exception`, which
+          makes `except <Taxonomy>` handlers unwritable.
+  DAS303  `except Exception` / bare `except:` in src/ requires a
+          justified suppression: broad catches are legal only where a
+          loop must outlive arbitrary failures (supervisors, serve
+          loops, scrape-time metric callbacks) and the justification
+          says so.
+  DAS304  no `print` in src/ outside launch entrypoints (`main()` in
+          `repro/launch/*`); library code reports through logging or
+          telemetry.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from ..core import Finding, Module, Project, Rule, register
+
+_METRIC_METHODS = {
+    "counter", "gauge", "histogram",
+    "counter_family", "gauge_family", "histogram_family",
+    "callback_gauge", "mirror_sink",
+}
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _base_name(node: ast.AST) -> str:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Call):  # class Foo(make_base()) — opaque
+        return ""
+    return ""
+
+
+@register
+class MetricPrefixRule(Rule):
+    id = "DAS301"
+    name = "metric-prefix"
+    family = "project-invariants"
+    description = (
+        "Metric registration (`counter`/`gauge`/`histogram`/`*_family`/"
+        "`callback_gauge`/`mirror_sink`) with a literal name must use the "
+        "`das_` prefix."
+    )
+
+    def check(self, module: Module, project: Project):
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if not (isinstance(fn, ast.Attribute) and fn.attr in _METRIC_METHODS):
+                continue
+            if not node.args:
+                continue
+            arg = node.args[0]
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                if not arg.value.startswith("das_"):
+                    yield Finding(
+                        rule=self.id,
+                        path=module.rel,
+                        line=arg.lineno,
+                        col=arg.col_offset,
+                        message=(
+                            f"metric name {arg.value!r} is not `das_`-"
+                            "prefixed; the exporter namespaces the fleet "
+                            "under das_*"
+                        ),
+                    )
+
+
+@register
+class ExceptionTaxonomyRule(Rule):
+    id = "DAS302"
+    name = "exception-taxonomy"
+    family = "project-invariants"
+    description = (
+        "Exception classes (`*Error`/`*Exception`) must derive from a "
+        "concrete builtin error or an existing project `*Error`, not bare "
+        "`Exception`/`BaseException`."
+    )
+
+    def check(self, module: Module, project: Project):
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            looks_exc = node.name.endswith(("Error", "Exception"))
+            bases = [_base_name(b) for b in node.bases]
+            if not looks_exc and not (set(bases) & _BROAD):
+                continue
+            if not node.bases:
+                if looks_exc:
+                    yield self._finding(module, node, "has no base class")
+                continue
+            broad = [b for b in bases if b in _BROAD]
+            if broad:
+                yield self._finding(
+                    module, node, f"derives from bare `{broad[0]}`"
+                )
+
+    def _finding(self, module: Module, node: ast.ClassDef, why: str) -> Finding:
+        return Finding(
+            rule=self.id,
+            path=module.rel,
+            line=node.lineno,
+            col=node.col_offset,
+            message=(
+                f"exception class `{node.name}` {why}; subclass a concrete "
+                "builtin (RuntimeError, ConnectionError, ...) or an "
+                "existing project *Error so taxonomy handlers can catch it"
+            ),
+            symbol=node.name,
+        )
+
+
+@register
+class BroadExceptRule(Rule):
+    id = "DAS303"
+    name = "broad-except-needs-justification"
+    family = "project-invariants"
+    description = (
+        "`except Exception` (or bare `except:`) requires a justified "
+        "inline suppression explaining why the catch must be broad."
+    )
+
+    def check(self, module: Module, project: Project):
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            broad: Optional[str] = None
+            if node.type is None:
+                broad = "bare `except:`"
+            else:
+                names = (
+                    [_base_name(e) for e in node.type.elts]
+                    if isinstance(node.type, ast.Tuple)
+                    else [_base_name(node.type)]
+                )
+                hit = [n for n in names if n in _BROAD]
+                if hit:
+                    broad = f"`except {hit[0]}`"
+            if broad is None:
+                continue
+            yield Finding(
+                rule=self.id,
+                path=module.rel,
+                line=node.lineno,
+                col=node.col_offset,
+                message=(
+                    f"{broad} without justification — narrow to the "
+                    "concrete taxonomy, or add `# dascheck: disable="
+                    "DAS303 -- <why this must survive anything>`"
+                ),
+            )
+
+
+@register
+class NoPrintRule(Rule):
+    id = "DAS304"
+    name = "no-print-in-library-code"
+    family = "project-invariants"
+    description = (
+        "`print()` in src/ outside a launch entrypoint (`main()` under "
+        "repro/launch/ or in a module marked `# das: entrypoint`); use "
+        "logging or telemetry."
+    )
+
+    def check(self, module: Module, project: Project):
+        findings: List[Finding] = []
+        is_launch = (
+            "/launch/" in module.rel
+            or module.name.startswith("repro.launch.")
+            or any(
+                "das: entrypoint" in module.comments.get(ln, "")
+                for ln in range(1, min(len(module.lines), 15) + 1)
+            )
+        )
+
+        def walk(node: ast.AST, fn_name: str) -> None:
+            for child in ast.iter_child_nodes(node):
+                name = fn_name
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    name = child.name
+                if (
+                    isinstance(child, ast.Call)
+                    and isinstance(child.func, ast.Name)
+                    and child.func.id == "print"
+                ):
+                    if not (is_launch and fn_name == "main"):
+                        findings.append(
+                            Finding(
+                                rule=self.id,
+                                path=module.rel,
+                                line=child.lineno,
+                                col=child.col_offset,
+                                message=(
+                                    "`print()` in library code; use the "
+                                    "module logger (or justify with a "
+                                    "suppression for protocol handshakes)"
+                                ),
+                                symbol=fn_name,
+                            )
+                        )
+                walk(child, name)
+
+        walk(module.tree, "")
+        return findings

@@ -1,0 +1,489 @@
+"""DAS0xx — trace hygiene.
+
+Applies inside *hot* functions (reachable from ``jax.jit`` or marked
+``# das: hot-path``; see ``repro.analysis.callgraph``):
+
+  DAS001  host sync: ``.item()``, ``.block_until_ready()``,
+          ``jax.device_get``, ``np.asarray``/``np.array`` of computed
+          values, ``.tolist()`` / ``int()/float()/bool()`` on traced
+          values.
+  DAS002  Python branch (``if``/``while``/ternary/``assert``) on a
+          tracer-typed value inside jit-traced code.
+  DAS003  ``jax.jit`` created inside a loop (recompile hazard — cache
+          the jitted callable instead).
+  DAS004  jitted function closes over a mutable literal
+          (list/dict/set) — mutation silently retraces or bakes stale
+          state into the compiled program.
+
+Taint model for DAS001/DAS002 (traced functions only): positional
+parameters carry tracers; keyword-only parameters, names listed in
+``static_argnames``, and config-by-convention names (``cfg`` etc.) are
+static.  ``.shape``/``.ndim``/``.dtype``/``.size``, ``len()``,
+``isinstance()`` and membership tests produce static values.  This
+mirrors the repo convention: jitted cores take arrays positionally and
+static knobs keyword-only.
+"""
+
+from __future__ import annotations
+
+import ast
+import builtins
+from typing import Dict, Iterable, List, Optional, Set
+
+from ..callgraph import (
+    CONVENTION_STATIC,
+    FuncInfo,
+    HotIndex,
+    _dotted,
+    _terminal_attr,
+    hot_index,
+    is_jit_expr,
+)
+from ..core import Finding, Module, Project, Rule, register
+
+_BUILTINS = set(dir(builtins))
+
+_SYNC_METHODS = {"item", "block_until_ready"}          # flagged in any hot fn
+_TRACED_SYNC_METHODS = {"tolist"}                      # flagged only under trace
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_STATIC_FUNCS = {"len", "isinstance", "issubclass", "hasattr", "type", "id",
+                 "range", "enumerate", "zip"}
+# numpy calls that are pure host-side metadata math, fine under trace
+_NP_WHITELIST = {"dtype", "iinfo", "finfo", "prod", "log2", "dtype"}
+
+
+def _numpy_aliases(module: Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "numpy":
+                    out.add(a.asname or "numpy")
+    return out
+
+
+def _is_literal_container(node: ast.AST) -> bool:
+    return isinstance(
+        node,
+        (ast.List, ast.Tuple, ast.Set, ast.Dict, ast.ListComp, ast.GeneratorExp,
+         ast.SetComp, ast.DictComp, ast.Constant),
+    )
+
+
+def _body_nodes(fn: ast.AST) -> Iterable[ast.AST]:
+    """Walk a function body without descending into nested defs/lambdas
+    (those are separate FuncInfos and get their own pass)."""
+    stack: List[ast.AST] = list(getattr(fn, "body", []))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+class _Taint:
+    """Sequential taint tracking over one traced function body."""
+
+    def __init__(self, info: FuncInfo, np_aliases: Set[str]):
+        self.np = np_aliases
+        self.tainted: Set[str] = set()
+        args = info.node.args
+        static = set(info.static_argnames) | CONVENTION_STATIC
+        for a in list(getattr(args, "posonlyargs", [])) + list(args.args):
+            if a.arg in static or self._scalar_annotated(a):
+                continue
+            self.tainted.add(a.arg)
+        if args.vararg and args.vararg.arg not in static:
+            self.tainted.add(args.vararg.arg)
+        # keyword-only params are static by repo convention
+
+    @staticmethod
+    def _scalar_annotated(arg: ast.arg) -> bool:
+        """`window: int`, `collect: bool`, `kind: str` — annotated python
+        scalars are static knobs, never tracers (arrays are annotated as
+        Array types or left bare)."""
+        ann = arg.annotation
+        return isinstance(ann, ast.Name) and ann.id in (
+            "int", "bool", "str", "float", "bytes",
+        )
+
+    # -- expression taint -------------------------------------------------
+    def expr(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self.expr(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.expr(node.value)
+        if isinstance(node, ast.Call):
+            fn = node.func
+            name = _terminal_attr(fn)
+            if isinstance(fn, ast.Name) and fn.id in _STATIC_FUNCS:
+                return False
+            if name in ("int", "float", "bool"):
+                return False  # host-converted (DAS001's problem, not DAS002's)
+            head = _dotted(fn).split(".")[0] if _dotted(fn) else ""
+            if head in self.np:
+                return False  # numpy results are host values
+            if isinstance(fn, ast.Attribute) and self.expr(fn.value):
+                return True  # method on a traced value
+            return any(self.expr(a) for a in node.args) or any(
+                self.expr(k.value) for k in node.keywords
+            )
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.In, ast.NotIn)) for op in node.ops):
+                return False  # membership on dicts/pytrees is trace-static
+            if any(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False  # `x is None` is a structure check, not a value read
+            operands = [node.left, *node.comparators]
+            if any(
+                isinstance(o, ast.Constant) and isinstance(o.value, str)
+                for o in operands
+            ):
+                return False  # comparing against a string: a mode knob, not a tracer
+            return self.expr(node.left) or any(self.expr(c) for c in node.comparators)
+        if isinstance(node, ast.BoolOp):
+            return any(self.expr(v) for v in node.values)
+        if isinstance(node, ast.BinOp):
+            return self.expr(node.left) or self.expr(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.expr(node.operand)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.expr(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return self.expr(node.body) or self.expr(node.orelse)
+        if isinstance(node, ast.NamedExpr):
+            return self.expr(node.value)
+        if isinstance(node, ast.Starred):
+            return self.expr(node.value)
+        return False
+
+    # -- statement effects ------------------------------------------------
+    def _assign_target(self, target: ast.AST, value_tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if value_tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._assign_target(elt, value_tainted)
+        elif isinstance(target, ast.Starred):
+            self._assign_target(target.value, value_tainted)
+
+    def run(self, stmts: List[ast.stmt], report) -> None:
+        # two passes: the second sees loop-carried taint
+        self._pass(stmts, report=None)
+        self._pass(stmts, report=report)
+
+    def _pass(self, stmts: List[ast.stmt], report) -> None:
+        for s in stmts:
+            if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                continue
+            if report is not None:
+                self._scan_ifexp(s, report)
+            if isinstance(s, (ast.Assign,)):
+                t = self.expr(s.value)
+                for tgt in s.targets:
+                    self._assign_target(tgt, t)
+            elif isinstance(s, ast.AnnAssign) and s.value is not None:
+                self._assign_target(s.target, self.expr(s.value))
+            elif isinstance(s, ast.AugAssign):
+                if self.expr(s.value):
+                    self._assign_target(s.target, True)
+            elif isinstance(s, ast.If):
+                if report is not None and self.expr(s.test):
+                    report(s.test, "if")
+                self._pass(s.body, report)
+                self._pass(s.orelse, report)
+            elif isinstance(s, ast.While):
+                if report is not None and self.expr(s.test):
+                    report(s.test, "while")
+                self._pass(s.body, report)
+                self._pass(s.orelse, report)
+            elif isinstance(s, ast.Assert):
+                if report is not None and self.expr(s.test):
+                    report(s.test, "assert")
+            elif isinstance(s, ast.For):
+                self._assign_target(s.target, self.expr(s.iter))
+                self._pass(s.body, report)
+                self._pass(s.orelse, report)
+            elif isinstance(s, ast.With):
+                self._pass(s.body, report)
+            elif isinstance(s, ast.Try):
+                self._pass(s.body, report)
+                for h in s.handlers:
+                    self._pass(h.body, report)
+                self._pass(s.orelse, report)
+                self._pass(s.finalbody, report)
+
+    def _scan_ifexp(self, stmt: ast.stmt, report) -> None:
+        # scan only this statement's own expressions: nested statements are
+        # visited by _pass and would double-report
+        stack: List[ast.AST] = [
+            c for c in ast.iter_child_nodes(stmt) if not isinstance(c, ast.stmt)
+        ]
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                continue
+            if isinstance(node, ast.IfExp) and self.expr(node.test):
+                report(node.test, "conditional expression")
+            stack.extend(
+                c for c in ast.iter_child_nodes(node) if not isinstance(c, ast.stmt)
+            )
+
+
+def _src(module: Module, node: ast.AST) -> str:
+    text = " ".join((ast.get_source_segment(module.source, node) or "").split())
+    return text if len(text) <= 48 else text[:45] + "..."
+
+
+@register
+class HostSyncRule(Rule):
+    id = "DAS001"
+    name = "host-sync-in-hot-path"
+    family = "trace-hygiene"
+    description = (
+        "Host synchronization (.item(), block_until_ready, np.asarray of a "
+        "computed value, tolist/int/float on traced values) inside a jit-"
+        "traced or `# das: hot-path` function."
+    )
+
+    def check(self, module: Module, project: Project):
+        idx: HotIndex = hot_index(project)
+        np_aliases = _numpy_aliases(module)
+        for info in idx.functions(module):
+            if not idx.is_hot(info):
+                continue
+            traced = idx.is_traced(info)
+            taint = _Taint(info, np_aliases) if traced else None
+            for node in _body_nodes(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = node.func
+                attr = fn.attr if isinstance(fn, ast.Attribute) else ""
+                dotted = _dotted(fn)
+                head = dotted.split(".")[0] if dotted else ""
+                msg = None
+                if attr in _SYNC_METHODS:
+                    msg = f"`.{attr}()` forces a device sync"
+                elif attr == "device_get" or dotted == "jax.device_get":
+                    msg = "`jax.device_get` forces a device sync"
+                elif head in np_aliases:
+                    np_fn = dotted.split(".", 1)[1] if "." in dotted else ""
+                    if traced:
+                        if np_fn not in _NP_WHITELIST:
+                            msg = (
+                                f"`{dotted}` materializes a host value under "
+                                "jit tracing"
+                            )
+                    elif np_fn in ("asarray", "array"):
+                        if node.args and not _is_literal_container(node.args[0]):
+                            msg = (
+                                f"`{dotted}(...)` of a computed value syncs if "
+                                "the value lives on device"
+                            )
+                elif traced and attr in _TRACED_SYNC_METHODS:
+                    msg = f"`.{attr}()` pulls a traced value to host"
+                elif (
+                    traced
+                    and isinstance(fn, ast.Name)
+                    and fn.id in ("int", "float", "bool")
+                    and taint is not None
+                    and node.args
+                    and taint.expr(node.args[0])
+                ):
+                    msg = f"`{fn.id}()` on a traced value forces a device sync"
+                if msg:
+                    yield Finding(
+                        rule=self.id,
+                        path=module.rel,
+                        line=node.lineno,
+                        col=node.col_offset,
+                        message=f"{msg} (hot path: `{_src(module, node)}`)",
+                        symbol=info.qualname,
+                    )
+
+
+@register
+class TracerBranchRule(Rule):
+    id = "DAS002"
+    name = "branch-on-traced-value"
+    family = "trace-hygiene"
+    description = (
+        "Python-level control flow (`if`/`while`/ternary/`assert`) on a "
+        "tracer-typed value inside jit-traced code; use `jnp.where`/"
+        "`lax.cond` or hoist the value to a static argument."
+    )
+
+    def check(self, module: Module, project: Project):
+        idx: HotIndex = hot_index(project)
+        np_aliases = _numpy_aliases(module)
+        findings: List[Finding] = []
+        for info in idx.functions(module):
+            if not idx.is_traced(info):
+                continue
+            if isinstance(info.node, ast.Lambda):
+                continue
+            taint = _Taint(info, np_aliases)
+
+            def report(test: ast.AST, kind: str, info=info) -> None:
+                findings.append(
+                    Finding(
+                        rule=self.id,
+                        path=module.rel,
+                        line=test.lineno,
+                        col=test.col_offset,
+                        message=(
+                            f"Python {kind} on traced value "
+                            f"`{_src(module, test)}` inside jit-traced code"
+                        ),
+                        symbol=info.qualname,
+                    )
+                )
+
+            taint.run(list(info.node.body), report)
+        return findings
+
+
+@register
+class JitInLoopRule(Rule):
+    id = "DAS003"
+    name = "jit-in-loop"
+    family = "trace-hygiene"
+    description = (
+        "`jax.jit` (or functools.partial(jax.jit, ...)) constructed inside "
+        "a loop body — every iteration builds a fresh compilation cache; "
+        "hoist and memoize the jitted callable."
+    )
+
+    def check(self, module: Module, project: Project):
+        findings: List[Finding] = []
+
+        def walk(node: ast.AST, loop_depth: int, symbol: str) -> None:
+            for child in ast.iter_child_nodes(node):
+                depth = loop_depth
+                sym = symbol
+                if isinstance(child, (ast.For, ast.While)):
+                    depth += 1
+                elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    sym = child.name
+                    depth = 0  # a def inside a loop resets; its body runs later
+                if isinstance(child, ast.Call) and loop_depth > 0:
+                    is_j, _ = is_jit_expr(child)
+                    if is_j:
+                        findings.append(
+                            Finding(
+                                rule=self.id,
+                                path=module.rel,
+                                line=child.lineno,
+                                col=child.col_offset,
+                                message=(
+                                    "jit constructed inside a loop "
+                                    "(recompile hazard)"
+                                ),
+                                symbol=sym,
+                            )
+                        )
+                walk(child, depth, sym)
+
+        walk(module.tree, 0, "")
+        return findings
+
+
+@register
+class MutableClosureRule(Rule):
+    id = "DAS004"
+    name = "jit-closes-over-mutable"
+    family = "trace-hygiene"
+    description = (
+        "A directly-jitted function closes over a name bound to a mutable "
+        "literal (list/dict/set) in an enclosing scope — mutation either "
+        "retraces or bakes stale state into the compiled program."
+    )
+
+    def check(self, module: Module, project: Project):
+        idx: HotIndex = hot_index(project)
+        mutable_bindings = self._mutable_bindings(module)
+        for info in idx.functions(module):
+            if not info.jit or isinstance(info.node, ast.Lambda):
+                continue
+            free = self._free_names(info)
+            for name in sorted(free):
+                binder = self._binder(info, name, mutable_bindings)
+                if binder is None and info.cls is None:
+                    binder = mutable_bindings.get(id(module.tree), {}).get(name)
+                if binder is not None:
+                    yield Finding(
+                        rule=self.id,
+                        path=module.rel,
+                        line=info.node.lineno,
+                        col=info.node.col_offset,
+                        message=(
+                            f"jitted function closes over mutable `{name}` "
+                            f"(bound at line {binder})"
+                        ),
+                        symbol=info.qualname,
+                    )
+
+    @staticmethod
+    def _mutable_bindings(module: Module) -> Dict[int, Dict[str, int]]:
+        """scope-id -> {name: lineno} of names bound to mutable literals."""
+        out: Dict[int, Dict[str, int]] = {}
+        for scope in ast.walk(module.tree):
+            if not isinstance(scope, (ast.Module, ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            sid = id(scope)
+            out.setdefault(sid, {})
+            for node in scope.body:
+                if isinstance(node, ast.Assign) and isinstance(node.value, (
+                    ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                    ast.SetComp,
+                )):
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            out[sid][tgt.id] = node.lineno
+        return out
+
+    @staticmethod
+    def _free_names(info: FuncInfo) -> Set[str]:
+        bound: Set[str] = set()
+        args = info.node.args
+        for a in (
+            list(getattr(args, "posonlyargs", []))
+            + list(args.args)
+            + list(args.kwonlyargs)
+        ):
+            bound.add(a.arg)
+        for extra in (args.vararg, args.kwarg):
+            if extra is not None:
+                bound.add(extra.arg)
+        loaded: Set[str] = set()
+        for node in _body_nodes(info.node):
+            if isinstance(node, ast.Name):
+                if isinstance(node.ctx, ast.Load):
+                    loaded.add(node.id)
+                else:
+                    bound.add(node.id)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                bound.add(node.name)
+        return {n for n in loaded - bound if n not in _BUILTINS}
+
+    @staticmethod
+    def _binder(info: FuncInfo, name: str, bindings: Dict[int, Dict[str, int]]):
+        parent = info.parent
+        while parent is not None:
+            scope = bindings.get(id(parent.node), {})
+            if name in scope:
+                return scope[name]
+            # a parent's parameter shadows outer bindings
+            args = parent.node.args
+            params = {a.arg for a in list(getattr(args, "posonlyargs", [])) + list(args.args) + list(args.kwonlyargs)}
+            if name in params:
+                return None
+            parent = parent.parent
+        return None

@@ -78,6 +78,7 @@ def make_state(head, tails, active, emitted, max_new) -> RoundState:
 OUT_EXTRA = 4  # accepted | n_take | alive | n_prop
 
 
+# das: hot-path — shared verify core, traced inside every round dispatch
 def verify_step(
     params, cfg, cache, block, budgets, active, key,
     *, temperature: float, recurrent: bool, attn_impl: str,
@@ -113,6 +114,7 @@ def verify_step(
     return res, cache1
 
 
+# das: hot-path
 def emit_scan_device(
     cand: jnp.ndarray,  # (B, K+1) candidate emissions per row
     n_new: jnp.ndarray,  # (B,) accepted + 1
@@ -136,6 +138,7 @@ def emit_scan_device(
     return n_take.astype(jnp.int32), alive
 
 
+# das: hot-path — the entire steady-state round, one jitted dispatch
 def fused_round_core(
     params, cfg, forest, cache, state: RoundState, roots, budgets, key,
     *, K: int, temperature: float, eos_token: int, recurrent: bool,

@@ -125,7 +125,7 @@ class ShardHealth:
         if cb is not None and old != new:
             try:
                 cb(self.shard_id, old, new)
-            except Exception:  # observers must never break RPC paths
+            except Exception:  # dascheck: disable=DAS303 -- observers must never break RPC paths
                 pass
 
     def record_failure(self) -> str:

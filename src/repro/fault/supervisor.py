@@ -42,14 +42,15 @@ class AddressBook:
     without any client-side coordination."""
 
     def __init__(self, addresses: Sequence[Tuple[str, int]]) -> None:
-        self._addrs: List[Tuple[str, int]] = [
+        self._addrs: List[Tuple[str, int]] = [  # guarded-by: self._lock
             (str(h), int(p)) for h, p in addresses
         ]
         self._lock = threading.Lock()
         self.version = 0
 
     def __len__(self) -> int:
-        return len(self._addrs)
+        with self._lock:
+            return len(self._addrs)
 
     def get(self, i: int) -> Tuple[str, int]:
         with self._lock:
@@ -94,8 +95,11 @@ class ShardSupervisor:
         self._rng = [
             random.Random((int(seed) << 16) ^ i) for i in range(n)
         ]
-        self._attempts = [0] * n
-        self._next_try = [0.0] * n
+        # one poll at a time: the background thread and the rollout
+        # layer's opportunistic polls must not race a double-restart
+        self._poll_lock = threading.Lock()
+        self._attempts = [0] * n  # guarded-by: self._poll_lock
+        self._next_try = [0.0] * n  # guarded-by: self._poll_lock
         # Counter-shaped view mirrored into the registry (the existing
         # ``sup.stats["restarts"]`` reads keep working unchanged).
         self.stats = obs.MirroredCounter(
@@ -132,9 +136,11 @@ class ShardSupervisor:
         if getattr(self.service, "closed", False):
             return []
         with self.telemetry.span("supervisor_probe"):
-            restarted = self._poll_once(force)
+            with self._poll_lock:
+                restarted = self._poll_once(force)
         return restarted
 
+    # das: holds-lock(self._poll_lock)
     def _poll_once(self, force: bool) -> List[int]:
         restarted: List[int] = []
         now = self.clock.now()
@@ -158,7 +164,7 @@ class ShardSupervisor:
             )
             try:
                 addr = self.service.respawn_shard(i, state=state)
-            except Exception as exc:
+            except Exception as exc:  # dascheck: disable=DAS303 -- a restart failure is recorded and retried; it must not kill supervision
                 self.stats["restart_failures"] += 1
                 self.telemetry.emit(
                     "shard_restart_failed", shard=i,
@@ -194,7 +200,7 @@ class ShardSupervisor:
             while not self._stop.wait(timeout=float(interval_s)):
                 try:
                     self.poll()
-                except Exception:  # never kill the supervisor thread
+                except Exception:  # dascheck: disable=DAS303 -- never kill the supervisor thread
                     self.stats["poll_errors"] += 1
 
         self._thread = threading.Thread(

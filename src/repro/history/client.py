@@ -125,10 +125,10 @@ class HistoryClient:
         n = self.n_shards
         self._socks: List[Optional[socket.socket]] = [None] * n
         self._sock_locks = [threading.Lock() for _ in range(n)]
-        self._seq = [0] * n
-        self._pending: List[List[Dict[str, Any]]] = [[] for _ in range(n)]
-        self._pending_epoch: List[Optional[int]] = [None] * n
-        self._outbox: List[Deque[Dict[str, Any]]] = [
+        self._seq = [0] * n  # guarded-by: self._cv
+        self._pending: List[List[Dict[str, Any]]] = [[] for _ in range(n)]  # guarded-by: self._cv
+        self._pending_epoch: List[Optional[int]] = [None] * n  # guarded-by: self._cv
+        self._outbox: List[Deque[Dict[str, Any]]] = [  # guarded-by: self._cv
             collections.deque() for _ in range(n)
         ]
         self._delta_cur = [0] * n
@@ -150,8 +150,8 @@ class HistoryClient:
         self._need_resync = [False] * n
         # outbox-overflow accounting: drops in the current overflow
         # episode, and drops not yet reported to the shard's telemetry
-        self._drop_episode = [0] * n
-        self._drops_unreported = [0] * n
+        self._drop_episode = [0] * n  # guarded-by: self._cv
+        self._drops_unreported = [0] * n  # guarded-by: self._cv
 
         # replicated pack cache (what the drafter drafts from)
         self._packs: Dict[Any, PackedSuffixTree] = {}
@@ -177,7 +177,7 @@ class HistoryClient:
         }
 
         self._cv = threading.Condition()
-        self._closed = False
+        self._closed = False  # guarded-by: self._cv
         self._sender: Optional[threading.Thread] = None
         if start_sender:
             self._sender = threading.Thread(
@@ -312,6 +312,7 @@ class HistoryClient:
                 )
             self._cv.notify_all()
 
+    # das: holds-lock(self._cv)
     def _seal_pending_locked(self) -> None:
         """Move pending entries into sealed, sequenced outbox batches
         (called under ``_cv``)."""
@@ -351,14 +352,15 @@ class HistoryClient:
                 self._seal_pending_locked()
             made_progress = False
             for i in range(self.n_shards):
-                if self._outbox[i] and not self.health[i].should_attempt():
+                if self._outbox[i] and not self.health[i].should_attempt():  # dascheck: disable=DAS101 -- single-consumer peek: only this thread pops; a stale read only delays one pass
                     # DOWN shard inside its backoff window: keep the
                     # batches queued; the next pass past the deadline
                     # probes with ONE reconnect, not one per batch.
                     continue
-                while self._outbox[i]:
-                    batch = self._outbox[i][0]  # peek: pop only on ack
-                    dropped = self._drops_unreported[i]
+                while self._outbox[i]:  # dascheck: disable=DAS101 -- single-consumer peek: only this thread pops, producers only append
+                    batch = self._outbox[i][0]  # peek: pop only on ack  # dascheck: disable=DAS101 -- single-consumer peek: the pop below re-checks identity under the lock
+                    acked = False
+                    dropped = self._drops_unreported[i]  # dascheck: disable=DAS101 -- single-consumer snapshot: only this thread decrements, and only by this snapshot
                     t0 = time.perf_counter()
                     try:
                         self._rpc(i, {
@@ -390,13 +392,19 @@ class HistoryClient:
                         if self._lat_hist is not None:
                             self._lat_hist["publish_ms"].observe(dt)
                         self.stats["published_batches"] += 1
-                        self._drops_unreported[i] -= dropped
+                        acked = True
                     made_progress = True
                     with self._cv:
                         # pop by identity: a cap-overflow drop may have
                         # already evicted the in-flight batch
                         if self._outbox[i] and self._outbox[i][0] is batch:
                             self._outbox[i].popleft()
+                        if acked:
+                            # settle the drop report under the lock: a
+                            # producer may have bumped the counter while
+                            # the RPC was in flight, and an unlocked
+                            # decrement would lose that increment
+                            self._drops_unreported[i] -= dropped
                         if (
                             self._drop_episode[i]
                             and len(self._outbox[i]) < self.outbox_cap
@@ -413,19 +421,19 @@ class HistoryClient:
                                 self.worker_id, i, n_drop,
                             )
                         self._cv.notify_all()
-            if not made_progress and any(self._outbox):
+            if not made_progress and any(self._outbox):  # dascheck: disable=DAS101 -- single-consumer peek: worst case is one extra 50ms sleep
                 # every shard with queued work is down/backed off
                 self._clock.sleep(0.05)
 
     def flush(self, timeout: float = 10.0) -> bool:
         """Block until every pending/outbox publish is acked (tests and
         epoch barriers; the hot path never calls this)."""
-        deadline = time.monotonic() + timeout
+        deadline = self._clock.now() + timeout
         with self._cv:
             self._cv.notify_all()
             while any(self._pending) or any(self._outbox) \
                     or any(e is not None for e in self._pending_epoch):
-                remaining = deadline - time.monotonic()
+                remaining = deadline - self._clock.now()
                 if remaining <= 0:
                     return False
                 self._cv.wait(timeout=min(remaining, 0.2))

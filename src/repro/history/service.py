@@ -42,12 +42,14 @@ import collections
 import hashlib
 import os
 import socket
+import subprocess
 import threading
 import time
 from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.fault.clock import Clock, SystemClock
 from repro.fault.supervisor import AddressBook
 
 from . import wire
@@ -394,9 +396,11 @@ class ShardServer:
     def __init__(
         self, shard: HistoryShard, host: str = "127.0.0.1", port: int = 0,
         fault_hook: Optional[Callable[[str], Any]] = None,
+        clock: Optional[Clock] = None,
     ) -> None:
         self.shard = shard
         self.fault_hook = fault_hook
+        self.clock = clock or SystemClock()
         self._lock = threading.RLock()  # serializes all shard access
         self._lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -466,7 +470,7 @@ class ShardServer:
                     wire.send_truncated(sock, resp)
                     break
                 if isinstance(action, tuple) and action[0] == "delay":
-                    time.sleep(float(action[1]))
+                    self.clock.sleep(float(action[1]))
                 wire.send_msg(sock, resp)
                 if msg.get("op") == "stop":
                     self.stop()
@@ -510,7 +514,7 @@ class ShardServer:
                 if op == "stop":
                     return {"ok": True}
                 return {"ok": False, "error": f"unknown op {op!r}"}
-        except Exception as exc:  # the server must outlive bad requests
+        except Exception as exc:  # dascheck: disable=DAS303 -- the server must outlive arbitrary bad requests; the error is returned to the peer
             return {"ok": False, "error": f"{type(exc).__name__}: {exc}"}
 
     def stop(self) -> None:
@@ -616,7 +620,7 @@ class HistoryService:
         for i, s in enumerate(self.servers):
             try:
                 stats = dict(s.shard.stats)
-            except Exception:
+            except Exception:  # dascheck: disable=DAS303 -- scrape-time gauge: a mid-mutation read must never break /metrics
                 continue
             for k, v in stats.items():
                 out[(("shard", str(i)), ("key", str(k)))] = float(v)
@@ -632,6 +636,7 @@ class HistoryService:
         states: Optional[Sequence[Dict[str, Any]]] = None,
         n_problems: Optional[int] = None,
         fault_hooks: Optional[Sequence] = None,
+        clock: Optional[Clock] = None,
     ) -> "HistoryService":
         """Shards as daemon threads in this process (tests, trainer)."""
         if states is not None:
@@ -652,7 +657,9 @@ class HistoryService:
                     window_size=window_size, epoch_decay=epoch_decay,
                 )
             hook = fault_hooks[i] if fault_hooks is not None else None
-            servers.append(ShardServer(shard, fault_hook=hook).start())
+            servers.append(
+                ShardServer(shard, fault_hook=hook, clock=clock).start()
+            )
         return cls(
             [s.address for s in servers], servers=servers,
             n_problems=n_problems,
@@ -720,7 +727,9 @@ class HistoryService:
             st = state if state is not None else old.shard.state_dict()
             shard = HistoryShard.from_state(st)
             shard.shard_id, shard.n_shards = i, self.n_shards
-            server = ShardServer(shard, fault_hook=old.fault_hook).start()
+            server = ShardServer(
+                shard, fault_hook=old.fault_hook, clock=old.clock,
+            ).start()
             self.servers[i] = server
             self.book.set(i, server.address)
             return server.address
@@ -728,8 +737,8 @@ class HistoryService:
             try:
                 self.procs[i].terminate()
                 self.procs[i].wait(timeout=2.0)
-            except Exception:
-                pass
+            except (OSError, subprocess.TimeoutExpired):
+                pass  # already dead or wedged; the fresh spawn below replaces it
             proc, addr = _spawn_shard_subprocess(i, self._spec)
             self.procs[i] = proc
             self.book.set(i, addr)
@@ -781,7 +790,7 @@ class HistoryService:
         for p in self.procs:
             try:
                 p.wait(timeout=5.0)
-            except Exception:
+            except (OSError, subprocess.TimeoutExpired):
                 p.kill()
         self.servers, self.procs = [], []
 
@@ -791,8 +800,8 @@ class HistoryService:
         idx = self.procs.index(proc)
         try:
             self._rpc(self.addresses[idx], {"op": "stop"})
-        except Exception:
-            pass
+        except (OSError, RuntimeError, ValueError):
+            pass  # shutting down anyway; terminate() follows
 
 
 # -- subprocess entry point -------------------------------------------------
@@ -827,7 +836,7 @@ def main() -> None:
             window_size=args.window_size, epoch_decay=args.epoch_decay,
         )
     server = ShardServer(shard, host=args.host, port=args.port).start()
-    print(f"LISTENING {server.address[0]} {server.address[1]}", flush=True)
+    print(f"LISTENING {server.address[0]} {server.address[1]}", flush=True)  # dascheck: disable=DAS304 -- stdout handshake: the spawner parses this line for the bound address
     server.stopped.wait()
 
 

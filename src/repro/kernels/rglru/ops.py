@@ -20,6 +20,7 @@ def _round_up(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
 
 
+# das: hot-path
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def rglru_scan(x, r, i, lam, h0, *, interpret: bool | None = None):
     """x, r, i: (B,T,W) fp32; lam (W,); h0 (B,W). → (h_seq, h_final)."""

@@ -27,6 +27,7 @@ def _round_up(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
 
 
+# das: hot-path
 @functools.partial(
     jax.jit, static_argnames=("window", "softcap", "chunk", "interpret")
 )

@@ -228,6 +228,7 @@ def _propose_chunked_ref(forest, tails, roots, budgets, *, n_prop_max,
     return jax.vmap(one)(tidx, tails, root_local, budgets)
 
 
+# das: hot-path — trace-time dispatch, composed inside the fused round
 def propose_device(forest, tails, roots, budgets, *, n_prop_max,
                    min_match, impl, interpret):
     """Trace-time propose dispatch — usable standalone *or inside a
@@ -256,6 +257,7 @@ def propose_device(forest, tails, roots, budgets, *, n_prop_max,
     )
 
 
+# das: hot-path
 @functools.partial(
     jax.jit,
     static_argnames=("n_prop_max", "min_match", "impl", "interpret"),

@@ -18,6 +18,7 @@ os.environ["XLA_FLAGS"] = (
 
 import argparse  # noqa: E402
 import json  # noqa: E402
+import logging  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
 
@@ -41,6 +42,8 @@ from repro.launch.analysis import (  # noqa: E402
 )
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import model as M  # noqa: E402
+
+log = logging.getLogger("repro.launch.dryrun")
 
 
 def _shard_tree(struct_tree, axes_tree, mesh, rules):
@@ -186,7 +189,7 @@ def dry_run_one(
     rules = rules or sh.DEFAULT_RULES
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = int(np.prod(list(mesh.shape.values())))
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     # 1) full scanned compile: proves lowering + memory analysis
     compiled, static_bytes = _compile_workload(cfg, shape, mesh, rules)
@@ -211,21 +214,26 @@ def dry_run_one(
     rec.update(rl.as_dict())
     rec["status"] = "ok"
     rec["memory_analysis"] = mem
-    rec["compile_s"] = time.time() - t0
+    rec["compile_s"] = time.perf_counter() - t0
     if verbose:
-        print(
-            f"[dryrun] {arch:24s} {shape_name:12s} {rec['mesh']:8s} "
-            f"OK {rec['compile_s']:6.1f}s  flops/chip={flops:.3e} "
-            f"bytes/chip={nbytes:.3e} coll={coll_bytes:.3e} "
-            f"static={static_bytes/1e9:.2f}GB dominant={rl.dominant} "
-            f"useful={rl.useful_flops_ratio:.2f}"
+        log.info(
+            "%-24s %-12s %-8s OK %6.1fs  flops/chip=%.3e bytes/chip=%.3e "
+            "coll=%.3e static=%.2fGB dominant=%s useful=%.2f",
+            arch, shape_name, rec["mesh"], rec["compile_s"], flops, nbytes,
+            coll_bytes, static_bytes / 1e9, rl.dominant,
+            rl.useful_flops_ratio,
         )
         if mem:
-            print(f"         memory_analysis: {mem}")
+            log.info("memory_analysis: %s", mem)
     return rec
 
 
 def main() -> None:
+    if not logging.getLogger().handlers:
+        logging.basicConfig(
+            level=logging.INFO,
+            format="%(asctime)s %(name)s %(levelname)s %(message)s",
+        )
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
@@ -250,7 +258,7 @@ def main() -> None:
                     results.append(
                         dry_run_one(arch, shape, multi_pod=mp)
                     )
-                except Exception as e:  # a failure here is a system bug
+                except Exception as e:  # dascheck: disable=DAS303 -- one arch failing must not stop the sweep; recorded as FAILED in the report
                     traceback.print_exc()
                     results.append({
                         "arch": arch, "shape": shape,

@@ -32,7 +32,7 @@ class EventLog:
         with self._lock:
             seq = self._seq
             self._seq += 1
-        ev = {"kind": kind, "seq": seq, "ts": time.time()}
+        ev = {"kind": kind, "seq": seq, "ts": time.time()}  # dascheck: disable=DAS201 -- wall-clock event timestamp, not a duration
         ev.update(fields)
         self._events.append(ev)
         if self._counter_fam is not None:

@@ -88,7 +88,7 @@ def to_prometheus(registry) -> str:
         for fn in fns:
             try:
                 val = fn()
-            except Exception:
+            except Exception:  # dascheck: disable=DAS303 -- a broken callback must not break the scrape
                 continue
             if not header:
                 if help:
@@ -152,7 +152,7 @@ def _split_labels(body: str) -> List[str]:
 def snapshot_dict(telemetry, spans: int = 0, events: int = 0) -> dict:
     """One JSON-able snapshot of a :class:`~repro.obs.Telemetry`."""
     snap = {
-        "ts": time.time(),
+        "ts": time.time(),  # dascheck: disable=DAS201 -- wall-clock snapshot timestamp, not a duration
         "metrics": telemetry.registry.snapshot(),
     }
     if spans:

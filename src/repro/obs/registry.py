@@ -218,13 +218,13 @@ class Family:
         self.help = help
         self.kind = kind
         self.label_keys = label_keys
-        self._children: Dict[Tuple[str, ...], object] = {}
+        self._children: Dict[Tuple[str, ...], object] = {}  # guarded-by: self._lock
         self._lock = threading.Lock()
         self._kwargs = kwargs
 
     def labels(self, *values) -> object:
         key = tuple(str(v) for v in values)
-        child = self._children.get(key)
+        child = self._children.get(key)  # dascheck: disable=DAS101 -- lock-free fast path: children are published once and never replaced; a miss falls through to the locked double-check below
         if child is None:
             if len(key) != len(self.label_keys):
                 raise ValueError(
@@ -272,9 +272,9 @@ class MetricsRegistry:
     """
 
     def __init__(self) -> None:
-        self._families: Dict[str, Family] = {}
-        self._callbacks: Dict[str, Tuple[str, List[Callable[[], object]]]] = {}
-        self._collect_hooks: List[Callable[[], None]] = []
+        self._families: Dict[str, Family] = {}  # guarded-by: self._lock
+        self._callbacks: Dict[str, Tuple[str, List[Callable[[], object]]]] = {}  # guarded-by: self._lock
+        self._collect_hooks: List[Callable[[], None]] = []  # guarded-by: self._lock
         self._lock = threading.Lock()
 
     # -- collect hooks ------------------------------------------------
@@ -295,8 +295,8 @@ class MetricsRegistry:
         for fn in hooks:
             try:
                 fn()
-            except Exception:
-                pass  # a broken hook must not take down a scrape
+            except Exception:  # dascheck: disable=DAS303 -- a broken hook must not take down a scrape
+                pass
 
     def _family(self, name: str, help: str, kind: str,
                 label_keys: Sequence[str], **kwargs) -> Family:
@@ -421,7 +421,7 @@ class MetricsRegistry:
             for fn in fns:
                 try:
                     val = fn()
-                except Exception:
+                except Exception:  # dascheck: disable=DAS303 -- a broken callback must not break the snapshot
                     continue
                 if isinstance(val, dict):
                     for kv, v in val.items():

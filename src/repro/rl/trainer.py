@@ -246,7 +246,7 @@ class Trainer:
         for c in self._clients:
             try:
                 c.close()
-            except Exception:
+            except Exception:  # dascheck: disable=DAS303 -- best-effort client close during shutdown; the service stop below is what matters
                 pass
         self._clients = []
         if self.service is not None:

@@ -1,0 +1,475 @@
+"""dascheck (repro.analysis) — the static analysis suite's own tests.
+
+Each rule family gets a seeded-violation fixture (the rule must fire)
+and a clean twin (the rule must stay quiet), plus the machinery tests:
+suppression comments, baseline round-trip, and the meta-test that the
+real tree is clean — `python -m repro.analysis src` exiting 0 is a
+merge invariant, so a regression here IS a finding.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis.core import (
+    analyze,
+    analyze_for_baseline,
+    write_baseline,
+)
+from repro.analysis.main import main
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _write_pkg(root: Path, files: dict) -> Path:
+    """Materialize a tiny `repro`-rooted package so module naming and
+    cross-module call resolution work exactly like in the real tree."""
+    pkg = root / "src" / "repro"
+    pkg.mkdir(parents=True, exist_ok=True)
+    (pkg / "__init__.py").write_text("")
+    for rel, src in files.items():
+        p = pkg / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        if not (p.parent / "__init__.py").exists():
+            (p.parent / "__init__.py").write_text("")
+        p.write_text(src)
+    return root / "src"
+
+
+def _analyze(root: Path, files: dict, select=None, baseline=None):
+    src = _write_pkg(root, files)
+    return analyze([str(src)], repo_root=root, select=select,
+                   baseline=baseline)
+
+
+def _codes(report):
+    return sorted(f.rule for f in report.findings)
+
+
+# -- DAS00x: trace hygiene ----------------------------------------------
+
+
+class TestTraceHygiene:
+    def test_host_sync_in_jitted_function_fires(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import jax\n"
+            "import numpy as np\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    return np.asarray(x) + 1\n"
+        )}, select=["DAS001"])
+        assert _codes(rep) == ["DAS001"]
+
+    def test_host_sync_outside_hot_path_is_fine(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import numpy as np\n"
+            "def f(x):\n"
+            "    return np.asarray(x) + 1\n"
+        )}, select=["DAS001"])
+        assert _codes(rep) == []
+
+    def test_marker_comment_makes_function_hot(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "# das: hot-path\n"
+            "def loop(x):\n"
+            "    return float(x.item())\n"
+        )}, select=["DAS001"])
+        assert _codes(rep) == ["DAS001"]
+
+    def test_reachability_through_call_graph(self, tmp_path):
+        # helper is hot only because the jitted caller reaches it
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import jax\n"
+            "def helper(x):\n"
+            "    return x.item()\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    return helper(x)\n"
+        )}, select=["DAS001"])
+        assert _codes(rep) == ["DAS001"]
+        assert rep.findings[0].symbol.endswith("helper")
+
+    def test_cross_module_reachability(self, tmp_path):
+        rep = _analyze(tmp_path, {
+            "util.py": (
+                "def helper(x):\n"
+                "    return x.item()\n"
+            ),
+            "mod.py": (
+                "import jax\n"
+                "from repro.util import helper\n"
+                "@jax.jit\n"
+                "def f(x):\n"
+                "    return helper(x)\n"
+            ),
+        }, select=["DAS001"])
+        assert _codes(rep) == ["DAS001"]
+        assert "util.py" in rep.findings[0].path
+
+    def test_tracer_branch_fires(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import jax\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    if x > 0:\n"
+            "        return x\n"
+            "    return -x\n"
+        )}, select=["DAS002"])
+        assert _codes(rep) == ["DAS002"]
+
+    def test_branch_on_static_shape_is_fine(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import jax\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    if x.shape[0] > 1:\n"
+            "        return x\n"
+            "    return -x\n"
+        )}, select=["DAS002"])
+        assert _codes(rep) == []
+
+    def test_branch_on_scalar_annotated_param_is_fine(self, tmp_path):
+        # the repo convention: static knobs are annotated scalars
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import jax\n"
+            "@jax.jit\n"
+            "def f(x, n: int):\n"
+            "    if n > 1:\n"
+            "        return x\n"
+            "    return -x\n"
+        )}, select=["DAS002"])
+        assert _codes(rep) == []
+
+    def test_static_argnames_untaints(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import jax\n"
+            "from functools import partial\n"
+            "@partial(jax.jit, static_argnames=('mode',))\n"
+            "def f(x, mode):\n"
+            "    if mode:\n"
+            "        return x\n"
+            "    return -x\n"
+        )}, select=["DAS002"])
+        assert _codes(rep) == []
+
+    def test_jit_in_loop_fires(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import jax\n"
+            "def run(fs, x):\n"
+            "    for f in fs:\n"
+            "        x = jax.jit(f)(x)\n"
+            "    return x\n"
+        )}, select=["DAS003"])
+        assert _codes(rep) == ["DAS003"]
+
+    def test_mutable_closure_over_traced_fn_fires(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import jax\n"
+            "acc = []\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    acc.append(1)\n"
+            "    return x\n"
+        )}, select=["DAS004"])
+        assert _codes(rep) == ["DAS004"]
+
+
+# -- DAS101: lock discipline --------------------------------------------
+
+
+class TestLockDiscipline:
+    FIXTURE = (
+        "import threading\n"
+        "class Box:\n"
+        "    def __init__(self):\n"
+        "        self._items = []  # guarded-by: self._lock\n"
+        "        self._lock = threading.Lock()\n"
+        "    def add(self, x):\n"
+        "        with self._lock:\n"
+        "            self._items.append(x)\n"
+        "    def peek(self):\n"
+        "        return len(self._items)\n"
+    )
+
+    def test_unlocked_access_fires(self, tmp_path):
+        rep = _analyze(tmp_path, {"box.py": self.FIXTURE},
+                       select=["DAS101"])
+        assert _codes(rep) == ["DAS101"]
+        f = rep.findings[0]
+        assert f.symbol.endswith("peek")
+        assert "_items" in f.message
+
+    def test_locked_access_and_init_are_fine(self, tmp_path):
+        fixed = self.FIXTURE.replace(
+            "    def peek(self):\n"
+            "        return len(self._items)\n",
+            "    def peek(self):\n"
+            "        with self._lock:\n"
+            "            return len(self._items)\n",
+        )
+        rep = _analyze(tmp_path, {"box.py": fixed}, select=["DAS101"])
+        assert _codes(rep) == []
+
+    def test_holds_lock_annotation_is_trusted(self, tmp_path):
+        fixed = self.FIXTURE.replace(
+            "    def peek(self):\n",
+            "    # das: holds-lock(self._lock)\n"
+            "    def peek(self):\n",
+        )
+        rep = _analyze(tmp_path, {"box.py": fixed}, select=["DAS101"])
+        assert _codes(rep) == []
+
+
+# -- DAS201: clock discipline -------------------------------------------
+
+
+class TestClockDiscipline:
+    def test_raw_sleep_fires(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import time\n"
+            "def wait():\n"
+            "    time.sleep(1.0)\n"
+        )}, select=["DAS201"])
+        assert _codes(rep) == ["DAS201"]
+
+    def test_from_import_and_alias_fire(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import time as t\n"
+            "from time import monotonic\n"
+            "def wait():\n"
+            "    t.sleep(1.0)\n"
+            "    return monotonic()\n"
+        )}, select=["DAS201"])
+        assert _codes(rep) == ["DAS201", "DAS201"]
+
+    def test_perf_counter_is_fine(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import time\n"
+            "def dur():\n"
+            "    return time.perf_counter()\n"
+        )}, select=["DAS201"])
+        assert _codes(rep) == []
+
+    def test_clock_module_is_exempt(self, tmp_path):
+        rep = _analyze(tmp_path, {"fault/clock.py": (
+            "import time\n"
+            "class SystemClock:\n"
+            "    def now(self):\n"
+            "        return time.monotonic()\n"
+        )}, select=["DAS201"])
+        assert _codes(rep) == []
+
+
+# -- DAS30x: project invariants -----------------------------------------
+
+
+class TestProjectInvariants:
+    def test_metric_prefix_fires(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "def setup(reg):\n"
+            "    return reg.counter('rounds_total', 'help')\n"
+        )}, select=["DAS301"])
+        assert _codes(rep) == ["DAS301"]
+
+    def test_das_prefix_is_fine(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "def setup(reg):\n"
+            "    return reg.counter('das_rounds_total', 'help')\n"
+        )}, select=["DAS301"])
+        assert _codes(rep) == []
+
+    def test_rootless_exception_class_fires(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "class ShardError(Exception):\n"
+            "    pass\n"
+        )}, select=["DAS302"])
+        assert _codes(rep) == ["DAS302"]
+
+    def test_taxonomy_rooted_exception_is_fine(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "class ShardError(OSError):\n"
+            "    pass\n"
+        )}, select=["DAS302"])
+        assert _codes(rep) == []
+
+    def test_broad_except_without_justification_fires(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "def f():\n"
+            "    try:\n"
+            "        return 1\n"
+            "    except Exception:\n"
+            "        return 0\n"
+        )}, select=["DAS303"])
+        assert _codes(rep) == ["DAS303"]
+
+    def test_print_outside_entrypoint_fires(self, tmp_path):
+        rep = _analyze(tmp_path, {"core/mod.py": (
+            "def f():\n"
+            "    print('hi')\n"
+        )}, select=["DAS304"])
+        assert _codes(rep) == ["DAS304"]
+
+    def test_print_in_launch_main_is_fine(self, tmp_path):
+        rep = _analyze(tmp_path, {"launch/cli.py": (
+            "def main():\n"
+            "    print('report')\n"
+        )}, select=["DAS304"])
+        assert _codes(rep) == []
+
+
+# -- suppressions --------------------------------------------------------
+
+
+class TestSuppression:
+    def test_justified_suppression_silences(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import time\n"
+            "def wait():\n"
+            "    time.sleep(1.0)  # dascheck: disable=DAS201 -- test rig\n"
+        )}, select=["DAS201"])
+        assert _codes(rep) == []
+        assert rep.suppressed == 1
+
+    def test_unjustified_suppression_is_itself_a_finding(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import time\n"
+            "def wait():\n"
+            "    time.sleep(1.0)  # dascheck: disable=DAS201\n"
+        )}, select=["DAS201"])
+        assert len(rep.findings) == 1
+        assert "no justification" in rep.findings[0].message
+
+    def test_suppression_for_other_rule_does_not_silence(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import time\n"
+            "def wait():\n"
+            "    time.sleep(1.0)  # dascheck: disable=DAS303 -- wrong code\n"
+        )}, select=["DAS201"])
+        assert "DAS201" in _codes(rep)
+
+
+# -- baseline round-trip -------------------------------------------------
+
+
+class TestBaseline:
+    FILES = {"mod.py": (
+        "import time\n"
+        "def wait():\n"
+        "    time.sleep(1.0)\n"
+    )}
+
+    def test_round_trip_silences_only_recorded_findings(self, tmp_path):
+        src = _write_pkg(tmp_path, self.FILES)
+        pairs = analyze_for_baseline([str(src)], repo_root=tmp_path)
+        pairs = [p for p in pairs if p[0].rule == "DAS201"]
+        assert len(pairs) == 1
+        baseline_file = tmp_path / "baseline.json"
+        write_baseline(baseline_file, pairs)
+
+        rep = analyze([str(src)], repo_root=tmp_path,
+                      select=["DAS201"], baseline=baseline_file)
+        assert _codes(rep) == []
+        assert rep.baselined == 1
+
+        # a NEW violation is not covered by the old baseline
+        (src / "repro" / "mod.py").write_text(
+            "import time\n"
+            "def wait():\n"
+            "    time.sleep(1.0)\n"
+            "def wait2():\n"
+            "    time.sleep(2.0)\n"
+        )
+        rep2 = analyze([str(src)], repo_root=tmp_path,
+                       select=["DAS201"], baseline=baseline_file)
+        assert _codes(rep2) == ["DAS201"]
+        assert rep2.findings[0].symbol.endswith("wait2")
+
+    def test_baseline_fingerprint_survives_line_moves(self, tmp_path):
+        src = _write_pkg(tmp_path, self.FILES)
+        baseline_file = tmp_path / "baseline.json"
+        write_baseline(
+            baseline_file,
+            analyze_for_baseline([str(src)], repo_root=tmp_path),
+        )
+        # shift the violation down two lines; fingerprint must still match
+        (src / "repro" / "mod.py").write_text(
+            "import time\n"
+            "\n"
+            "\n"
+            "def wait():\n"
+            "    time.sleep(1.0)\n"
+        )
+        rep = analyze([str(src)], repo_root=tmp_path,
+                      select=["DAS201"], baseline=baseline_file)
+        assert _codes(rep) == []
+        assert rep.baselined == 1
+
+
+# -- CLI + meta ----------------------------------------------------------
+
+
+class TestCli:
+    def test_json_output_shape(self, tmp_path, capsys):
+        _write_pkg(tmp_path, {"mod.py": (
+            "import time\n"
+            "def wait():\n"
+            "    time.sleep(1.0)\n"
+        )})
+        rc = main(["--root", str(tmp_path), "--format", "json",
+                   "--select", "DAS201", str(tmp_path / "src")])
+        out = json.loads(capsys.readouterr().out)
+        assert rc == 1
+        assert out["findings"][0]["rule"] == "DAS201"
+        assert {"path", "line", "message", "symbol"} <= set(
+            out["findings"][0]
+        )
+
+    def test_select_filters_rules(self, tmp_path, capsys):
+        _write_pkg(tmp_path, {"mod.py": (
+            "import time\n"
+            "def wait():\n"
+            "    time.sleep(1.0)\n"
+        )})
+        rc = main(["--root", str(tmp_path), "--select", "DAS303",
+                   str(tmp_path / "src")])
+        capsys.readouterr()
+        assert rc == 0
+
+    def test_write_baseline_then_clean(self, tmp_path, capsys):
+        _write_pkg(tmp_path, {"mod.py": (
+            "import time\n"
+            "def wait():\n"
+            "    time.sleep(1.0)\n"
+        )})
+        bl = tmp_path / "bl.json"
+        rc = main(["--root", str(tmp_path), "--write-baseline", str(bl),
+                   str(tmp_path / "src")])
+        capsys.readouterr()
+        assert rc == 0 and bl.exists()
+        rc = main(["--root", str(tmp_path), "--baseline", str(bl),
+                   str(tmp_path / "src")])
+        capsys.readouterr()
+        assert rc == 0
+
+    def test_list_rules_names_every_family(self, capsys):
+        rc = main(["--list-rules"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        for code in ("DAS001", "DAS101", "DAS201", "DAS301"):
+            assert code in out
+
+    def test_repo_tree_is_clean(self, capsys):
+        """Merge invariant: `python -m repro.analysis src` exits 0."""
+        rc = main(["--root", str(REPO_ROOT), str(REPO_ROOT / "src")])
+        capsys.readouterr()
+        assert rc == 0
+
+    def test_module_entrypoint_runs(self):
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "src"],
+            cwd=REPO_ROOT, capture_output=True, text=True,
+            env={"PYTHONPATH": str(REPO_ROOT / "src"),
+                 "PATH": "/usr/bin:/bin"},
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr
