@@ -17,6 +17,7 @@ MODULES = [
     "bench_faults",
     "bench_history",
     "bench_obs",
+    "bench_resume",
     "bench_rollout",
     "bench_service",
     "fig01_batch_collapse",

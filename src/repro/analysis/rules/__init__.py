@@ -3,4 +3,5 @@
 from . import trace_hygiene  # noqa: F401
 from . import lock_discipline  # noqa: F401
 from . import clock_discipline  # noqa: F401
+from . import io_discipline  # noqa: F401
 from . import project_invariants  # noqa: F401

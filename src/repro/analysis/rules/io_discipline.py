@@ -1,0 +1,144 @@
+"""DAS005 — file-I/O discipline in hot paths.
+
+The serve loop's per-round host window is budgeted (the journal's
+group-commit overhead gate holds it to ~2% of round host time); an
+unbatched ``open()``/``os.fsync()``/``fh.write()`` inside a
+``# das: hot-path`` function re-introduces per-round syscall latency —
+and, worse, unbatched durability writes that the write-ahead journal
+exists to amortize.  DAS005 flags direct file I/O (builtin ``open``,
+``os.fsync``/``os.write``/``os.open``/``os.fdatasync``, and
+``.write``/``.writelines``/``.flush`` on file handles) inside hot
+functions.
+
+The one sanctioned site is ``repro.fault.journal.RolloutJournal``'s
+group-commit path: one buffered write + flush per consumed round,
+fsync batched by ``fsync_every``.  Those call sites carry inline
+justified suppressions, so every durability write on the hot path is
+visible and accounted for at the call site.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Set
+
+from ..callgraph import HotIndex, hot_index
+from ..core import Finding, Module, Project, Rule, register
+from .trace_hygiene import _body_nodes
+
+# os-level I/O calls that hit the filesystem synchronously
+_OS_BANNED = {"fsync", "fdatasync", "write", "open", "pwrite", "writev"}
+# methods on a file-tainted handle that issue write syscalls
+_FILE_METHODS = {"write", "writelines", "flush"}
+
+
+def _os_aliases(module: Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "os":
+                    out.add(a.asname or "os")
+    return out
+
+
+def _from_os_names(module: Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "os":
+            for a in node.names:
+                if a.name in _OS_BANNED:
+                    out.add(a.asname or a.name)
+    return out
+
+
+def _file_taint(info) -> Set[str]:
+    """Names (locals and ``self.<attr>`` attributes) assigned from an
+    opener call — builtin ``open(...)`` or any ``*open*`` method (this
+    covers ``os.fdopen`` and lazy ``self._ensure_open()`` handles)."""
+    tainted: Set[str] = set()
+    for node in _body_nodes(info.node):
+        if not isinstance(node, ast.Assign):
+            continue
+        v = node.value
+        if not isinstance(v, ast.Call):
+            continue
+        fn = v.func
+        opens = (isinstance(fn, ast.Name) and fn.id == "open") or (
+            isinstance(fn, ast.Attribute) and "open" in fn.attr
+        )
+        if not opens:
+            continue
+        for t in node.targets:
+            if isinstance(t, ast.Name):
+                tainted.add(t.id)
+            elif isinstance(t, ast.Attribute):
+                tainted.add(t.attr)
+    return tainted
+
+
+@register
+class HotFileIORule(Rule):
+    id = "DAS005"
+    name = "file-io-in-hot-path"
+    family = "io-discipline"
+    description = (
+        "Direct file I/O (`open`, `os.fsync`/`os.write`, `.write()`/"
+        "`.flush()` on a file handle) inside a `# das: hot-path` "
+        "function; batch it through the write-ahead journal's group "
+        "commit (the one suppressed, sanctioned hot write path) or move "
+        "it off the round loop."
+    )
+
+    def check(self, module: Module, project: Project):
+        idx: HotIndex = hot_index(project)
+        os_aliases = _os_aliases(module)
+        os_bare = _from_os_names(module)
+        for info in idx.functions(module):
+            if not idx.is_hot(info):
+                continue
+            tainted = _file_taint(info)
+            for node in _body_nodes(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = node.func
+                msg = None
+                if isinstance(fn, ast.Name):
+                    if fn.id == "open":
+                        msg = "builtin `open()`"
+                    elif fn.id in os_bare:
+                        msg = f"`{fn.id}()` (os-level write)"
+                elif isinstance(fn, ast.Attribute):
+                    base = fn.value
+                    if (
+                        isinstance(base, ast.Name)
+                        and base.id in os_aliases
+                        and fn.attr in _OS_BANNED
+                    ):
+                        msg = f"`{base.id}.{fn.attr}()`"
+                    elif fn.attr in _FILE_METHODS:
+                        handle = None
+                        if isinstance(base, ast.Name) and base.id in tainted:
+                            handle = base.id
+                        elif (
+                            isinstance(base, ast.Attribute)
+                            and base.attr in tainted
+                        ):
+                            handle = base.attr
+                        if handle is not None:
+                            msg = (
+                                f"`.{fn.attr}()` on file handle `{handle}`"
+                            )
+                if msg:
+                    yield Finding(
+                        rule=self.id,
+                        path=module.rel,
+                        line=node.lineno,
+                        col=node.col_offset,
+                        message=(
+                            f"{msg} on the hot path — batch through the "
+                            "journal group commit or move off the round "
+                            "loop"
+                        ),
+                        symbol=info.qualname,
+                    )

@@ -72,7 +72,7 @@ from repro.core.length_policy import (
     LengthPolicy,
     LengthPolicyConfig,
 )
-from repro.core.scheduler import Request, SlotScheduler
+from repro.core.scheduler import CANCELLED, EXPIRED, Request, SlotScheduler
 from repro.core.verify import sample_token, sample_token_rows, verify_block
 from repro.models import model as M
 
@@ -250,6 +250,7 @@ class SpecEngine:
         self._fused_jit: Dict[Tuple[int, int], Any] = {}
         self._copy_rows_fn = None
         self._admit_state_fn = None
+        self._evict_state_fn = None
         # Per-(problem, partial-length) budget memo: with G samples per
         # problem the per-row LengthPolicy calls are G-way duplicated
         # every verify round; keyed on the history version so any new
@@ -293,7 +294,15 @@ class SpecEngine:
                      "Device-to-host array crossings"),
             "round_host": h("das_round_host_seconds",
                             "Host bookkeeping time per round dispatch"),
+            "resumed": c("das_resumed_tokens_total",
+                         "Tokens salvaged into resumed rollouts (journal "
+                         "recovery / preemption re-admission)"),
         }
+        self._preempt_fam = tel.registry.counter_family(
+            "das_preemptions_total",
+            "Resident rollouts evicted from their slot, by reason",
+            ("reason",),
+        )
         fam = tel.registry.histogram_family(
             "das_accepted_tokens",
             "Accepted tokens per active row per round, by the row's "
@@ -436,20 +445,41 @@ class SpecEngine:
 
     def _get_admit_state(self):
         """Jitted fused-state admission write: newly admitted rows'
-        head/tail/limit scatter into the device ``RoundState``. ``slots``
-        may be padded with ``n_slots`` (out-of-range scatters drop)."""
+        head/tail/limit/emitted scatter into the device ``RoundState``
+        (``emitted`` is 1 for fresh admissions, the salvaged length for
+        journal/preemption resumes). ``slots`` may be padded with
+        ``n_slots`` (out-of-range scatters drop)."""
         if self._admit_state_fn is None:
-            def write_fn(state, slots, heads, tails, max_new):
+            def write_fn(state, slots, heads, tails, max_new, emitted):
                 return RoundState(
                     head=state.head.at[slots].set(heads),
                     tails=state.tails.at[slots].set(tails),
                     active=state.active.at[slots].set(True),
-                    emitted=state.emitted.at[slots].set(1),
+                    emitted=state.emitted.at[slots].set(emitted),
                     max_new=state.max_new.at[slots].set(max_new),
                 )
 
             self._admit_state_fn = jax.jit(write_fn, donate_argnums=(0,))
         return self._admit_state_fn
+
+    def _get_evict_state(self):
+        """Jitted fused-state eviction write: preempted / cancelled /
+        expired rows' ``active`` bits clear in one donated scatter (the
+        other columns are dead once inactive — the next admission into
+        the slot overwrites them). ``slots`` may be padded with
+        ``n_slots`` (out-of-range scatters drop)."""
+        if self._evict_state_fn is None:
+            def evict_fn(state, slots):
+                return RoundState(
+                    head=state.head,
+                    tails=state.tails,
+                    active=state.active.at[slots].set(False),
+                    emitted=state.emitted,
+                    max_new=state.max_new,
+                )
+
+            self._evict_state_fn = jax.jit(evict_fn, donate_argnums=(0,))
+        return self._evict_state_fn
 
     def compile_count(self) -> int:
         """Total jit compilations attributable to this engine (plus the
@@ -464,7 +494,8 @@ class SpecEngine:
             + list(self._verify_jit.values())
             + list(self._fused_jit.values())
         )
-        for f in (self._copy_rows_fn, self._admit_state_fn):
+        for f in (self._copy_rows_fn, self._admit_state_fn,
+                  self._evict_state_fn):
             if f is not None:
                 fns.append(f)
         fns += [sm_ops._dispatch, sm_ref.suffix_match_propose_ref]
@@ -564,6 +595,8 @@ class SpecEngine:
         key: Optional[jax.Array] = None,
         collect_effective_batch: bool = False,
         watchdog=None,
+        journal=None,
+        journal_keys: Optional[Sequence[str]] = None,
     ) -> Tuple[List[List[int]], RolloutStats]:
         """Synchronous lock-step batched rollout with DAS speculation.
 
@@ -577,6 +610,15 @@ class SpecEngine:
         as progress, and a deadline overrun raises ``StallError`` —
         which the fault-tolerant rollout layer catches to re-queue this
         worker's problems to survivors.
+
+        ``journal`` (a ``repro.fault.RolloutJournal``) makes in-flight
+        progress crash-durable: each row's accepted tokens buffer as one
+        round record and group-commit once per verify round from the
+        post-consume host window. ``journal_keys`` names the sessions
+        (default ``row{b}``) — pass stable per-rollout keys so recovery
+        can match journaled progress back to its problem. Lock-step mode
+        journals but does not resume; salvaged sessions re-serve through
+        ``serve``'s prefix re-prefill path (token-identical at T=0).
         """
         e = self.engine
         if watchdog is not None:
@@ -637,11 +679,27 @@ class SpecEngine:
         stats.n_fwd += 1
         stats.n_toks_proposed += int(mask.sum())
 
+        jkeys: Optional[List[str]] = None
+        if journal is not None:
+            jkeys = [
+                str(journal_keys[b]) if journal_keys is not None
+                else f"row{b}" for b in range(B)
+            ]
+            for b in range(B):
+                journal.begin(
+                    jkeys[b], prompts[b], problem_id=problem_ids[b],
+                    max_new_tokens=int(max_new_arr[b]),
+                )
+                if outputs[b]:  # the sampled head token
+                    journal.note(jkeys[b], outputs[b])
+            journal.commit()
+
         if self._fuse_enabled(bds):
             cache = self._fused_generate_rounds(
                 bds, cache, key, problem_ids, outputs, active, emitted,
                 max_new_arr, head, rounds_per_row, stats,
                 collect_effective_batch, watchdog=watchdog,
+                journal=journal, jkeys=jkeys,
             )
         else:
             tel = self.telemetry
@@ -726,6 +784,8 @@ class SpecEngine:
                                 )
                             take = cand[b, : n_take[b]].tolist()
                             outputs[b].extend(take)
+                            if journal is not None and take:
+                                journal.note(jkeys[b], take)
                             if alive[b]:
                                 bds.feed(b, take)
                             else:
@@ -733,6 +793,8 @@ class SpecEngine:
                         emitted[active] += n_take[active]
                         head = np.where(alive, next_tok, head)
                         active = alive
+                    if journal is not None:  # post-consume group commit
+                        journal.commit()
                     if watchdog is not None:
                         watchdog.progress()
                     stats.host_time_s += time.perf_counter() - t_h
@@ -751,6 +813,10 @@ class SpecEngine:
                 response_len=len(outputs[b]),
             )
             self.length_policy.observe(problem_ids[b], len(outputs[b]))
+        if journal is not None:
+            for b in range(B):
+                journal.finish(jkeys[b], n_emitted=len(outputs[b]))
+            journal.commit()
         stats.n_toks_emitted = int(sum(len(o) for o in outputs))
         stats.per_row_rounds = rounds_per_row
         stats.per_row_emitted = np.array([len(o) for o in outputs])
@@ -767,7 +833,7 @@ class SpecEngine:
     def _fused_generate_rounds(
         self, bds, cache, key, problem_ids, outputs, active, emitted,
         max_new_arr, head, rounds_per_row, stats, collect_effective_batch,
-        watchdog=None,
+        watchdog=None, journal=None, jkeys=None,
     ):
         """Lock-step round loop on the fused device-resident program.
 
@@ -858,9 +924,14 @@ class SpecEngine:
                                 acc[tel],
                             )
                         for b in np.nonzero(mask & (n_take > 0))[0]:
-                            outputs[b].extend(cand[b, : n_take[b]].tolist())
+                            take = cand[b, : n_take[b]].tolist()
+                            outputs[b].extend(take)
+                            if journal is not None:
+                                journal.note(jkeys[b], take)
                         emitted[mask] += n_take[mask]
                         active &= alive
+                if journal is not None:  # one group commit per dispatch
+                    journal.commit()
                 if watchdog is not None:
                     watchdog.progress()
                 stats.host_time_s += time.perf_counter() - t_h
@@ -880,6 +951,10 @@ class SpecEngine:
         stats: Optional[RolloutStats] = None,
         collect_effective_batch: bool = False,
         watchdog=None,
+        journal=None,
+        drain=None,
+        preemption=None,
+        clock=None,
     ) -> Iterator[Request]:
         """Continuous-batching serve loop (generator of finished requests).
 
@@ -911,6 +986,36 @@ class SpecEngine:
         tokens, wall time) aggregate across the serve; the per-row
         arrays are request-order views that only the
         ``generate_continuous`` wrapper fills.
+
+        Durability / lifecycle (all optional, all off by default):
+
+        * ``journal`` — a ``repro.fault.RolloutJournal``. Every request
+          gets a ``begin`` record up front; each consumed round's
+          accepted tokens buffer as one ``round`` record per request and
+          group-commit once per round from the post-consume host window
+          (never inside a jitted dispatch). Requests arriving with
+          ``resume_tokens`` (journal recovery, or a preemption earlier
+          in this serve) re-admit via prefix re-prefill of
+          ``prompt + resume_tokens[:-1]`` with the last salvaged token
+          as the head — token-identical at T=0 to the uninterrupted run.
+        * ``drain`` — a ``repro.fault.DrainController``. Once draining,
+          admissions stop; residents run to completion until the drain
+          deadline, at which point they are preempted (progress
+          journaled, state PREEMPTED, not re-queued) and the serve
+          returns early with the journal fsynced.
+        * ``preemption`` — a ``scheduler.PreemptionPolicy``. Victims are
+          evicted post-consume, re-queued with remaining-length
+          priority, and resume later via the same prefix re-prefill —
+          slot oversubscription without losing long-tail progress.
+        * ``clock`` — a ``repro.fault.Clock`` driving per-request
+          ``deadline_s`` expiry, drain deadlines and the preemption
+          policy's deadline margin (``VirtualClock`` in tests).
+
+        Requests cancelled (``cancel_requested``) / expired / drained
+        end in a non-FINISHED terminal state with their partial
+        ``output`` preserved, and are yielded without being observed
+        into the drafter/length history (a truncated rollout must not
+        poison the policy).
         """
         e = self.engine
         tel_obs = self.telemetry
@@ -923,14 +1028,30 @@ class SpecEngine:
         # transfer counters into the registry as end-of-serve deltas.
         h2d0, d2h0 = stats.n_h2d, stats.n_d2h
         n_slots = max(1, min(int(slots) if slots else len(reqs), len(reqs)))
-        sched = SlotScheduler(n_slots, self.length_policy)
+        sched = SlotScheduler(n_slots, self.length_policy, clock=clock)
+        has_deadlines = any(r.deadline_s is not None for r in reqs)
+        if journal is not None:
+            for r in reqs:
+                if r.journal_key is None:
+                    r.journal_key = str(r.rid)
+                journal.begin(
+                    r.journal_key, r.prompt, problem_id=r.problem_id,
+                    max_new_tokens=r.max_new_tokens,
+                    resume=bool(r.resume_tokens),
+                )
         for r in reqs:
             sched.submit(r)
         if key is None:
             key = jax.random.key(0)
 
+        def _eff_prompt_len(r: Request) -> int:
+            # A resumed request prefills prompt + salvaged[:-1]; size
+            # the pool for that effective context.
+            rt = r.resume_tokens
+            return len(r.prompt) + (max(len(rt) - 1, 0) if rt else 0)
+
         # One pool cache sized for the worst admitted request.
-        max_tp = max(_prompt_bucket(len(r.prompt)) for r in reqs)
+        max_tp = max(_prompt_bucket(_eff_prompt_len(r)) for r in reqs)
         pool_len = _cache_bucket(
             max_tp + max(int(r.max_new_tokens) for r in reqs)
             + e.max_draft + 2
@@ -975,6 +1096,8 @@ class SpecEngine:
             req.session = None
             stats.n_toks_emitted += req.emitted
             sched.release(req)
+            if journal is not None:
+                journal.finish(req.journal_key, n_emitted=req.emitted)
             finalize_q.append(req)
             if tel_obs.enabled:
                 self._mx["emitted"].inc(req.emitted)
@@ -998,16 +1121,26 @@ class SpecEngine:
             admissions release their slot and the loop re-admits into
             it. In fused mode the new rows' head/tail/limit are
             batch-written into the device ``RoundState``.
+
+            Requests carrying ``resume_tokens`` (journal recovery or an
+            earlier preemption) re-admit via prefix re-prefill: the
+            context is ``prompt + salvaged[:-1]`` and the head is the
+            last salvaged token — the cache and drafter state land
+            exactly where the uninterrupted run had them, so the
+            continuation is token-identical at T=0.
             """
             nonlocal cache, key, state, roots_dirty
             while True:
                 newly = sched.next_admissions()
                 if not newly:
                     return
-                groups: Dict[int, List[Request]] = {}
+                groups: Dict[int, List[Tuple[Request, List[int]]]] = {}
                 for req in newly:
-                    Tp = _prompt_bucket(len(req.prompt))
-                    groups.setdefault(Tp, []).append(req)
+                    rt = req.resume_tokens
+                    ctx = (list(req.prompt) + [int(t) for t in rt[:-1]]
+                           if rt else req.prompt)
+                    Tp = _prompt_bucket(len(ctx))
+                    groups.setdefault(Tp, []).append((req, ctx))
                 admitted: List[Request] = []
                 for Tp in sorted(groups):
                     greqs = groups[Tp]
@@ -1018,16 +1151,16 @@ class SpecEngine:
                         i0 += k
                         toks = np.zeros((k, Tp), np.int32)
                         mask = np.zeros((k, Tp), bool)
-                        for j, req in enumerate(sub):
-                            n_p = len(req.prompt)
-                            toks[j, Tp - n_p:] = req.prompt
+                        for j, (req, ctx) in enumerate(sub):
+                            n_p = len(ctx)
+                            toks[j, Tp - n_p:] = ctx
                             mask[j, Tp - n_p:] = True
                         last_logits, rows_cache = self._get_prefill(
                             Tp, pool_len
                         )(self.params, jnp.asarray(toks), jnp.asarray(mask))
                         stats.n_h2d += 2
                         slots_arr = np.array(
-                            [r.slot for r in sub], np.int32
+                            [r.slot for r, _ in sub], np.int32
                         )
                         cache = copy_rows(cache, rows_cache, slots_arr)
                         stats.n_h2d += 1
@@ -1046,12 +1179,55 @@ class SpecEngine:
                         stats.n_d2h += 1
                         stats.n_fwd += 1
                         stats.n_toks_proposed += int(
-                            sum(len(r.prompt) for r in sub)
+                            sum(len(c) for _, c in sub)
                         )
-                        for j, req in enumerate(sub):
-                            tok = int(first_toks[j])
+                        for j, (req, _ctx) in enumerate(sub):
                             s = req.slot
                             req.admit_round = round_no
+                            rt = req.resume_tokens
+                            if rt:
+                                # Prefix re-prefill resume: the head is
+                                # the last salvaged token (at T=0 it IS
+                                # what the prefill's logits argmax to),
+                                # not a fresh sample.
+                                rt = [int(t) for t in rt]
+                                req.resume_tokens = None
+                                req.output = list(rt)
+                                tok = rt[-1]
+                                req.head = tok
+                                self._mx["resumed"].inc(float(len(rt)))
+                                if journal is not None:
+                                    # a fresh journal file (recovery
+                                    # onto a new path) has none of the
+                                    # salvaged prefix yet; re-note the
+                                    # missing suffix so ITS recovery is
+                                    # self-contained
+                                    have = journal.recorded_tokens(
+                                        req.journal_key
+                                    )
+                                    if have < len(rt):
+                                        journal.note(
+                                            req.journal_key, rt[have:]
+                                        )
+                                if tel_obs.enabled:
+                                    tel_obs.emit(
+                                        "resume", rid=req.rid, slot=s,
+                                        round=round_no, salvaged=len(rt),
+                                    )
+                                if (tok == e.eos_token
+                                        or len(rt) >= req.max_new_tokens):
+                                    finish(req)  # salvaged tail was done
+                                    continue
+                                bds.open(s, req.problem_id, req.prompt)
+                                bds.feed(s, rt)
+                                pids[s] = req.problem_id
+                                head[s] = tok
+                                emitted[s] = len(rt)
+                                max_new_arr[s] = req.max_new_tokens
+                                active[s] = True
+                                admitted.append(req)
+                                continue
+                            tok = int(first_toks[j])
                             req.head = tok
                             if tok == e.eos_token or req.max_new_tokens <= 0:
                                 if req.max_new_tokens > 0:
@@ -1059,6 +1235,8 @@ class SpecEngine:
                                 finish(req)  # freed; outer loop re-admits
                                 continue
                             req.output.append(tok)
+                            if journal is not None:
+                                journal.note(req.journal_key, [tok])
                             if req.max_new_tokens <= 1:  # head fills limit
                                 finish(req)
                                 continue
@@ -1085,15 +1263,18 @@ class SpecEngine:
                         (kb, bds.tail_len), -1, np.int32
                     )
                     mn_pad = np.ones(kb, np.int32)
+                    em_pad = np.ones(kb, np.int32)
                     for j, req in enumerate(admitted):
                         slots_pad[j] = req.slot
                         heads_pad[j] = req.head
                         tails_pad[j] = bds.tail_row(req.slot)
                         mn_pad[j] = req.max_new_tokens
+                        em_pad[j] = emitted[req.slot]  # 1, or salvaged len
                     state = self._get_admit_state()(
-                        state, slots_pad, heads_pad, tails_pad, mn_pad
+                        state, slots_pad, heads_pad, tails_pad, mn_pad,
+                        em_pad,
                     )
-                    stats.n_h2d += 4
+                    stats.n_h2d += 5
                     roots_dirty = True
 
         def consume() -> None:
@@ -1167,13 +1348,115 @@ class SpecEngine:
                     [pids[s] for s in tel], budgets[tel], accepted[tel]
                 )
             for s in np.nonzero(mask & (n_take > 0))[0]:
-                sched.slots[s].output.extend(cand[s, : n_take[s]].tolist())
+                req = sched.slots[s]
+                take = cand[s, : n_take[s]].tolist()
+                req.output.extend(take)
+                if journal is not None:  # buffered; committed post-consume
+                    journal.note(req.journal_key, take)
             for s in np.nonzero(mask & ~alive)[0]:
                 req = sched.slots[s]
                 bds.close(s)
                 pids[s] = None
                 finish(req)
             stats.host_time_s += time.perf_counter() - t_h
+
+        def teardown_slot(req: Request) -> int:
+            """Host-side eviction of a resident row; the fused device
+            ``active`` bit clears in one batched scatter afterwards."""
+            s = req.slot
+            bds.close(s)
+            pids[s] = None
+            active[s] = False
+            req.session = None
+            return s
+
+        def finish_terminal(req: Request, status: str) -> None:
+            """CANCELLED/EXPIRED terminal: partial ``output`` preserved,
+            journal closed with the terminal status, yielded WITHOUT
+            being observed into the drafter/length history (a truncated
+            rollout must not poison the policy)."""
+            req.emitted = len(req.output)
+            req.finish_round = round_no
+            if journal is not None:
+                journal.finish(
+                    req.journal_key, status=status, n_emitted=req.emitted
+                )
+            done_q.append(req)
+            if tel_obs.enabled:
+                tel_obs.emit(
+                    "request_done", rid=req.rid, status=status,
+                    emitted=req.emitted,
+                )
+
+        def preempt_req(req: Request, reason: str, requeue: bool) -> None:
+            """Evict a resident: its progress is already journaled round
+            by round, so the victim only needs its salvage prefix staged
+            (``resume_tokens``) and — unless draining — a re-queue with
+            remaining-length priority."""
+            sched.preempt(req)
+            req.resume_tokens = list(req.output)
+            req.head = -1
+            req.predicted_len = sched.remaining_len(req)
+            if requeue:
+                sched.submit(req)
+            self._preempt_fam.labels(reason).inc()
+            if tel_obs.enabled:
+                tel_obs.emit(
+                    "preempt", rid=req.rid, reason=reason,
+                    emitted=len(req.output), round=round_no,
+                    requeued=requeue,
+                )
+
+        def service_lifecycle() -> None:
+            """Post-consume lifecycle pass: cancellations, per-request
+            deadlines, drain expiry, preemption-policy victims. Runs
+            only while no round is in flight (``pending is None``), so
+            an evicted slot can never receive a stale round result."""
+            nonlocal state
+            evicted: List[int] = []
+            now = None
+            if has_deadlines or (
+                preemption is not None and preemption.deadline_margin_s > 0
+            ):
+                now = sched.clock.now()
+            for req in sched.running() + sched.queued_requests():
+                if req.cancel_requested:
+                    if req.slot >= 0:
+                        evicted.append(teardown_slot(req))
+                    sched.cancel(req)
+                    finish_terminal(req, CANCELLED)
+            if has_deadlines:
+                for req in sched.due_requests(now):
+                    if req.slot >= 0:
+                        evicted.append(teardown_slot(req))
+                    sched.expire(req)
+                    finish_terminal(req, EXPIRED)
+            if drain is not None and drain.draining and drain.expired():
+                # journal-and-exit: residents go PREEMPTED but are NOT
+                # re-queued; their journal sessions stay in flight, so
+                # the next process resumes them token-identically.
+                for req in sched.running():
+                    evicted.append(teardown_slot(req))
+                    preempt_req(req, "drain", requeue=False)
+            elif preemption is not None:
+                mrr = preemption.max_resident_rounds
+                for req in sched.preemption_victims(
+                    preemption, round_no, now
+                ):
+                    reason = (
+                        "slot_pressure"
+                        if mrr is not None
+                        and round_no - req.admit_round >= mrr
+                        else "deadline"
+                    )
+                    evicted.append(teardown_slot(req))
+                    preempt_req(req, reason, requeue=True)
+            if fused and evicted:
+                kb = 1 << max(len(evicted) - 1, 0).bit_length()
+                pad = np.full(kb, n_slots, np.int32)  # OOB pads drop
+                pad[: len(evicted)] = evicted
+                state = self._get_evict_state()(state, pad)
+                stats.n_h2d += 1
 
         def precompute_budgets():
             """Round t+1 budgets from bounded-staleness emitted counts —
@@ -1307,6 +1590,7 @@ class SpecEngine:
         while sched.has_work() or pending is not None:
             if watchdog is not None:
                 watchdog.check("serve round")
+            host0 = stats.host_time_s
             with tel_obs.span("serve_round"):
                 # ---- overlap window: the device executes the in-flight
                 # round; the host observes finished rollouts (their
@@ -1338,6 +1622,14 @@ class SpecEngine:
                     consume()
                 if watchdog is not None:
                     watchdog.progress()  # the in-flight round completed
+                if journal is not None:
+                    # THE post-consume group commit: one write + flush
+                    # per round, fsync batched (das_journal_* meter it)
+                    t_h = time.perf_counter()
+                    journal.commit()
+                    stats.host_time_s += time.perf_counter() - t_h
+                service_lifecycle()
+                draining = drain is not None and drain.draining
                 # ---- unfused: batched draft propose for the rows that
                 # survived the round, dispatched BEFORE admissions so
                 # the device suffix walk overlaps the admission
@@ -1352,7 +1644,8 @@ class SpecEngine:
                     if not fused:
                         prop_handle = bds.dispatch(budgets)
                     stats.host_time_s += time.perf_counter() - t_h
-                admit()  # recycle freed slots before the next round
+                if not draining:  # drain: stop admissions, run down
+                    admit()  # recycle freed slots before the next round
                 if active.any():
                     fresh_roots = False
                     if budgets is None:
@@ -1369,12 +1662,26 @@ class SpecEngine:
                         fresh_roots = True
                     with tel_obs.span("verify_dispatch"):
                         dispatch(budgets, prop_handle, fresh_roots)
+            if tel_obs.enabled:
+                self._mx["round_host"].observe(stats.host_time_s - host0)
             while done_q:
                 yield done_q.popleft()
+            if (drain is not None and drain.draining
+                    and pending is None and not active.any()):
+                # Drained out: residents finished (or were journaled and
+                # preempted at the deadline); whatever is still queued
+                # stays QUEUED with its journal session in flight.
+                break
+        while done_q:  # lifecycle terminals from the final iteration
+            yield done_q.popleft()
         while finalize_q:  # tail: rows that finished in the last round
             req = finalize_q.popleft()
             self._finalize_request(req)
             yield req
+        if journal is not None:
+            journal.commit()  # tail finish records
+            if drain is not None and drain.draining:
+                journal.sync()  # drain exit: force power-loss durability
         stats.n_h2d += bds.xfers.pop("h2d", 0)
         stats.n_d2h += bds.xfers.pop("d2h", 0)
         stats.wall_time_s = time.perf_counter() - t_serve0
@@ -1400,6 +1707,9 @@ class SpecEngine:
         key: Optional[jax.Array] = None,
         collect_effective_batch: bool = False,
         watchdog=None,
+        journal=None,
+        journal_keys: Optional[Sequence[str]] = None,
+        resume: Optional[Dict[str, Any]] = None,
     ) -> Tuple[List[List[int]], RolloutStats]:
         """Drop-in for ``generate`` backed by the continuous engine.
 
@@ -1408,6 +1718,14 @@ class SpecEngine:
         slots requires ``slots < len(prompts)`` to show). Returns
         outputs in request order plus the usual stats; ``n_rounds`` is
         the pool makespan in verify rounds.
+
+        ``journal``/``journal_keys`` thread the write-ahead token
+        journal through ``serve`` (see there). ``resume`` maps journal
+        keys to salvaged progress — a ``JournalSession`` or a plain
+        token list — from a dead worker's journal; matching rows
+        re-admit via prefix re-prefill instead of regenerating, and
+        rows whose salvage already finished return without any device
+        work.
         """
         t0 = time.perf_counter()
         B = len(prompts)
@@ -1423,11 +1741,31 @@ class SpecEngine:
             )
             for i in range(B)
         ]
+        if journal_keys is not None:
+            for i, r in enumerate(reqs):
+                r.journal_key = str(journal_keys[i])
+        to_serve = reqs
+        if resume:
+            from repro.fault.journal import JournalSession, resume_requests
+
+            sessions = {
+                str(k): (
+                    v if isinstance(v, JournalSession)
+                    else JournalSession(key=str(k), tokens=list(v))
+                )
+                for k, v in resume.items()
+            }
+            to_serve, pre_done = resume_requests(reqs, sessions)
+            if pre_done and self.telemetry.enabled:
+                self.telemetry.emit(
+                    "resume", pre_done=len(pre_done),
+                    salvaged=sum(len(r.output) for r in pre_done),
+                )
         stats = RolloutStats()
         for _ in self.serve(
-            reqs, slots=slots, key=key, stats=stats,
+            to_serve, slots=slots, key=key, stats=stats,
             collect_effective_batch=collect_effective_batch,
-            watchdog=watchdog,
+            watchdog=watchdog, journal=journal,
         ):
             pass
         outputs = [r.output for r in reqs]

@@ -9,11 +9,18 @@ The layer's contract, threaded through history/rollout/serve:
 * a dead/stuck **worker** trips the rollout watchdog; its unfinished
   problems re-queue to survivors and the merged batch stays
   token-identical at T=0 (greedy verification is worker-independent).
+* every **in-flight rollout** is durable: a per-worker write-ahead
+  token journal (``fault.journal``) group-commits each consumed verify
+  round, so a crash, preemption, or drain loses at most the final
+  un-synced round and survivors resume token-identically (T=0) via
+  prefix re-prefill. ``DrainController`` turns SIGTERM/SIGINT into
+  stop-admissions + journal-and-exit within a Clock-driven deadline.
 * every failure path is reachable deterministically via
   ``fault.inject.FaultPlan`` (seeded, countable, virtual-clocked).
 """
 
 from .clock import Clock, SystemClock, VirtualClock
+from .drain import DrainController
 from .health import (
     DOWN,
     HEALTHY,
@@ -26,9 +33,18 @@ from .health import (
 from .inject import (
     FaultPlan,
     FlakyWorker,
+    JournalCrashError,
     SilentServer,
     garble_json_file,
+    tear_journal_tail,
     truncate_json_file,
+)
+from .journal import (
+    JournalCorruptError,
+    JournalError,
+    JournalSession,
+    RolloutJournal,
+    resume_requests,
 )
 from .supervisor import AddressBook, ShardSupervisor
 from .watchdog import RolloutWatchdog, StallError
@@ -38,10 +54,16 @@ __all__ = [
     "BackoffPolicy",
     "Clock",
     "DOWN",
+    "DrainController",
     "FaultPlan",
     "FlakyWorker",
     "HEALTHY",
+    "JournalCorruptError",
+    "JournalCrashError",
+    "JournalError",
+    "JournalSession",
     "RESYNCING",
+    "RolloutJournal",
     "RolloutWatchdog",
     "ShardBackoffError",
     "ShardHealth",
@@ -52,5 +74,7 @@ __all__ = [
     "SystemClock",
     "VirtualClock",
     "garble_json_file",
+    "resume_requests",
+    "tear_journal_tail",
     "truncate_json_file",
 ]

@@ -17,6 +17,13 @@ chaos test replays bit-identically with no wall-clock coupling:
 * **watchdog faults** (``stall_watchdog``) hook a ``RolloutWatchdog``
   running on a ``VirtualClock`` and advance the clock past the deadline
   at a chosen check count — a stuck verify round, with zero sleeps.
+* **journal faults** (``crash_journal``) install as a
+  ``RolloutJournal.fault_hook``: die right after the *k*-th group
+  commit — ``mode="raise"`` throws into the serving loop (the
+  in-process stand-in for a dying worker; ``MultiWorkerRollout``
+  salvages the journaled tokens), ``mode="exit"`` is ``os._exit`` for
+  subprocess crash-recovery tests. ``tear_journal_tail`` rips bytes off
+  the file's final frame (power loss mid-commit).
 * **file faults** (``truncate_json_file`` / ``garble_json_file``)
   corrupt persisted history files in place for the quarantine tests.
 
@@ -40,6 +47,11 @@ TRUNCATE = "truncate"  # reply with a torn frame, then close
 # ("delay", seconds)   # sleep server-side, then reply normally
 
 
+class JournalCrashError(RuntimeError):
+    """Injected worker death at a journal commit point (RuntimeError so
+    ``MultiWorkerRollout``'s failure path catches it like a real one)."""
+
+
 class FaultPlan:
     """Seeded, countable fault schedule."""
 
@@ -50,6 +62,8 @@ class FaultPlan:
         self.telemetry = telemetry if telemetry is not None else obs.NULL
         # (shard, op) -> {count k -> action}; ops counted per shard.
         self._shard_faults: Dict[Tuple[int, str], Dict[int, Any]] = {}
+        # journal commit count -> crash mode ("raise" | "exit")
+        self._journal_faults: Dict[int, str] = {}
         self._counts: collections.Counter = collections.Counter()
         self._lock = threading.Lock()
         self.fired: List[Dict[str, Any]] = []
@@ -59,9 +73,11 @@ class FaultPlan:
         the structured event log."""
         self.fired.append(rec)
         if self.telemetry.enabled:
+            # rec's "kind" field would shadow emit()'s event kind
             self.telemetry.emit(
                 "fault_injected",
-                **{k: (v if isinstance(v, (int, float, str)) else str(v))
+                **{("fault" if k == "kind" else k):
+                   (v if isinstance(v, (int, float, str)) else str(v))
                    for k, v in rec.items()},
             )
 
@@ -116,6 +132,41 @@ class FaultPlan:
         with self._lock:
             return sum(len(d) for d in self._shard_faults.values())
 
+    # -- journal hook ------------------------------------------------------
+    def crash_journal(self, *, at: int, mode: str = "raise") -> "FaultPlan":
+        """Die right after the journal's ``at``-th group commit
+        (1-based). ``mode="raise"`` raises ``JournalCrashError`` into
+        the serving loop — the in-process chaos stand-in for a worker
+        that crashed with its WAL durable; ``MultiWorkerRollout``
+        salvages ``live_sessions()`` and resumes on a survivor.
+        ``mode="exit"`` is ``os._exit(9)``: a SIGKILL-grade death for
+        subprocess crash-recovery tests (the committed bytes survive in
+        the page cache; only the recovery path sees them)."""
+        if mode not in ("raise", "exit"):
+            raise ValueError(f"unknown crash_journal mode {mode!r}")
+        self._journal_faults[int(at)] = mode
+        return self
+
+    def journal_hook(self) -> Callable[[int], None]:
+        """Hook for ``RolloutJournal(fault_hook=...)``: fires the
+        scheduled crash when the commit count matches."""
+
+        def hook(commit: int) -> None:
+            with self._lock:
+                mode = self._journal_faults.pop(int(commit), None)
+                if mode is not None:
+                    self._record({
+                        "kind": "journal", "at": int(commit), "mode": mode,
+                    })
+            if mode == "exit":
+                os._exit(9)
+            if mode == "raise":
+                raise JournalCrashError(
+                    f"injected journal crash at commit {commit}"
+                )
+
+        return hook
+
     # -- watchdog hook -----------------------------------------------------
     def stall_watchdog(
         self, watchdog: RolloutWatchdog, *, at_check: int,
@@ -167,6 +218,17 @@ class FlakyWorker:
 
 
 # -- persisted-file corruption ----------------------------------------------
+def tear_journal_tail(path: str, drop_bytes: int = 3) -> str:
+    """Tear a write-ahead journal mid-frame (power loss during the final
+    group commit): drop the last ``drop_bytes`` bytes in place.
+    ``RolloutJournal.recover`` must truncate back to the last whole
+    frame — losing at most the final un-synced round, never raising."""
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(max(0, size - int(drop_bytes)))
+    return path
+
+
 def truncate_json_file(path: str, keep_fraction: float = 0.5) -> str:
     """Truncate a JSON file mid-payload (torn write / torn copy)."""
     with open(path, "rb") as f:

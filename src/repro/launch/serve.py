@@ -125,6 +125,16 @@ def main() -> None:
     ap.add_argument("--watchdog-deadline", type=float, default=120.0,
                     help="per-worker rollout watchdog deadline in "
                          "seconds (0 disables the watchdog)")
+    ap.add_argument("--journal-dir", default="",
+                    help="write-ahead token journal directory: every "
+                         "consumed verify round is group-committed; on "
+                         "startup unfinished sessions are recovered and "
+                         "resumed token-identically (T=0)")
+    ap.add_argument("--drain-deadline", type=float, default=30.0,
+                    help="graceful-drain deadline in seconds: SIGTERM/"
+                         "SIGINT stops admissions, residents past the "
+                         "deadline journal-and-exit (0 disables the "
+                         "handlers)")
     ap.add_argument("--metrics-port", type=int, default=-1,
                     help="serve Prometheus /metrics on this port "
                          "(0 = ephemeral; multi-worker runs bind one "
@@ -210,15 +220,61 @@ def main() -> None:
                 eng.drafter.store.n_rollouts, path,
             )
 
+    journal, recovered = _open_journal(args, tel)
+    drain = None
+    if args.drain_deadline > 0:
+        from repro.fault.drain import DrainController
+
+        drain = DrainController(
+            args.drain_deadline, telemetry=tel
+        ).install()
     rng = np.random.default_rng(0)
     try:
-        _serve_rounds(args, eng, rng, tel)
+        _serve_rounds(args, eng, rng, tel, journal=journal, drain=drain,
+                      recovered=recovered)
     finally:
         # Persist whatever history accumulated, interrupted or not —
         # losing a long session's rollouts defeats the warm start.
+        if journal is not None:
+            journal.close()
+        if drain is not None:
+            drain.uninstall()
         _persist_history()
         if metrics_server is not None:
             metrics_server.stop()
+
+
+def _open_journal(args, tel):
+    """Open the serve-side write-ahead journal (None when --journal-dir
+    is unset). An existing journal is replayed first: unfinished
+    sessions come back as salvage for ``_serve_rounds`` to resume."""
+    if not args.journal_dir:
+        return None, {}
+    import os
+
+    from repro.fault.journal import JournalCorruptError, RolloutJournal
+
+    os.makedirs(args.journal_dir, exist_ok=True)
+    path = os.path.join(args.journal_dir, "serve.wal")
+    recovered = {}
+    if os.path.exists(path):
+        try:
+            sessions = RolloutJournal.recover(path, telemetry=tel)
+        except JournalCorruptError as e:
+            log.warning("journal quarantined (%s); cold start", e)
+            sessions = {}
+        recovered = {
+            k: s for k, s in sessions.items() if s.resumable and s.tokens
+        }
+        log.info(
+            "journal recovery: %d finished, %d in-flight session(s), "
+            "%d salvaged token(s)",
+            sum(s.finished for s in sessions.values()), len(recovered),
+            sum(len(s.tokens) for s in recovered.values()),
+        )
+    journal = RolloutJournal(path, telemetry=tel)
+    journal.adopt(recovered)
+    return journal, recovered
 
 
 def _log_round(args, tel, rnd: int, msg: str, *fmt_args, **event) -> None:
@@ -380,7 +436,44 @@ def _serve_with_service(args, cfg, params) -> None:
                 srv.stop()
 
 
-def _serve_rounds(args, eng, rng, tel) -> None:
+def _resume_recovered(args, eng, tel, journal, drain, recovered) -> None:
+    """Serve the journal's unfinished sessions to completion before any
+    new traffic: prompts/budgets come from the journal's begin records,
+    salvaged tokens re-enter via prefix re-prefill (token-identical at
+    temperature 0)."""
+    import jax
+
+    from repro.core.scheduler import Request
+    from repro.core.spec_engine import RolloutStats
+    from repro.fault.journal import resume_requests
+
+    reqs = [
+        Request(
+            rid=i, problem_id=s.problem_id, prompt=list(s.prompt),
+            max_new_tokens=s.max_new_tokens or args.batch,
+            journal_key=s.key,
+        )
+        for i, s in enumerate(recovered.values())
+    ]
+    to_serve, pre_done = resume_requests(reqs, recovered)
+    log.info(
+        "resuming %d journaled request(s) (%d restored without serving)",
+        len(to_serve), len(pre_done),
+    )
+    if not to_serve:
+        return
+    st = RolloutStats()
+    for fin in eng.serve(to_serve, slots=args.slots,
+                         key=jax.random.key(0xD5), stats=st,
+                         journal=journal, drain=drain):
+        log.info(
+            "  resumed req %3d (%s) done: %3d toks (state %s)",
+            fin.rid, fin.problem_id, len(fin.output), fin.state,
+        )
+
+
+def _serve_rounds(args, eng, rng, tel, journal=None, drain=None,
+                  recovered=None) -> None:
     import time
 
     import jax
@@ -389,6 +482,9 @@ def _serve_rounds(args, eng, rng, tel) -> None:
     # rewinding to 1 — regressing it would weight stale history equal to
     # fresh rollouts and persist the regressed cursor on exit.
     base_epoch = eng.epoch
+
+    if recovered:
+        _resume_recovered(args, eng, tel, journal, drain, recovered)
 
     if args.continuous:
         from repro.core.scheduler import Request
@@ -407,7 +503,8 @@ def _serve_rounds(args, eng, rng, tel) -> None:
             st = RolloutStats()
             t0 = time.perf_counter()
             for fin in eng.serve(reqs, slots=args.slots,
-                                 key=jax.random.key(rnd), stats=st):
+                                 key=jax.random.key(rnd), stats=st,
+                                 journal=journal, drain=drain):
                 log.info(
                     "  req %3d (%s) done: %3d toks, rounds %d->%d",
                     fin.rid, fin.problem_id, len(fin.output),
@@ -425,6 +522,12 @@ def _serve_rounds(args, eng, rng, tel) -> None:
                 tok_per_s=toks / max(dt, 1e-9),
                 accept_per_round=st.acceptance_per_round,
             )
+            if drain is not None and drain.draining:
+                log.info(
+                    "drain (%s): stopping after round %d; unfinished "
+                    "progress is journaled", drain.reason, rnd,
+                )
+                break
             eng.begin_iteration(base_epoch + rnd + 1)
         return
 
@@ -435,7 +538,8 @@ def _serve_rounds(args, eng, rng, tel) -> None:
             prompts.append([2] + list(rng.integers(4, 20, size=4 + seed)))
             pids.append(f"q{seed}")
         t0 = time.perf_counter()
-        outs, st = eng.generate(prompts, pids, key=jax.random.key(rnd))
+        outs, st = eng.generate(prompts, pids, key=jax.random.key(rnd),
+                                journal=journal)
         dt = time.perf_counter() - t0
         _log_round(
             args, tel, rnd,
@@ -444,6 +548,10 @@ def _serve_rounds(args, eng, rng, tel) -> None:
             ms=dt * 1e3, fwd=st.n_fwd,
             accept_per_round=st.acceptance_per_round,
         )
+        if drain is not None and drain.draining:
+            log.info("drain (%s): stopping after round %d",
+                     drain.reason, rnd)
+            break
         eng.begin_iteration(base_epoch + rnd + 1)
 
 

@@ -75,6 +75,7 @@ class RolloutWorker:
         continuous: bool = False,
         slots: Optional[int] = None,
         watchdog=None,
+        journal=None,
     ):
         self.engine = engine
         self.task = task
@@ -86,6 +87,11 @@ class RolloutWorker:
         # which the fault-tolerant MultiWorkerRollout turns into a
         # re-queue to the surviving workers.
         self.watchdog = watchdog
+        # Optional repro.fault.RolloutJournal: every rollout's accepted
+        # tokens become crash-durable round by round under the stable
+        # key "{pid}#{g}", so a dead worker's in-flight progress is
+        # salvageable (``journal.live_sessions()``) instead of lost.
+        self.journal = journal
 
     def rollout(
         self,
@@ -94,26 +100,39 @@ class RolloutWorker:
         key,
         max_new_tokens: Optional[int] = None,
         collect_effective_batch: bool = False,
+        resume=None,
     ) -> RolloutBatch:
+        """Roll out ``problems`` × G samples.
+
+        ``resume`` maps journal keys (``"{pid}#{g}"``) to salvaged
+        sessions from a failed worker's journal: matching rows re-admit
+        via the engine's prefix re-prefill (token-identical at T=0)
+        instead of regenerating from token zero. Resume always routes
+        through the continuous engine — lock-step parity at T=0 makes
+        the outputs indistinguishable.
+        """
         t0 = time.perf_counter()
-        prompts, pids, probs = [], [], []
+        prompts, pids, probs, jkeys = [], [], [], []
         for p in problems:
-            for _ in range(self.G):
+            for g in range(self.G):
                 prompts.append(list(p.prompt))
                 pids.append(p.pid)
                 probs.append(p)
-        if self.continuous:
+                jkeys.append(f"{p.pid}#{g}")
+        if self.continuous or resume:
             outs, stats = self.engine.generate_continuous(
                 prompts, pids, slots=self.slots,
                 max_new_tokens=max_new_tokens, key=key,
                 collect_effective_batch=collect_effective_batch,
-                watchdog=self.watchdog,
+                watchdog=self.watchdog, journal=self.journal,
+                journal_keys=jkeys, resume=resume,
             )
         else:
             outs, stats = self.engine.generate(
                 prompts, pids, max_new_tokens=max_new_tokens, key=key,
                 collect_effective_batch=collect_effective_batch,
-                watchdog=self.watchdog,
+                watchdog=self.watchdog, journal=self.journal,
+                journal_keys=jkeys,
             )
         gen_time = time.perf_counter() - t0
         rewards = np.array(
@@ -281,20 +300,24 @@ class MultiWorkerRollout:
         keys = jax.random.split(key, N)
         if self.supervisor is not None:
             self.supervisor.poll()  # restart dead shards before the step
-        # Work queue of (worker, slice, slice key): a failed worker's
-        # slice goes back on the queue addressed to a survivor.
+        # Work queue of (worker, slice, slice key, salvage): a failed
+        # worker's slice goes back on the queue addressed to a
+        # survivor, carrying whatever progress the dead worker's
+        # journal holds so the survivor resumes instead of regenerating.
         queue = collections.deque(
-            (w, idxs, keys[w]) for w, idxs in enumerate(assign) if idxs
+            (w, idxs, keys[w], None) for w, idxs in enumerate(assign)
+            if idxs
         )
         expired: set = set()
         slices: List[Tuple[List[int], RolloutBatch]] = []
         while queue:
-            w, idxs, wkey = queue.popleft()
+            w, idxs, wkey, salvage = queue.popleft()
             try:
                 part = self.workers[w].rollout(
                     [problems[j] for j in idxs], key=wkey,
                     max_new_tokens=max_new_tokens,
                     collect_effective_batch=collect_effective_batch,
+                    resume=salvage,
                 )
             except (StallError, RuntimeError, OSError) as exc:
                 # StallError: watchdog expired the worker. RuntimeError/
@@ -310,19 +333,35 @@ class MultiWorkerRollout:
                 if self.supervisor is not None:
                     # the root cause may be a dead shard, not the worker
                     self.supervisor.poll()
+                # Salvage the dead worker's journaled in-flight progress
+                # (in-memory mirror — no file round-trip needed while
+                # the journal object is still reachable), merged over
+                # whatever salvage this slice already carried.
+                jrnl = getattr(self.workers[w], "journal", None)
+                if jrnl is not None:
+                    merged = dict(salvage) if salvage else {}
+                    merged.update(jrnl.live_sessions())
+                    salvage = merged or None
+                n_salvaged = (
+                    sum(len(s.tokens) for s in salvage.values())
+                    if salvage else 0
+                )
+                self.stats["salvaged_tokens"] += n_salvaged
                 # Re-queue under the slice's ORIGINAL key: outputs stay
                 # identical at T=0 regardless of executor, and at T>0
                 # the sampling stream follows the slice, not the worker.
                 v = survivors[w % len(survivors)]
-                queue.append((v, idxs, wkey))
+                queue.append((v, idxs, wkey, salvage))
                 self.stats["requeued_problems"] += len(idxs)
                 self.telemetry.emit(
                     "watchdog_requeue", worker=w, to_worker=v,
                     n_problems=len(idxs), error=str(exc),
+                    salvaged_tokens=n_salvaged,
                 )
                 log.warning(
                     "rollout worker %d expired (%s); re-queued %d "
-                    "problem(s) to worker %d", w, exc, len(idxs), v,
+                    "problem(s) to worker %d (%d journaled tokens "
+                    "salvaged)", w, exc, len(idxs), v, n_salvaged,
                 )
                 continue
             # Epoch barrier semantics: the next worker (and the next

@@ -78,6 +78,15 @@ class TrainerConfig:
     # Background supervision poll interval; 0 disables the thread (the
     # rollout layer still polls once per step and on every failure).
     supervise_interval_s: float = 1.0
+    # Durability: journal_dir enables per-worker write-ahead token
+    # journals (repro.fault.journal) — a crashed worker's in-flight
+    # rollouts are salvaged token-identically (T=0) by survivors.
+    # graceful_drain installs SIGTERM/SIGINT handlers in run(): the
+    # step in flight finishes, a checkpoint is written (ckpt_path
+    # permitting), and run() returns instead of dying mid-update.
+    journal_dir: str = ""
+    graceful_drain: bool = True
+    drain_deadline_s: float = 30.0
 
 
 class Trainer:
@@ -108,6 +117,8 @@ class Trainer:
         self.service = None  # sharded history service (n_workers > 1)
         self.supervisor = None  # shard supervisor (fault_tolerant)
         self._clients = []
+        self._journals = []  # per-worker write-ahead journals
+        self.drain = None  # DrainController, installed by run()
         self._build_workers()
         self.loader = PromptLoader(task, tcfg.prompts_per_step, seed=tcfg.seed)
         gcfg = GRPOConfig(
@@ -151,7 +162,8 @@ class Trainer:
             )]
             self.engine = self.engines[0]
             self.worker = RolloutWorker(
-                self.engine, self.task, tcfg.group_size
+                self.engine, self.task, tcfg.group_size,
+                journal=self._worker_journal(0),
             )
             return
         from repro.history.client import HistoryClient
@@ -219,8 +231,9 @@ class Trainer:
                 RolloutWorker(
                     e, self.task, tcfg.group_size,
                     watchdog=RolloutWatchdog(tcfg.watchdog_deadline_s),
+                    journal=self._worker_journal(w),
                 )
-                for e in self.engines
+                for w, e in enumerate(self.engines)
             ]
             self.worker = MultiWorkerRollout(
                 workers, fault_tolerant=True, supervisor=self.supervisor,
@@ -229,11 +242,31 @@ class Trainer:
         else:
             self.worker = MultiWorkerRollout(
                 [
-                    RolloutWorker(e, self.task, tcfg.group_size)
-                    for e in self.engines
+                    RolloutWorker(
+                        e, self.task, tcfg.group_size,
+                        journal=self._worker_journal(w),
+                    )
+                    for w, e in enumerate(self.engines)
                 ],
                 telemetry=self.telemetry,
             )
+
+    def _worker_journal(self, w: int):
+        """Write-ahead journal for worker ``w`` (None unless
+        ``journal_dir`` is set — the seed path stays journal-free)."""
+        if not self.tcfg.journal_dir:
+            return None
+        import os
+
+        from repro.fault.journal import RolloutJournal
+
+        os.makedirs(self.tcfg.journal_dir, exist_ok=True)
+        j = RolloutJournal(
+            os.path.join(self.tcfg.journal_dir, f"w{w}.wal"),
+            telemetry=self.telemetry,
+        )
+        self._journals.append(j)
+        return j
 
     def close(self) -> None:
         """Stop the history service and its clients (no-op when
@@ -249,9 +282,18 @@ class Trainer:
             except Exception:  # dascheck: disable=DAS303 -- best-effort client close during shutdown; the service stop below is what matters
                 pass
         self._clients = []
+        for j in self._journals:
+            try:
+                j.close()
+            except Exception:  # dascheck: disable=DAS303 -- best-effort journal close during shutdown; the WAL is already durable per-round
+                pass
+        self._journals = []
         if self.service is not None:
             self.service.stop()
             self.service = None
+        if self.drain is not None:
+            self.drain.uninstall()
+            self.drain = None
 
     def sft_warmup(self, steps: Optional[int] = None) -> float:
         """Supervised warmup on task target responses (pretraining
@@ -294,6 +336,16 @@ class Trainer:
     def run(self, steps: Optional[int] = None) -> List[Dict[str, Any]]:
         tcfg = self.tcfg
         n_steps = steps or tcfg.steps
+        if self.drain is None and tcfg.graceful_drain:
+            from repro.fault.drain import DrainController
+
+            # SIGTERM/SIGINT → finish the step in flight, checkpoint,
+            # return (instead of dying mid-update). install() is a
+            # no-op off the main thread; explicit drain.request() still
+            # works there.
+            self.drain = DrainController(
+                tcfg.drain_deadline_s, telemetry=self.telemetry
+            ).install()
         if tcfg.sft_warmup_steps > 0 and not self.history and self._step == 0:
             self.sft_warmup()
         if self._key is None:
@@ -328,6 +380,9 @@ class Trainer:
                 if bi < resume_at:
                     continue  # fast-forward after a mid-epoch resume
                 if self._step >= n_steps:
+                    epoch_done = False
+                    break
+                if self.drain is not None and self.drain.draining:
                     epoch_done = False
                     break
                 self._key, kr = jax.random.split(self._key)
@@ -380,6 +435,16 @@ class Trainer:
             if epoch_done:
                 self._epoch += 1
                 self._batch_idx = 0
+            if self.drain is not None and self.drain.draining:
+                # Checkpoint-and-exit: the cursor sidecar makes the next
+                # run() resume at the exact batch we stopped before.
+                if tcfg.ckpt_path:
+                    self.save_checkpoint(
+                        f"{tcfg.ckpt_path}/drain_step{self._step}.npz"
+                    )
+                for j in self._journals:
+                    j.sync()
+                break
         return self.history
 
     def _note_step_obs(self, rec: Dict[str, Any]) -> None:

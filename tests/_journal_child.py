@@ -1,0 +1,81 @@
+"""Subprocess child for the crash-recovery durability test.
+
+Serves a deterministic request set through ``SpecEngine.serve`` with a
+write-ahead journal and dies via ``os._exit(9)`` right after the k-th
+group commit (``FaultPlan.crash_journal(mode="exit")``) — a
+SIGKILL-grade death: no flushes, no atexit, no interpreter teardown.
+Only what the journal's group commits already handed the page cache
+survives for the parent to recover.
+
+Usage::
+
+    python tests/_journal_child.py <journal_path> <crash_at_commit>
+
+``crash_at_commit < 0`` serves to completion and prints the finished
+outputs as JSON on stdout (the token-identity reference).
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.base import ModelConfig  # noqa: E402
+from repro.core.scheduler import Request  # noqa: E402
+from repro.core.spec_engine import EngineConfig, SpecEngine  # noqa: E402
+from repro.fault import FaultPlan, RolloutJournal  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.models.layers import split_tree  # noqa: E402
+
+
+def tiny_cfg() -> ModelConfig:
+    # Mirrors conftest.tiny_dense — the parent rebuilds the identical
+    # engine (same init seed) to resume this child's journal.
+    return ModelConfig(
+        name="tiny-dense", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+        vocab_pad_multiple=8, dtype="float32",
+    )
+
+
+def mk_requests():
+    rng = np.random.default_rng(0)
+    return [
+        Request(
+            rid=i, problem_id=f"p{i % 3}",
+            prompt=[int(t) for t in rng.integers(2, 60, size=5 + i % 4)],
+            max_new_tokens=16 + 8 * (i % 3),
+        )
+        for i in range(6)
+    ]
+
+
+def main() -> None:
+    path = sys.argv[1]
+    crash_at = int(sys.argv[2])
+    cfg = tiny_cfg()
+    params, _ = split_tree(M.init_params(cfg, jax.random.key(0)))
+    eng = SpecEngine(
+        params, cfg,
+        EngineConfig(max_new_tokens=48, max_draft=8, eos_token=1),
+    )
+    hook = None
+    if crash_at >= 0:
+        plan = FaultPlan(seed=0).crash_journal(at=crash_at, mode="exit")
+        hook = plan.journal_hook()
+    journal = RolloutJournal(path, fsync_every=4, fault_hook=hook)
+    reqs = mk_requests()
+    for _ in eng.serve(reqs, slots=3, key=jax.random.key(1),
+                       journal=journal):
+        pass
+    journal.close()
+    print(json.dumps({str(r.rid): r.output for r in reqs}))
+
+
+if __name__ == "__main__":
+    main()

@@ -261,6 +261,82 @@ class TestClockDiscipline:
         assert _codes(rep) == []
 
 
+# -- DAS005: file-I/O discipline ----------------------------------------
+
+
+class TestIODiscipline:
+    def test_open_in_hot_function_fires(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "# das: hot-path\n"
+            "def loop(recs):\n"
+            "    with open('log.txt', 'a') as f:\n"
+            "        pass\n"
+        )}, select=["DAS005"])
+        assert _codes(rep) == ["DAS005"]
+
+    def test_os_fsync_and_handle_write_fire(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import os\n"
+            "# das: hot-path\n"
+            "def loop(path, recs):\n"
+            "    fh = open(path, 'ab')\n"
+            "    fh.write(b'x')\n"
+            "    fh.flush()\n"
+            "    os.fsync(fh.fileno())\n"
+        )}, select=["DAS005"])
+        assert _codes(rep) == ["DAS005"] * 4  # open + write + flush + fsync
+
+    def test_io_off_hot_path_is_fine(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "import os\n"
+            "def persist(path, recs):\n"
+            "    with open(path, 'ab') as fh:\n"
+            "        fh.write(b'x')\n"
+            "        os.fsync(fh.fileno())\n"
+        )}, select=["DAS005"])
+        assert _codes(rep) == []
+
+    def test_hot_call_into_journal_commit_is_fine(self, tmp_path):
+        # markers are not transitive through calls: a hot serve loop
+        # calling journal.commit() is the sanctioned pattern and must
+        # not be flagged at the call site.
+        rep = _analyze(tmp_path, {"mod.py": (
+            "# das: hot-path\n"
+            "def serve_round(journal):\n"
+            "    journal.commit()\n"
+        )}, select=["DAS005"])
+        assert _codes(rep) == []
+
+    def test_self_attr_handle_taint_fires(self, tmp_path):
+        rep = _analyze(tmp_path, {"mod.py": (
+            "class J:\n"
+            "    # das: hot-path\n"
+            "    def commit(self):\n"
+            "        self._fh = self._ensure_open()\n"
+            "        self._fh.write(b'x')\n"
+        )}, select=["DAS005"])
+        assert _codes(rep) == ["DAS005"]
+
+    def test_journal_suppressions_cover_real_tree(self):
+        # The shipped journal's commit path fires DAS005 at every write
+        # site and every site carries a justified suppression — the rule
+        # is active there, not exempted.
+        from repro.analysis.core import all_rules, load_module, Project
+
+        path = REPO_ROOT / "src" / "repro" / "fault" / "journal.py"
+        mod = load_module(path, REPO_ROOT)
+        proj = Project([mod])
+        rule = all_rules()["DAS005"]
+        findings = list(rule.check(mod, proj))
+        assert len(findings) >= 4  # open, write, flush, fsync
+        for f in findings:
+            sup = mod.suppressions.get(f.line)
+            assert sup is not None and sup.covers("DAS005"), (
+                f"unsuppressed DAS005 at journal.py:{f.line}"
+            )
+            assert sup.justification
+
+
 # -- DAS30x: project invariants -----------------------------------------
 
 
