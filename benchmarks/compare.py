@@ -1,0 +1,210 @@
+"""Benchmark regression gate: diff BENCH_*.json against committed
+baselines.
+
+Every bench module writes a structured ``BENCH_<name>.json`` next to
+its CSV rows. This tool flattens each document to dotted numeric leaves
+and compares them against ``benchmarks/baselines/BENCH_<name>.json``:
+
+* **structural**: a leaf present in the baseline but missing from the
+  current run fails (a metric silently disappeared);
+* **exactness**: booleans and identity/count-like leaves must match
+  exactly (``token_identity``, ``recompiles``, ``*_rounds`` …);
+* **bounded ratios**: percentage/fraction leaves compare with an
+  absolute tolerance;
+* **timing**: ``*_us``/``*_ms``/``*_s`` leaves compare as a RATIO with
+  a generous default (CI runners vary severalfold run to run — the
+  gate exists to catch order-of-magnitude blowups and structural
+  regressions, not 10% noise).
+
+Usage::
+
+    python benchmarks/compare.py                  # compare cwd BENCH_*.json
+    python benchmarks/compare.py --write-baseline # refresh baselines
+    python benchmarks/compare.py --strict         # new leaves also fail
+
+Per-metric overrides live in ``TOLERANCES`` (first glob match wins).
+"""
+
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import glob as globmod
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Optional, Tuple
+
+# (glob over "file:dotted.path", spec) — first match wins.
+# spec keys: exact | abs (absolute diff) | ratio (max(cur,base)/min)
+TOLERANCES: List[Tuple[str, dict]] = [
+    # correctness guards: never allowed to drift
+    ("*token_identity*", {"exact": True}),
+    ("*identical*", {"exact": True}),
+    ("*recompiles*", {"exact": True}),
+    ("*kernel_identity*", {"exact": True}),
+    # overhead percentages: the bench already asserts its own bound;
+    # here we only catch a silent doubling against the recorded value
+    ("*overhead_pct", {"abs": 2.0}),
+    ("*_pct", {"abs": 10.0}),
+    ("*accept*rate*", {"abs": 0.25}),
+    # span volume is structural (O(phases)): small absolute drift only
+    ("*spans_per_round", {"abs": 4.0}),
+    # config echoes (sizes, repeats) must be stable
+    ("*repeats", {"exact": True}),
+    ("*inner", {"exact": True}),
+    # timing: order-of-magnitude gate only (shared runners are noisy)
+    ("*_us", {"ratio": 8.0}),
+    ("*_ms", {"ratio": 8.0}),
+    ("*_s", {"ratio": 8.0}),
+    ("*us_per*", {"ratio": 8.0}),
+    ("*seconds*", {"ratio": 8.0}),
+]
+DEFAULT_NUMERIC = {"ratio": 8.0}
+
+
+def flatten(doc, prefix: str = "") -> Dict[str, object]:
+    """Dict/list tree → {dotted.path: leaf} for scalar leaves."""
+    out: Dict[str, object] = {}
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            out.update(flatten(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(doc, list):
+        for i, v in enumerate(doc):
+            out.update(flatten(v, f"{prefix}[{i}]"))
+    elif isinstance(doc, (int, float, bool)) or doc is None:
+        out[prefix] = doc
+    # strings are labels, not metrics — skipped
+    return out
+
+
+def _spec_for(path: str) -> dict:
+    for pat, spec in TOLERANCES:
+        if fnmatch.fnmatch(path, pat):
+            return spec
+    return DEFAULT_NUMERIC
+
+
+def compare_doc(
+    name: str, current: dict, baseline: dict, strict: bool = False
+) -> Tuple[List[str], List[str]]:
+    """Returns (failures, notes) for one bench document."""
+    failures: List[str] = []
+    notes: List[str] = []
+    cur = flatten(current)
+    base = flatten(baseline)
+    for path, bval in sorted(base.items()):
+        key = f"{name}:{path}"
+        if path not in cur:
+            failures.append(f"{key}: metric missing from current run "
+                            f"(baseline={bval!r})")
+            continue
+        cval = cur[path]
+        if bval is None or cval is None:
+            if bval != cval:
+                notes.append(f"{key}: None vs {cval!r}")
+            continue
+        if isinstance(bval, bool) or isinstance(cval, bool):
+            if bool(bval) != bool(cval):
+                failures.append(f"{key}: {cval!r} != baseline {bval!r}")
+            continue
+        spec = _spec_for(key)
+        if spec.get("exact"):
+            if cval != bval:
+                failures.append(f"{key}: {cval!r} != baseline {bval!r} "
+                                "(exact)")
+        elif "abs" in spec:
+            if abs(float(cval) - float(bval)) > spec["abs"]:
+                failures.append(
+                    f"{key}: {cval} vs baseline {bval} "
+                    f"(|diff| > {spec['abs']})"
+                )
+        else:  # ratio
+            lo, hi = sorted((abs(float(cval)), abs(float(bval))))
+            if lo == 0.0:
+                if hi > 0.0 and hi > spec["ratio"]:
+                    notes.append(f"{key}: {cval} vs baseline {bval} "
+                                 "(zero baseline)")
+                continue
+            r = hi / lo
+            if r > spec["ratio"]:
+                failures.append(
+                    f"{key}: {cval} vs baseline {bval} "
+                    f"({r:.1f}x > {spec['ratio']}x)"
+                )
+    for path in sorted(set(cur) - set(base)):
+        msg = f"{name}:{path}: new metric (not in baseline)"
+        (failures if strict else notes).append(msg)
+    return failures, notes
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff BENCH_*.json against committed baselines"
+    )
+    ap.add_argument("--bench-dir", default=".",
+                    help="directory holding the current BENCH_*.json")
+    ap.add_argument("--baseline-dir",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "baselines"),
+                    help="committed baseline directory")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="copy current BENCH_*.json into the baseline "
+                         "directory instead of comparing")
+    ap.add_argument("--strict", action="store_true",
+                    help="metrics absent from the baseline also fail "
+                         "(default: noted, pass)")
+    args = ap.parse_args(argv)
+
+    bench_files = sorted(
+        globmod.glob(os.path.join(args.bench_dir, "BENCH_*.json"))
+    )
+    if not bench_files:
+        print(f"no BENCH_*.json under {args.bench_dir}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        os.makedirs(args.baseline_dir, exist_ok=True)
+        for f in bench_files:
+            dst = os.path.join(args.baseline_dir, os.path.basename(f))
+            shutil.copyfile(f, dst)
+            print(f"baseline <- {f}")
+        return 0
+
+    all_failures: List[str] = []
+    compared = 0
+    for f in bench_files:
+        name = os.path.basename(f)
+        bpath = os.path.join(args.baseline_dir, name)
+        if not os.path.exists(bpath):
+            print(f"NOTE {name}: no baseline committed (run "
+                  "--write-baseline)")
+            continue
+        with open(f) as fh:
+            current = json.load(fh)
+        with open(bpath) as fh:
+            baseline = json.load(fh)
+        failures, notes = compare_doc(name, current, baseline,
+                                      strict=args.strict)
+        compared += 1
+        for n in notes:
+            print(f"NOTE {n}")
+        for x in failures:
+            print(f"FAIL {x}")
+        if not failures:
+            print(f"OK   {name} ({len(flatten(baseline))} leaves)")
+        all_failures.extend(failures)
+
+    if not compared:
+        print("no baselines found; nothing compared", file=sys.stderr)
+        return 2
+    if all_failures:
+        print(f"\n{len(all_failures)} regression(s) vs baselines")
+        return 1
+    print(f"\nall {compared} bench document(s) within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,6 +5,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.analysis src
+python scripts/check_metrics.py
 if command -v ruff >/dev/null 2>&1; then
   ruff check src tests benchmarks
 else

@@ -1,0 +1,135 @@
+#!/usr/bin/env python
+"""Metric-catalog drift gate.
+
+Every ``das_*`` metric name registered anywhere under ``src/`` must be
+documented in the README "Metric catalog" table. A metric that ships
+without a catalog row is invisible to anyone reading the docs and rots
+instantly — this check (wired into ``scripts/check.sh`` and the CI
+static-analysis job) fails the build listing the missing names.
+
+Catalog rows may use brace alternation and globs, e.g.::
+
+    `das_tokens_{proposed,drafted,accepted,emitted}_total`
+    `das_train_*` gauges
+    `das_phase_seconds{phase=...}`      # label selector, stripped
+
+Usage::
+
+    python scripts/check_metrics.py [--src src] [--readme README.md]
+
+Exit 0 when every registered name is covered; 1 otherwise (also fails
+on catalog patterns matching nothing — stale rows are drift too).
+"""
+
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import os
+import re
+import sys
+from typing import List, Set
+
+# String literals that start a metric name. The prefix convention is
+# enforced separately by dascheck DAS301; here we only harvest.
+_LITERAL = re.compile(r"""["'](das_[a-z0-9_]+)["']""")
+# f-string/format stems like f"das_{kind}_total" register dynamic
+# families; catalog rows must glob-cover the stem.
+_FSTRING = re.compile(r"""["'](das_[a-z0-9_]*)\{""")
+_BACKTICK = re.compile(r"`([^`]*das_[^`]*)`")
+
+
+def registered_names(src: str) -> Set[str]:
+    names: Set[str] = set()
+    for root, _dirs, files in os.walk(src):
+        for fn in files:
+            if not fn.endswith(".py"):
+                continue
+            with open(os.path.join(root, fn)) as f:
+                text = f.read()
+            for m in _LITERAL.finditer(text):
+                names.add(m.group(1))
+            for m in _FSTRING.finditer(text):
+                stem = m.group(1)
+                if stem != "das_":  # bare prefix checks, not a metric
+                    names.add(stem + "*")
+    return names
+
+
+def catalog_patterns(readme: str) -> List[str]:
+    """README catalog rows → fnmatch patterns."""
+    with open(readme) as f:
+        text = f.read()
+    pats: List[str] = []
+    for m in _BACKTICK.finditer(text):
+        token = m.group(1)
+        for frag in re.findall(r"das_[a-z0-9_{},*.=]*", token):
+            # a TRAILING {...} group is a label selector ({phase=...},
+            # {key}, {worker,shard,state}) — strip it; a mid-name group
+            # is alternation (das_tokens_{proposed,...}_total) — expand
+            frag = re.sub(r"\{[^}]*\}$", "", frag)
+            alt = re.search(r"\{([^}=]*)\}", frag)
+            if alt:
+                for piece in alt.group(1).split(","):
+                    pats.append(
+                        frag[:alt.start()] + piece.strip()
+                        + frag[alt.end():]
+                    )
+            elif frag and frag != "das_":  # bare prefix mention
+                pats.append(frag)
+    return sorted(set(pats))
+
+
+def check(src: str, readme: str) -> int:
+    names = registered_names(src)
+    pats = catalog_patterns(readme)
+    if not pats:
+        print(f"check_metrics: no catalog rows found in {readme}",
+              file=sys.stderr)
+        return 1
+    missing = []
+    used: Set[str] = set()
+    for name in sorted(names):
+        hit = None
+        for p in pats:
+            # a globbed registration (f-string stem) needs a glob row
+            # that covers it; fnmatch both directions
+            if fnmatch.fnmatch(name, p) or fnmatch.fnmatch(p, name):
+                hit = p
+                break
+        if hit is None:
+            missing.append(name)
+        else:
+            used.add(hit)
+    stale = [p for p in pats
+             if p not in used and "*" not in p
+             and not any(fnmatch.fnmatch(n, p) for n in names)]
+    rc = 0
+    if missing:
+        rc = 1
+        print(f"check_metrics: {len(missing)} registered metric(s) "
+              f"missing from the README catalog ({readme}):")
+        for n in missing:
+            print(f"  {n}")
+    if stale:
+        rc = 1
+        print(f"check_metrics: {len(stale)} catalog row(s) match no "
+              "registered metric (stale docs):")
+        for p in stale:
+            print(f"  {p}")
+    if rc == 0:
+        print(f"check_metrics: {len(names)} registered das_* name(s) "
+              f"all covered by {len(pats)} catalog pattern(s)")
+    return rc
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--src", default="src")
+    ap.add_argument("--readme", default="README.md")
+    args = ap.parse_args()
+    return check(args.src, args.readme)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,3 +5,4 @@ from . import lock_discipline  # noqa: F401
 from . import clock_discipline  # noqa: F401
 from . import io_discipline  # noqa: F401
 from . import project_invariants  # noqa: F401
+from . import span_coverage  # noqa: F401

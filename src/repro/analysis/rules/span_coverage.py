@@ -1,0 +1,72 @@
+"""DAS006 — span coverage on the round loop.
+
+A ``# das: hot-path`` marker declares a function to be on the per-round
+host path — exactly the code the makespan attribution report
+(``repro.obs.attrib``) decomposes from tracer spans. A marked host
+function that opens no span is a hole in that decomposition: its wall
+time silently lands in whichever parent span encloses the call site (or
+in ``idle_tail`` when none does), and the attribution misassigns it.
+
+DAS006 therefore requires every marker-annotated function to open at
+least one tracer span (any ``*.span("...")`` call, including via nested
+closures — those run on the same host path) or to carry a justified
+``# dascheck: disable=DAS006 -- why`` suppression on its ``def`` line.
+
+Jit-traced marker functions are exempt: their Python body runs at trace
+time only, so a span there would measure compilation, not the round.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..callgraph import HotIndex, hot_index
+from ..core import Finding, Module, Project, Rule, register
+
+
+def _opens_span(fn: ast.AST) -> bool:
+    # nested defs are NOT skipped: closures like serve's `_admit_chunk`
+    # execute on the same host path and their spans count for the
+    # enclosing marked function
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr == "span":
+                return True
+            if isinstance(f, ast.Name) and f.id == "span":
+                return True
+    return False
+
+
+@register
+class SpanCoverageRule(Rule):
+    id = "DAS006"
+    name = "hot-path-without-span"
+    family = "observability"
+    description = (
+        "A `# das: hot-path` function (host-side round loop) opens no "
+        "tracer span, so its wall time is invisible to the makespan "
+        "attribution; open a span or add a justified suppression."
+    )
+
+    def check(self, module: Module, project: Project):
+        idx: HotIndex = hot_index(project)
+        for info in idx.functions(module):
+            if not info.marker or isinstance(info.node, ast.Lambda):
+                continue
+            if idx.is_traced(info):
+                continue  # trace-time body: a span would time compilation
+            if _opens_span(info.node):
+                continue
+            yield Finding(
+                rule=self.id,
+                path=module.rel,
+                line=info.node.lineno,
+                col=info.node.col_offset,
+                message=(
+                    f"hot-path function `{info.qualname}` opens no "
+                    "tracer span — its round-loop host time is invisible "
+                    "to makespan attribution"
+                ),
+                symbol=info.qualname,
+            )

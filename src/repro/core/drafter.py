@@ -639,6 +639,7 @@ class SuffixDrafter:
         tokens: Sequence[int],
         epoch: Optional[int] = None,
         response_len: Optional[int] = None,
+        trace: Optional[str] = None,
     ) -> None:
         """Record one completed rollout.
 
@@ -647,7 +648,9 @@ class SuffixDrafter:
         tracks the window exactly, with no deferred rebuild.
         ``response_len`` (generated tokens, prompt excluded) feeds the
         store's per-prompt length telemetry for ``LengthPolicy`` warm
-        starts and longest-predicted-first admission.
+        starts and longest-predicted-first admission. ``trace``
+        (flight-recorder trace ID) rides the remote publish so the
+        owning shard stamps its ``publish`` event on the same trace.
         """
         ep = self.epoch if epoch is None else int(epoch)
         key = self._key(problem_id)
@@ -660,7 +663,7 @@ class SuffixDrafter:
             # outages: the client outbox resends it once the shard is
             # back (deduped exactly-once shard-side).
             self.remote.publish_rollout(
-                key, toks, ep, response_len=response_len
+                key, toks, ep, response_len=response_len, trace=trace
             )
             if self._remote_down(key):
                 self._fb_apply(key, toks, ep)

@@ -45,6 +45,8 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Any, List, Optional
 
+from repro.obs.flight import new_trace_id
+
 QUEUED = "queued"
 RUNNING = "running"
 FINISHED = "finished"
@@ -92,6 +94,10 @@ class Request:
     # re-admits via prefix re-prefill of prompt + resume_tokens[:-1],
     # head = resume_tokens[-1] — token-identical at T=0.
     resume_tokens: Optional[List[int]] = None
+    # Fleet-unique flight-recorder trace ID (repro.obs.flight): minted
+    # at admission and carried across journal resumes / watchdog
+    # handoffs, so one rollout is one trace fleet-wide.
+    trace: Optional[str] = None
 
     # -- runtime state -----------------------------------------------------
     state: str = QUEUED
@@ -215,6 +221,10 @@ class SlotScheduler:
                 f"request {req.rid}: cannot submit from state "
                 f"{req.state!r}"
             )
+        if req.trace is None:
+            # scheduler-level guarantee: every request entering the pool
+            # carries a fleet-unique trace (re-submits keep theirs)
+            req.trace = new_trace_id()
         heapq.heappush(self._queue, (-self.priority(req), next(self._seq), req))
         self._enqueued.add(id(req))
         self.n_submitted += 1

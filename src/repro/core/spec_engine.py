@@ -73,6 +73,7 @@ from repro.core.length_policy import (
     LengthPolicyConfig,
 )
 from repro.core.scheduler import CANCELLED, EXPIRED, Request, SlotScheduler
+from repro.obs.flight import NULL_FLIGHT
 from repro.core.verify import sample_token, sample_token_rows, verify_block
 from repro.models import model as M
 
@@ -679,6 +680,19 @@ class SpecEngine:
         stats.n_fwd += 1
         stats.n_toks_proposed += int(mask.sum())
 
+        # Flight recorder: lock-step rows are one trace each. Traces
+        # mint whenever a journal needs them for continuity or a
+        # recorder is attached; per-round capture is one batched append
+        # from the accept_emit window (same bar as the journal commit).
+        flt = getattr(self.telemetry, "flight", None) or NULL_FLIGHT
+        rec_flight = flt.enabled
+        traces: Optional[List[str]] = None
+        if rec_flight or journal is not None:
+            traces = [flt.new_trace() for _ in range(B)]
+        if rec_flight:
+            for b in range(B):
+                flt.record(traces[b], "admit", rid=b, slot=b, round=0)
+
         jkeys: Optional[List[str]] = None
         if journal is not None:
             jkeys = [
@@ -689,6 +703,7 @@ class SpecEngine:
                 journal.begin(
                     jkeys[b], prompts[b], problem_id=problem_ids[b],
                     max_new_tokens=int(max_new_arr[b]),
+                    trace=traces[b],
                 )
                 if outputs[b]:  # the sampled head token
                     journal.note(jkeys[b], outputs[b])
@@ -699,7 +714,7 @@ class SpecEngine:
                 bds, cache, key, problem_ids, outputs, active, emitted,
                 max_new_arr, head, rounds_per_row, stats,
                 collect_effective_batch, watchdog=watchdog,
-                journal=journal, jkeys=jkeys,
+                journal=journal, jkeys=jkeys, flt=flt, traces=traces,
             )
         else:
             tel = self.telemetry
@@ -767,6 +782,14 @@ class SpecEngine:
                             self._note_round_obs(
                                 budgets_np, accepted, active, emitted
                             )
+                        if rec_flight:
+                            rows_f = np.nonzero(active)[0]
+                            flt.record_round(
+                                stats.n_rounds,
+                                [traces[b] for b in rows_f],
+                                accepted[rows_f].tolist(),
+                                budgets_np[rows_f].tolist(),
+                            )
                         cand = np.zeros((B, K + 1), np.int32)
                         cand[:, :K] = block[:, 1:]
                         cand[np.arange(B), accepted] = next_tok
@@ -808,9 +831,15 @@ class SpecEngine:
         for b in range(B):
             if outputs[b] and outputs[b][-1] == e.eos_token:
                 outputs[b] = outputs[b][:-1]
+            if rec_flight:
+                flt.record(
+                    traces[b], "finish", rid=b, status="finished",
+                    emitted=len(outputs[b]),
+                )
             self.drafter.observe_rollout(
                 problem_ids[b], list(prompts[b]) + outputs[b], self.epoch,
                 response_len=len(outputs[b]),
+                trace=traces[b] if traces is not None else None,
             )
             self.length_policy.observe(problem_ids[b], len(outputs[b]))
         if journal is not None:
@@ -833,7 +862,8 @@ class SpecEngine:
     def _fused_generate_rounds(
         self, bds, cache, key, problem_ids, outputs, active, emitted,
         max_new_arr, head, rounds_per_row, stats, collect_effective_batch,
-        watchdog=None, journal=None, jkeys=None,
+        watchdog=None, journal=None, jkeys=None, flt=NULL_FLIGHT,
+        traces=None,
     ):
         """Lock-step round loop on the fused device-resident program.
 
@@ -916,6 +946,14 @@ class SpecEngine:
                             stats.effective_batch.append(int(mask.sum()))
                         if tel_obs.enabled:
                             self._note_round_obs(n_prop, acc, mask, emitted)
+                        if flt.enabled:
+                            rows_f = np.nonzero(mask)[0]
+                            flt.record_round(
+                                stats.n_rounds,
+                                [traces[b] for b in rows_f],
+                                acc[rows_f].tolist(),
+                                n_prop[rows_f].tolist(),
+                            )
                         rounds_per_row[mask] += 1
                         tel = np.nonzero(mask & (n_prop > 0))[0]
                         if tel.size:  # per-prompt accept telemetry
@@ -1030,6 +1068,16 @@ class SpecEngine:
         n_slots = max(1, min(int(slots) if slots else len(reqs), len(reqs)))
         sched = SlotScheduler(n_slots, self.length_policy, clock=clock)
         has_deadlines = any(r.deadline_s is not None for r in reqs)
+        # Flight recorder (repro.obs.flight): trace IDs mint up front —
+        # journal begin records carry them even when nobody records
+        # locally, so a LATER process (crash recovery, requeue survivor)
+        # continues the same trace. Event capture itself is guarded by
+        # ``rec_flight`` and rides the post-consume host windows only.
+        flt = getattr(tel_obs, "flight", None) or NULL_FLIGHT
+        rec_flight = flt.enabled
+        for r in reqs:
+            if r.trace is None:
+                r.trace = flt.new_trace()
         if journal is not None:
             for r in reqs:
                 if r.journal_key is None:
@@ -1037,10 +1085,12 @@ class SpecEngine:
                 journal.begin(
                     r.journal_key, r.prompt, problem_id=r.problem_id,
                     max_new_tokens=r.max_new_tokens,
-                    resume=bool(r.resume_tokens),
+                    resume=bool(r.resume_tokens), trace=r.trace,
                 )
         for r in reqs:
             sched.submit(r)
+            if rec_flight:
+                flt.record(r.trace, "queued", rid=r.rid)
         if key is None:
             key = jax.random.key(0)
 
@@ -1099,6 +1149,12 @@ class SpecEngine:
             if journal is not None:
                 journal.finish(req.journal_key, n_emitted=req.emitted)
             finalize_q.append(req)
+            if rec_flight:
+                flt.record(
+                    req.trace, "finish", rid=req.rid, status="finished",
+                    emitted=req.emitted,
+                    rounds=req.finish_round - req.admit_round,
+                )
             if tel_obs.enabled:
                 self._mx["emitted"].inc(req.emitted)
                 tel_obs.emit(
@@ -1108,6 +1164,138 @@ class SpecEngine:
                 )
 
         roots_dirty = True  # row→tree mapping changed since last upload
+
+        def _admit_chunk(Tp: int, sub, admitted: List[Request]) -> None:
+            """One coalesced admission chunk: batched prefill, one
+            vectorized cache-row scatter, per-request bookkeeping.
+
+            The ``prefill`` span covers dispatch → first-token download
+            (the device sync), with the ``cache_commit`` scatter nested
+            — so the attribution report's "prefill" component is real
+            span time, not an inferred residue.
+            """
+            nonlocal cache, key
+            k = len(sub)
+            tp0 = time.perf_counter()
+            with tel_obs.span("prefill") as sp_pf:
+                sp_pf.set(n=k, Tp=Tp)
+                toks = np.zeros((k, Tp), np.int32)
+                mask = np.zeros((k, Tp), bool)
+                for j, (req, ctx) in enumerate(sub):
+                    n_p = len(ctx)
+                    toks[j, Tp - n_p:] = ctx
+                    mask[j, Tp - n_p:] = True
+                last_logits, rows_cache = self._get_prefill(
+                    Tp, pool_len
+                )(self.params, jnp.asarray(toks), jnp.asarray(mask))
+                stats.n_h2d += 2
+                slots_arr = np.array(
+                    [r.slot for r, _ in sub], np.int32
+                )
+                with tel_obs.span("cache_commit"):
+                    cache = copy_rows(cache, rows_cache, slots_arr)
+                stats.n_h2d += 1
+                row_keys = None
+                if e.temperature > 0:  # per-request key stream
+                    row_keys = []
+                    for _ in sub:
+                        key, k0 = jax.random.split(key)
+                        row_keys.append(k0)
+                first_toks = np.asarray(sample_token_rows(  # dascheck: disable=DAS001 -- admission prefill download, off the steady-state round path
+                    last_logits[:, : self.cfg.vocab_size],
+                    temperature=e.temperature,
+                    keys=(jnp.stack(row_keys)
+                          if row_keys is not None else None),
+                ))
+                stats.n_d2h += 1
+            prefill_s = time.perf_counter() - tp0
+            stats.n_fwd += 1
+            stats.n_toks_proposed += int(
+                sum(len(c) for _, c in sub)
+            )
+            for j, (req, _ctx) in enumerate(sub):
+                s = req.slot
+                req.admit_round = round_no
+                rt = req.resume_tokens
+                if rt:
+                    # Prefix re-prefill resume: the head is
+                    # the last salvaged token (at T=0 it IS
+                    # what the prefill's logits argmax to),
+                    # not a fresh sample.
+                    rt = [int(t) for t in rt]
+                    req.resume_tokens = None
+                    req.output = list(rt)
+                    tok = rt[-1]
+                    req.head = tok
+                    self._mx["resumed"].inc(float(len(rt)))
+                    if journal is not None:
+                        # a fresh journal file (recovery
+                        # onto a new path) has none of the
+                        # salvaged prefix yet; re-note the
+                        # missing suffix so ITS recovery is
+                        # self-contained
+                        have = journal.recorded_tokens(
+                            req.journal_key
+                        )
+                        if have < len(rt):
+                            journal.note(
+                                req.journal_key, rt[have:]
+                            )
+                    if rec_flight:
+                        flt.record(
+                            req.trace, "resume", dur=prefill_s / k,
+                            rid=req.rid, slot=s, round=round_no,
+                            salvaged=len(rt),
+                        )
+                    if tel_obs.enabled:
+                        tel_obs.emit(
+                            "resume", rid=req.rid, slot=s,
+                            round=round_no, salvaged=len(rt),
+                        )
+                    if (tok == e.eos_token
+                            or len(rt) >= req.max_new_tokens):
+                        finish(req)  # salvaged tail was done
+                        continue
+                    bds.open(s, req.problem_id, req.prompt)
+                    bds.feed(s, rt)
+                    pids[s] = req.problem_id
+                    head[s] = tok
+                    emitted[s] = len(rt)
+                    max_new_arr[s] = req.max_new_tokens
+                    active[s] = True
+                    admitted.append(req)
+                    continue
+                tok = int(first_toks[j])
+                req.head = tok
+                if tok == e.eos_token or req.max_new_tokens <= 0:
+                    if req.max_new_tokens > 0:
+                        req.output.append(tok)
+                    finish(req)  # freed; outer loop re-admits
+                    continue
+                req.output.append(tok)
+                if journal is not None:
+                    journal.note(req.journal_key, [tok])
+                if req.max_new_tokens <= 1:  # head fills limit
+                    finish(req)
+                    continue
+                bds.open(s, req.problem_id, req.prompt)
+                bds.feed(s, [tok])
+                pids[s] = req.problem_id
+                head[s] = tok
+                emitted[s] = 1
+                max_new_arr[s] = req.max_new_tokens
+                active[s] = True
+                admitted.append(req)
+                if rec_flight:
+                    flt.record(
+                        req.trace, "admit", dur=prefill_s / k,
+                        rid=req.rid, slot=s, round=round_no,
+                    )
+                if tel_obs.enabled:
+                    tel_obs.emit(
+                        "admit", rid=req.rid, slot=s,
+                        round=round_no,
+                    )
 
         def admit() -> None:
             """Fill free slots from the queue with COALESCED prefills.
@@ -1129,153 +1317,52 @@ class SpecEngine:
             exactly where the uninterrupted run had them, so the
             continuation is token-identical at T=0.
             """
-            nonlocal cache, key, state, roots_dirty
+            nonlocal state, roots_dirty
             while True:
                 newly = sched.next_admissions()
                 if not newly:
                     return
-                groups: Dict[int, List[Tuple[Request, List[int]]]] = {}
-                for req in newly:
-                    rt = req.resume_tokens
-                    ctx = (list(req.prompt) + [int(t) for t in rt[:-1]]
-                           if rt else req.prompt)
-                    Tp = _prompt_bucket(len(ctx))
-                    groups.setdefault(Tp, []).append((req, ctx))
-                admitted: List[Request] = []
-                for Tp in sorted(groups):
-                    greqs = groups[Tp]
-                    i0 = 0
-                    while i0 < len(greqs):
-                        k = 1 << ((len(greqs) - i0).bit_length() - 1)
-                        sub = greqs[i0 : i0 + k]
-                        i0 += k
-                        toks = np.zeros((k, Tp), np.int32)
-                        mask = np.zeros((k, Tp), bool)
-                        for j, (req, ctx) in enumerate(sub):
-                            n_p = len(ctx)
-                            toks[j, Tp - n_p:] = ctx
-                            mask[j, Tp - n_p:] = True
-                        last_logits, rows_cache = self._get_prefill(
-                            Tp, pool_len
-                        )(self.params, jnp.asarray(toks), jnp.asarray(mask))
-                        stats.n_h2d += 2
-                        slots_arr = np.array(
-                            [r.slot for r, _ in sub], np.int32
+                with tel_obs.span("admission_coalesce") as sp_adm:
+                    groups: Dict[int, List[Tuple[Request, List[int]]]] = {}
+                    for req in newly:
+                        rt = req.resume_tokens
+                        ctx = (list(req.prompt) + [int(t) for t in rt[:-1]]
+                               if rt else req.prompt)
+                        Tp = _prompt_bucket(len(ctx))
+                        groups.setdefault(Tp, []).append((req, ctx))
+                    admitted: List[Request] = []
+                    for Tp in sorted(groups):
+                        greqs = groups[Tp]
+                        i0 = 0
+                        while i0 < len(greqs):
+                            k = 1 << ((len(greqs) - i0).bit_length() - 1)
+                            _admit_chunk(Tp, greqs[i0 : i0 + k], admitted)
+                            i0 += k
+                    sp_adm.set(n=len(newly), admitted=len(admitted))
+                    if fused and admitted:
+                        kk = len(admitted)
+                        kb = 1 << max(kk - 1, 0).bit_length()  # pow2 ceiling
+                        # padding rows scatter out of range (dropped)
+                        slots_pad = np.full(kb, n_slots, np.int32)
+                        heads_pad = np.zeros(kb, np.int32)
+                        tails_pad = np.full(
+                            (kb, bds.tail_len), -1, np.int32
                         )
-                        cache = copy_rows(cache, rows_cache, slots_arr)
-                        stats.n_h2d += 1
-                        row_keys = None
-                        if e.temperature > 0:  # per-request key stream
-                            row_keys = []
-                            for _ in sub:
-                                key, k0 = jax.random.split(key)
-                                row_keys.append(k0)
-                        first_toks = np.asarray(sample_token_rows(  # dascheck: disable=DAS001 -- admission prefill download, off the steady-state round path
-                            last_logits[:, : self.cfg.vocab_size],
-                            temperature=e.temperature,
-                            keys=(jnp.stack(row_keys)
-                                  if row_keys is not None else None),
-                        ))
-                        stats.n_d2h += 1
-                        stats.n_fwd += 1
-                        stats.n_toks_proposed += int(
-                            sum(len(c) for _, c in sub)
-                        )
-                        for j, (req, _ctx) in enumerate(sub):
-                            s = req.slot
-                            req.admit_round = round_no
-                            rt = req.resume_tokens
-                            if rt:
-                                # Prefix re-prefill resume: the head is
-                                # the last salvaged token (at T=0 it IS
-                                # what the prefill's logits argmax to),
-                                # not a fresh sample.
-                                rt = [int(t) for t in rt]
-                                req.resume_tokens = None
-                                req.output = list(rt)
-                                tok = rt[-1]
-                                req.head = tok
-                                self._mx["resumed"].inc(float(len(rt)))
-                                if journal is not None:
-                                    # a fresh journal file (recovery
-                                    # onto a new path) has none of the
-                                    # salvaged prefix yet; re-note the
-                                    # missing suffix so ITS recovery is
-                                    # self-contained
-                                    have = journal.recorded_tokens(
-                                        req.journal_key
-                                    )
-                                    if have < len(rt):
-                                        journal.note(
-                                            req.journal_key, rt[have:]
-                                        )
-                                if tel_obs.enabled:
-                                    tel_obs.emit(
-                                        "resume", rid=req.rid, slot=s,
-                                        round=round_no, salvaged=len(rt),
-                                    )
-                                if (tok == e.eos_token
-                                        or len(rt) >= req.max_new_tokens):
-                                    finish(req)  # salvaged tail was done
-                                    continue
-                                bds.open(s, req.problem_id, req.prompt)
-                                bds.feed(s, rt)
-                                pids[s] = req.problem_id
-                                head[s] = tok
-                                emitted[s] = len(rt)
-                                max_new_arr[s] = req.max_new_tokens
-                                active[s] = True
-                                admitted.append(req)
-                                continue
-                            tok = int(first_toks[j])
-                            req.head = tok
-                            if tok == e.eos_token or req.max_new_tokens <= 0:
-                                if req.max_new_tokens > 0:
-                                    req.output.append(tok)
-                                finish(req)  # freed; outer loop re-admits
-                                continue
-                            req.output.append(tok)
-                            if journal is not None:
-                                journal.note(req.journal_key, [tok])
-                            if req.max_new_tokens <= 1:  # head fills limit
-                                finish(req)
-                                continue
-                            bds.open(s, req.problem_id, req.prompt)
-                            bds.feed(s, [tok])
-                            pids[s] = req.problem_id
-                            head[s] = tok
-                            emitted[s] = 1
-                            max_new_arr[s] = req.max_new_tokens
-                            active[s] = True
-                            admitted.append(req)
-                            if tel_obs.enabled:
-                                tel_obs.emit(
-                                    "admit", rid=req.rid, slot=s,
-                                    round=round_no,
-                                )
-                if fused and admitted:
-                    kk = len(admitted)
-                    kb = 1 << max(kk - 1, 0).bit_length()  # pow2 ceiling
-                    # padding rows scatter out of range (dropped)
-                    slots_pad = np.full(kb, n_slots, np.int32)
-                    heads_pad = np.zeros(kb, np.int32)
-                    tails_pad = np.full(
-                        (kb, bds.tail_len), -1, np.int32
-                    )
-                    mn_pad = np.ones(kb, np.int32)
-                    em_pad = np.ones(kb, np.int32)
-                    for j, req in enumerate(admitted):
-                        slots_pad[j] = req.slot
-                        heads_pad[j] = req.head
-                        tails_pad[j] = bds.tail_row(req.slot)
-                        mn_pad[j] = req.max_new_tokens
-                        em_pad[j] = emitted[req.slot]  # 1, or salvaged len
-                    state = self._get_admit_state()(
-                        state, slots_pad, heads_pad, tails_pad, mn_pad,
-                        em_pad,
-                    )
-                    stats.n_h2d += 5
-                    roots_dirty = True
+                        mn_pad = np.ones(kb, np.int32)
+                        em_pad = np.ones(kb, np.int32)
+                        for j, req in enumerate(admitted):
+                            slots_pad[j] = req.slot
+                            heads_pad[j] = req.head
+                            tails_pad[j] = bds.tail_row(req.slot)
+                            mn_pad[j] = req.max_new_tokens
+                            em_pad[j] = emitted[req.slot]  # 1, or salvaged len
+                        with tel_obs.span("cache_commit"):
+                            state = self._get_admit_state()(
+                                state, slots_pad, heads_pad, tails_pad,
+                                mn_pad, em_pad,
+                            )
+                        stats.n_h2d += 5
+                        roots_dirty = True
 
         def consume() -> None:
             """Materialize the in-flight round (device sync point) and
@@ -1347,6 +1434,16 @@ class SpecEngine:
                 self.drafter.note_draft_rows(
                     [pids[s] for s in tel], budgets[tel], accepted[tel]
                 )
+            if rec_flight and mask.any():
+                # ONE batched raw append for the whole pool's round
+                # (explodes into per-trace events at drain time): the
+                # per-rollout accept trail costs O(1) on the round loop.
+                rows_f = np.nonzero(mask)[0]
+                flt.record_round(
+                    round_no,
+                    [sched.slots[s].trace for s in rows_f],
+                    accepted[rows_f].tolist(), budgets[rows_f].tolist(),
+                )
             for s in np.nonzero(mask & (n_take > 0))[0]:
                 req = sched.slots[s]
                 take = cand[s, : n_take[s]].tolist()
@@ -1382,6 +1479,11 @@ class SpecEngine:
                     req.journal_key, status=status, n_emitted=req.emitted
                 )
             done_q.append(req)
+            if rec_flight:
+                flt.record(
+                    req.trace, "finish", rid=req.rid, status=status,
+                    emitted=req.emitted,
+                )
             if tel_obs.enabled:
                 tel_obs.emit(
                     "request_done", rid=req.rid, status=status,
@@ -1400,6 +1502,15 @@ class SpecEngine:
             if requeue:
                 sched.submit(req)
             self._preempt_fam.labels(reason).inc()
+            if rec_flight:
+                flt.record(
+                    req.trace, "preempt", rid=req.rid, reason=reason,
+                    emitted=len(req.output), round=round_no,
+                    requeued=requeue,
+                )
+                if requeue:
+                    flt.record(req.trace, "requeue", rid=req.rid,
+                               round=round_no)
             if tel_obs.enabled:
                 tel_obs.emit(
                     "preempt", rid=req.rid, reason=reason,
@@ -1690,10 +1801,15 @@ class SpecEngine:
             self._mx["d2h"].inc(float(stats.n_d2h - d2h0))
 
     def _finalize_request(self, req: Request) -> None:
-        """Observe a finished rollout (drafter window + length history)."""
+        """Observe a finished rollout (drafter window + length history).
+
+        The request's trace ID rides the history publish, so the shard
+        side of the fleet can stamp a ``publish`` flight event onto the
+        same trace the worker recorded the rollout under.
+        """
         self.drafter.observe_rollout(
             req.problem_id, list(req.prompt) + req.output, self.epoch,
-            response_len=len(req.output),
+            response_len=len(req.output), trace=req.trace,
         )
         self.length_policy.observe(req.problem_id, len(req.output))
 

@@ -81,6 +81,9 @@ class JournalSession:
     rounds: int = 0  # round records replayed
     finished: bool = False
     status: str = ""  # finish status ("" while in flight)
+    # Flight-recorder trace ID (repro.obs.flight): carried through
+    # crash→recover→resume so the continuation extends the SAME trace.
+    trace: Optional[str] = None
 
     @property
     def resumable(self) -> bool:
@@ -164,6 +167,7 @@ class RolloutJournal:
         problem_id: Any = None,
         max_new_tokens: int = 0,
         resume: bool = False,
+        trace: Optional[str] = None,
     ) -> None:
         """Open (or re-open) a session.
 
@@ -190,10 +194,16 @@ class RolloutJournal:
         sess.max_new_tokens = int(max_new_tokens)
         sess.finished = False
         sess.status = ""
+        if trace is not None:
+            sess.trace = str(trace)
         rec: Dict[str, Any] = {"k": "b", "s": key, "p": prompt,
                                "mn": int(max_new_tokens)}
         if resume:
             rec["re"] = 1
+        if trace is not None:
+            # optional minor add: old readers skip unknown keys, so a
+            # traced journal stays replayable by pre-flight builds
+            rec["tr"] = str(trace)
         if problem_id is not None:
             rec["pid"] = problem_id if isinstance(
                 problem_id, (int, str)) else str(problem_id)
@@ -254,7 +264,7 @@ class RolloutJournal:
     # sanctioned post-consume write window (DAS005 bans file I/O in every
     # other hot-path function, so journal appends can ONLY flow through
     # here).
-    def commit(self) -> int:
+    def commit(self) -> int:  # dascheck: disable=DAS006 -- commit latency is already first-class telemetry (das_journal_appends_total / das_journal_fsync_seconds); a span would double-bill inside the consume window
         """Write all buffered records as one unbuffered append
         (crash-safe against SIGKILL the moment ``write`` returns, the
         handle has no userspace buffer); fsync every
@@ -282,7 +292,7 @@ class RolloutJournal:
         return n
 
     # das: hot-path — feeds commit(); lazy open amortized to once per file
-    def _ensure_open(self):
+    def _ensure_open(self):  # dascheck: disable=DAS006 -- once-per-file lazy open; steady-state rounds never enter the branch, so there is no recurring time to attribute
         if self._fh is None:
             fresh = not (
                 os.path.exists(self.path)
@@ -296,7 +306,7 @@ class RolloutJournal:
         return self._fh
 
     # das: hot-path — called from commit(); batched by fsync_every
-    def _fsync(self) -> None:
+    def _fsync(self) -> None:  # dascheck: disable=DAS006 -- exported as das_journal_fsync_seconds below; a span would duplicate that histogram
         t0 = time.perf_counter()
         os.fsync(self._fh.fileno())  # dascheck: disable=DAS005 -- the batched fsync the fsync_every knob exists to amortize
         self._unsynced = 0
@@ -427,6 +437,8 @@ class RolloutJournal:
                 sess.max_new_tokens = int(rec.get("mn", 0))
                 sess.finished = False
                 sess.status = ""
+                if rec.get("tr") is not None:
+                    sess.trace = str(rec["tr"])
             elif kind == "r":
                 sess.tokens.extend(int(t) for t in rec.get("t", []))
                 sess.rounds += 1
@@ -478,6 +490,8 @@ def resume_requests(requests, sessions: Dict[str, JournalSession]):
         if sess is None:
             to_serve.append(req)
             continue
+        if sess.trace is not None and getattr(req, "trace", None) is None:
+            req.trace = sess.trace  # continue the dead run's trace
         if sess.finished:
             req.output = list(sess.tokens)
             req.emitted = len(req.output)

@@ -36,6 +36,7 @@ class RolloutWatchdog:
         *,
         clock: Optional[Clock] = None,
         on_check: Optional[Callable[["RolloutWatchdog"], None]] = None,
+        flight=None,
     ) -> None:
         self.deadline_s = float(deadline_s)
         self.clock = clock or SystemClock()
@@ -43,6 +44,10 @@ class RolloutWatchdog:
         # deadline comparison (a FaultPlan advances a virtual clock
         # here to stall a chosen round deterministically).
         self.on_check = on_check
+        # Optional flight recorder: a tripped deadline stamps a
+        # ``stall`` event (no trace — the requeue path attributes the
+        # stall to each salvaged trace with its ``handoff``).
+        self.flight = flight
         self._last: Optional[float] = None
         self.checks = 0
         self.stalls = 0
@@ -68,6 +73,9 @@ class RolloutWatchdog:
         idle = self.clock.now() - self._last
         if idle > self.deadline_s:
             self.stalls += 1
+            if self.flight is not None and self.flight.enabled:
+                self.flight.record(None, "stall", what=what,
+                                   idle_s=float(idle))
             raise StallError(
                 f"{what} made no progress for {idle:.3f}s "
                 f"(deadline {self.deadline_s:.3f}s)"

@@ -285,12 +285,18 @@ class HistoryClient:
     def publish_rollout(
         self, key, tokens: Sequence[int], epoch: int,
         response_len: Optional[int] = None,
+        trace: Optional[str] = None,
     ) -> None:
         entry = {
             "kind": "roll", "key": key,
             "tokens": [int(t) for t in tokens], "epoch": int(epoch),
             "rlen": None if response_len is None else int(response_len),
         }
+        if trace is not None:
+            # optional flight-recorder trace context: version-gated by
+            # dict tolerance — old shards ignore unknown entry keys, old
+            # clients never set it, so mixed fleets keep parsing
+            entry["trace"] = str(trace)
         with self._cv:
             self._pending[self.shard_of(key)].append(entry)
             self._cv.notify_all()

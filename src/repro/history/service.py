@@ -201,6 +201,10 @@ class HistoryShard:
         self._tel_seq = 0
         self._tel: Deque[Dict[str, Any]] = collections.deque()
         self.tel_log_cap = int(tel_log_cap)
+        # Optional flight recorder (repro.obs.flight): publish frames
+        # carrying a trace field stamp a shard-side ``publish`` event
+        # onto the rollout's fleet-wide trace.
+        self.flight = None
         # session -> last applied publish seq (exactly-once over
         # at-least-once retries; persisted so restarts stay deduped)
         self._last_pub: Dict[str, int] = {}
@@ -241,9 +245,21 @@ class HistoryShard:
             )
             self._dirty.add(key)
             self.stats["rollouts"] += 1
+            # Optional trace field (flight recorder): absent from
+            # old-schema frames — ``r.get`` keeps them parsing.
+            tr = r.get("trace")
+            if tr is not None:
+                self.stats["traced_rollouts"] += 1
+                if self.flight is not None and self.flight.enabled:
+                    self.flight.record(
+                        str(tr), "publish", origin=origin, key=str(key),
+                        tokens=len(r["tokens"]),
+                    )
             if rlen is not None:
-                self._tel_push({"origin": origin, "key": key,
-                                "len": int(rlen)})
+                ent = {"origin": origin, "key": key, "len": int(rlen)}
+                if tr is not None:
+                    ent["trace"] = str(tr)  # sync frames carry it back
+                self._tel_push(ent)
         for d in drafts:
             self.store.record_draft(d["key"], d["drafted"], d["accepted"])
             self._tel_push({

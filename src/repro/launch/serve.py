@@ -62,18 +62,39 @@ def _setup_logging() -> None:
 
 def _make_telemetry(args, worker: int = 0):
     """One (Telemetry, MetricsServer) pair per worker when
-    ``--metrics-port`` is set; the NULL no-op telemetry otherwise."""
+    ``--metrics-port`` is set; the NULL no-op telemetry otherwise.
+    ``--trace-out`` forces a real telemetry (the flight recorder and
+    span tracer feed the Perfetto export) even with metrics off."""
     from repro import obs
 
-    if args.metrics_port < 0:
+    trace_out = getattr(args, "trace_out", "")
+    if args.metrics_port < 0 and not trace_out:
         return obs.NULL, None
     tel = obs.Telemetry()
-    server = obs.MetricsServer(
-        tel,
-        port=(args.metrics_port + worker if args.metrics_port else 0),
-    ).start()
-    log.info("worker %d metrics at %s/metrics", worker, server.url)
+    if trace_out:
+        tel.attach_flight(worker=f"w{worker}")
+    server = None
+    if args.metrics_port >= 0:
+        server = obs.MetricsServer(
+            tel,
+            port=(args.metrics_port + worker if args.metrics_port else 0),
+        ).start()
+        log.info("worker %d metrics at %s/metrics", worker, server.url)
     return tel, server
+
+
+def _export_trace(args, tels, names=None) -> None:
+    """Write the combined Perfetto/Chrome trace (``--trace-out``): one
+    process track per worker, flow arrows across handoffs/resumes."""
+    if not getattr(args, "trace_out", ""):
+        return
+    from repro import obs
+
+    doc = obs.export_trace(args.trace_out, tels, names=names)
+    log.info(
+        "wrote trace: %d event(s) -> %s (open in ui.perfetto.dev)",
+        len(doc.get("traceEvents", ())), args.trace_out,
+    )
 
 
 def main() -> None:
@@ -142,6 +163,10 @@ def main() -> None:
     ap.add_argument("--log-every", type=int, default=1,
                     help="log round-timing lines every N rounds "
                          "(0 silences them; events still recorded)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Perfetto/Chrome trace-event JSON of "
+                         "the run (spans + per-rollout flight events, "
+                         "one track per worker; open in ui.perfetto.dev)")
     args = ap.parse_args()
     if args.save_history and not args.history_dir:
         ap.error("--save-history requires --history-dir")
@@ -240,6 +265,7 @@ def main() -> None:
         if drain is not None:
             drain.uninstall()
         _persist_history()
+        _export_trace(args, [tel])
         if metrics_server is not None:
             metrics_server.stop()
 
@@ -377,7 +403,9 @@ def _serve_with_service(args, cfg, params) -> None:
         if args.watchdog_deadline > 0:
             from repro.fault.watchdog import RolloutWatchdog
 
-            watchdogs.append(RolloutWatchdog(args.watchdog_deadline))
+            watchdogs.append(RolloutWatchdog(
+                args.watchdog_deadline, flight=tels[w].flight
+            ))
         else:
             watchdogs.append(None)
     log.info(
@@ -431,6 +459,8 @@ def _serve_with_service(args, cfg, params) -> None:
         for c in clients:
             c.close()
         svc.stop()
+        _export_trace(args, tels,
+                      names=[f"w{w}" for w in range(args.workers)])
         for srv in metric_servers:
             if srv is not None:
                 srv.stop()

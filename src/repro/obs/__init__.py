@@ -27,6 +27,14 @@ import threading
 from typing import Optional
 
 from .events import EventLog, NullEventLog
+from .flight import (
+    EVENT_KINDS,
+    NULL_FLIGHT,
+    FlightRecorder,
+    NullFlightRecorder,
+    merge_events,
+    new_trace_id,
+)
 from .export import (
     parse_prometheus,
     read_jsonl,
@@ -67,6 +75,18 @@ __all__ = [
     "NullTracer",
     "EventLog",
     "NullEventLog",
+    "FlightRecorder",
+    "NullFlightRecorder",
+    "NULL_FLIGHT",
+    "EVENT_KINDS",
+    "new_trace_id",
+    "merge_events",
+    "attribute",
+    "attribute_journals",
+    "render_report",
+    "export_trace",
+    "to_chrome_trace",
+    "validate_chrome_trace",
     "MetricsServer",
     "to_prometheus",
     "parse_prometheus",
@@ -78,6 +98,31 @@ __all__ = [
     "TOKEN_BUCKETS",
 ]
 
+# attrib/perfetto re-exports resolve lazily (PEP 562): both modules are
+# also `python -m` CLIs, and an eager import here would double-import
+# them under runpy (RuntimeWarning on every CLI invocation).
+_LAZY_EXPORTS = {
+    "attribute": "attrib",
+    "attribute_journals": "attrib",
+    "render_report": "attrib",
+    "export_trace": "perfetto",
+    "to_chrome_trace": "perfetto",
+    "validate_chrome_trace": "perfetto",
+}
+
+
+def __getattr__(name: str):
+    mod = _LAZY_EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}"
+        )
+    import importlib
+
+    val = getattr(importlib.import_module(f".{mod}", __name__), name)
+    globals()[name] = val
+    return val
+
 
 class Telemetry:
     """Live telemetry: real registry, tracer, and event log."""
@@ -88,6 +133,9 @@ class Telemetry:
         self.registry = MetricsRegistry()
         self.tracer = Tracer(self.registry, max_spans=max_spans)
         self.events = EventLog(self.registry, cap=event_cap)
+        # Per-rollout flight recorder (repro.obs.flight): NULL_FLIGHT
+        # until attach_flight() names this process's worker track.
+        self.flight = NULL_FLIGHT
         # hot-path binding: skip the facade method hop per span
         self.span = self.tracer.span
 
@@ -123,12 +171,26 @@ class Telemetry:
 
         return sink
 
+    def attach_flight(self, worker: str = "w0", shard: Optional[str] = None,
+                      cap: int = 65536) -> FlightRecorder:
+        """Enable per-rollout flight recording for this telemetry
+        (idempotent per worker tag); returns the recorder."""
+        fr = self.flight
+        if fr.enabled and fr.worker == worker and fr.shard == shard:
+            return fr  # type: ignore[return-value]
+        self.flight = FlightRecorder(
+            worker=worker, shard=shard, cap=cap, registry=self.registry
+        )
+        return self.flight
+
     # exports ---------------------------------------------------------
     def prometheus(self) -> str:
         return to_prometheus(self.registry)
 
-    def snapshot(self, spans: int = 0, events: int = 0) -> dict:
-        return snapshot_dict(self, spans=spans, events=events)
+    def snapshot(self, spans: int = 0, events: int = 0,
+                 flight: int = 0) -> dict:
+        return snapshot_dict(self, spans=spans, events=events,
+                             flight=flight)
 
     def write_jsonl(self, path: str, **kw) -> dict:
         return write_jsonl_snapshot(self, path, **kw)
@@ -143,6 +205,7 @@ class NullTelemetry:
         self.registry = NullRegistry()
         self.tracer = NullTracer()
         self.events = NullEventLog()
+        self.flight = NULL_FLIGHT
         self.span = self.tracer.span
 
     def counter(self, name: str, help: str = ""):
@@ -163,10 +226,15 @@ class NullTelemetry:
     def mirror_sink(self, name: str, help: str = "", label: str = "key"):
         return None
 
+    def attach_flight(self, worker: str = "w0", shard=None,
+                      cap: int = 65536):
+        return NULL_FLIGHT
+
     def prometheus(self) -> str:
         return ""
 
-    def snapshot(self, spans: int = 0, events: int = 0) -> dict:
+    def snapshot(self, spans: int = 0, events: int = 0,
+                 flight: int = 0) -> dict:
         return {"ts": 0.0, "metrics": self.registry.snapshot()}
 
     def write_jsonl(self, path: str, **kw) -> dict:

@@ -149,8 +149,15 @@ def _split_labels(body: str) -> List[str]:
     return parts
 
 
-def snapshot_dict(telemetry, spans: int = 0, events: int = 0) -> dict:
-    """One JSON-able snapshot of a :class:`~repro.obs.Telemetry`."""
+def snapshot_dict(telemetry, spans: int = 0, events: int = 0,
+                  flight: int = 0) -> dict:
+    """One JSON-able snapshot of a :class:`~repro.obs.Telemetry`.
+
+    ``flight`` bounds how many flight-recorder lifecycle events ride
+    along (most-recent-first truncation) — ``repro.obs.attrib
+    --snapshot`` consumes them, plus the recorder's perf↔wall anchor
+    so spans and flight events stay alignable offline.
+    """
     snap = {
         "ts": time.time(),  # dascheck: disable=DAS201 -- wall-clock snapshot timestamp, not a duration
         "metrics": telemetry.registry.snapshot(),
@@ -159,13 +166,20 @@ def snapshot_dict(telemetry, spans: int = 0, events: int = 0) -> dict:
         snap["spans"] = [s.to_dict() for s in telemetry.tracer.recent(spans)]
     if events:
         snap["events"] = telemetry.events.recent(events)
+    fr = getattr(telemetry, "flight", None)
+    if flight and fr is not None and fr.enabled:
+        snap["flight"] = fr.events()[-flight:]
+        snap["flight_worker"] = fr.worker
+        snap["perf_offset"] = fr.perf_offset
     return snap
 
 
 def write_jsonl_snapshot(telemetry, path: str, spans: int = 0,
-                         events: int = 0, extra: Optional[dict] = None) -> dict:
+                         events: int = 0, flight: int = 0,
+                         extra: Optional[dict] = None) -> dict:
     """Append one snapshot line to ``path``; returns the snapshot."""
-    snap = snapshot_dict(telemetry, spans=spans, events=events)
+    snap = snapshot_dict(telemetry, spans=spans, events=events,
+                         flight=flight)
     if extra:
         snap.update(extra)
     with open(path, "a") as f:

@@ -353,6 +353,27 @@ class MultiWorkerRollout:
                 v = survivors[w % len(survivors)]
                 queue.append((v, idxs, wkey, salvage))
                 self.stats["requeued_problems"] += len(idxs)
+                flt = getattr(self.telemetry, "flight", None)
+                if flt is not None and flt.enabled:
+                    # Trace handoff: ONE ``handoff`` event per salvaged
+                    # in-flight trace — the survivor's resume continues
+                    # the dead worker's trace, and the Perfetto flow
+                    # arrow crosses worker tracks exactly here.
+                    traced = [
+                        s.trace for s in (salvage or {}).values()
+                        if s.trace is not None and not s.finished
+                    ]
+                    for tr in traced:
+                        flt.record(
+                            tr, "handoff", from_worker=w, to_worker=v,
+                            error=type(exc).__name__,
+                        )
+                    if not traced:  # never silently absent
+                        flt.record(
+                            None, "handoff", from_worker=w, to_worker=v,
+                            n_problems=len(idxs),
+                            error=type(exc).__name__,
+                        )
                 self.telemetry.emit(
                     "watchdog_requeue", worker=w, to_worker=v,
                     n_problems=len(idxs), error=str(exc),

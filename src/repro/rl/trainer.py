@@ -87,6 +87,11 @@ class TrainerConfig:
     journal_dir: str = ""
     graceful_drain: bool = True
     drain_deadline_s: float = 30.0
+    # Flight recorder: per-rollout lifecycle tracing (repro.obs.flight)
+    # on the trainer's telemetry — queue/admit/round/handoff/finish
+    # events feed the makespan attribution report and Perfetto export.
+    # Needs an enabled telemetry to record (NULL stays a no-op).
+    flight_recorder: bool = False
 
 
 class Trainer:
@@ -106,6 +111,12 @@ class Trainer:
         self.telemetry = (
             telemetry if telemetry is not None else obs.get_telemetry()
         )
+        if tcfg.flight_recorder and self.telemetry.enabled:
+            # One recorder for the whole (in-process) fleet: rollout
+            # engines share this telemetry, so their events interleave
+            # on one track; cross-worker moves stay visible through the
+            # handoff events' from/to worker fields.
+            self.telemetry.attach_flight(worker="trainer")
         key = jax.random.key(tcfg.seed)
         if params is None:
             ptree = M.init_params(cfg, key)
@@ -230,7 +241,10 @@ class Trainer:
             workers = [
                 RolloutWorker(
                     e, self.task, tcfg.group_size,
-                    watchdog=RolloutWatchdog(tcfg.watchdog_deadline_s),
+                    watchdog=RolloutWatchdog(
+                        tcfg.watchdog_deadline_s,
+                        flight=self.telemetry.flight,
+                    ),
                     journal=self._worker_journal(w),
                 )
                 for w, e in enumerate(self.engines)
